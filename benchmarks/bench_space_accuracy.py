@@ -1,0 +1,40 @@
+"""Fig. 10-13 — accuracy (F1 and F0.5) versus index space, GB-KMV vs
+LSH-E. GB-KMV varies the slot budget; LSH-E varies the MinHash count."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    evaluate, gbkmv_engine, load_dataset, lshe_engine, queries_for, write_csv)
+
+DATASETS = ("NETFLIX", "DELIC", "ENRON", "WDC")
+
+
+def run(quick: bool = True):
+    rows = []
+    scale = 0.12 if quick else 0.5
+    nq = 25 if quick else 100
+    for ds in DATASETS:
+        recs, exact_index, total = load_dataset(ds, scale)
+        queries = queries_for(recs, nq)
+        for frac in (0.025, 0.05, 0.1, 0.2):
+            fn, nbytes = gbkmv_engine(recs, int(total * frac))
+            res = evaluate(fn, exact_index, queries, 0.5)
+            res05 = evaluate(fn, exact_index, queries, 0.5, alpha=0.5)
+            rows.append({"dataset": ds, "engine": "GB-KMV",
+                         "space_frac": round(nbytes / (total * 4), 4),
+                         "f1": round(res["f"], 4),
+                         "f05": round(res05["f"], 4),
+                         "precision": round(res["precision"], 4),
+                         "recall": round(res["recall"], 4)})
+        for k in ((32, 64, 128) if quick else (32, 64, 128, 256)):
+            fn, nbytes = lshe_engine(recs, num_hashes=k)
+            res = evaluate(fn, exact_index, queries, 0.5)
+            res05 = evaluate(fn, exact_index, queries, 0.5, alpha=0.5)
+            rows.append({"dataset": ds, "engine": f"LSH-E(k={k})",
+                         "space_frac": round(nbytes / (total * 4), 4),
+                         "f1": round(res["f"], 4),
+                         "f05": round(res05["f"], 4),
+                         "precision": round(res["precision"], 4),
+                         "recall": round(res["recall"], 4)})
+    write_csv("fig10_13_space_accuracy.csv", rows)
+    return rows

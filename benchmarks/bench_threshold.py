@@ -1,0 +1,26 @@
+"""Fig. 15 — F1 versus containment threshold t* (NETFLIX & COD)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    evaluate, gbkmv_engine, load_dataset, lshe_engine, queries_for, write_csv)
+
+
+def run(quick: bool = True):
+    rows = []
+    scale = 0.12 if quick else 0.5
+    nq = 25 if quick else 100
+    for ds in ("NETFLIX", "COD"):
+        recs, exact_index, total = load_dataset(ds, scale)
+        queries = queries_for(recs, nq)
+        gb, _ = gbkmv_engine(recs, int(total * 0.1))
+        le, _ = lshe_engine(recs, num_hashes=128 if quick else 256)
+        for t in (0.5, 0.6, 0.7, 0.8, 0.9):
+            for name, fn in (("GB-KMV", gb), ("LSH-E", le)):
+                res = evaluate(fn, exact_index, queries, t)
+                rows.append({"dataset": ds, "engine": name, "threshold": t,
+                             "f1": round(res["f"], 4),
+                             "precision": round(res["precision"], 4),
+                             "recall": round(res["recall"], 4)})
+    write_csv("fig15_threshold.csv", rows)
+    return rows

@@ -1,0 +1,104 @@
+"""Shared benchmark harness: dataset setup, engine adapters, CSV output.
+
+Every bench_*.py module exposes ``run(quick: bool) -> list[dict]`` and
+writes a CSV under reports/bench/. ``benchmarks.run`` orchestrates.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+
+from repro.core import estimators
+from repro.core.exact import build_inverted, exact_search
+from repro.core.gbkmv import build_gbkmv
+from repro.core.hashing import hash_u32_np
+from repro.core.kmv import build_kmv
+from repro.core.lshe import build_lshe, query_lshe
+from repro.core.search import f_score, precision_recall
+from repro.data import datasets, synth
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "bench")
+
+
+def write_csv(name: str, rows: list[dict]):
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    path = os.path.join(REPORT_DIR, name)
+    if not rows:
+        return path
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def load_dataset(name: str, scale: float):
+    recs = datasets.load(name, scale=scale)
+    return recs, build_inverted(recs), sum(len(r) for r in recs)
+
+
+def queries_for(recs, n, seed=0):
+    return synth.make_query_workload(recs, n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# engine adapters: search(q_ids, threshold) -> candidate id array
+# ---------------------------------------------------------------------------
+
+def gbkmv_engine(recs, budget, r="auto", seed=0):
+    index = build_gbkmv(recs, budget=budget, r=r, seed=seed)
+
+    def search(q_ids, threshold):
+        from repro.core.gbkmv import search as _s
+        return _s(index, q_ids, threshold)
+
+    return search, index.nbytes()
+
+
+def kmv_engine(recs, budget, seed=0):
+    """Plain KMV (Theorem 1 equal allocation, Eq. 8-10 pair estimator)."""
+    sk = build_kmv(recs, budget=budget, seed=seed)
+    k = sk.capacity
+
+    def search(q_ids, threshold):
+        h = np.sort(hash_u32_np(np.asarray(q_ids), seed=seed))[:k]
+        import jax.numpy as jnp
+        qv = jnp.asarray(np.pad(h, (0, k - len(h)),
+                                constant_values=np.uint32(0xFFFFFFFF)))
+        d_hat, _, _ = estimators.kmv_pair_estimate(
+            qv, jnp.int32(len(h)), jnp.asarray(sk.values), jnp.asarray(sk.lengths))
+        scores = np.asarray(d_hat) / max(len(q_ids), 1)
+        return np.nonzero(scores >= threshold)[0]
+
+    return search, sk.nbytes()
+
+
+def lshe_engine(recs, num_hashes=256, num_partitions=32, seed=0):
+    index = build_lshe(recs, num_hashes=num_hashes,
+                       num_partitions=num_partitions, seed=seed)
+
+    def search(q_ids, threshold):
+        return query_lshe(index, q_ids, threshold, seed=seed)
+
+    return search, index.nbytes()
+
+
+def evaluate(search_fn, exact_index, queries, threshold, alpha=1.0):
+    """Mean F_α / precision / recall + per-query latency of an engine."""
+    fs, ps, rs = [], [], []
+    t0 = time.time()
+    for q in queries:
+        truth = exact_search(exact_index, q, threshold)
+        got = search_fn(q, threshold)
+        fs.append(f_score(truth, got, alpha=alpha))
+        p, r = precision_recall(truth, got)
+        ps.append(p)
+        rs.append(r)
+    dt = (time.time() - t0) / max(len(queries), 1)
+    return {"f": float(np.mean(fs)), "f_min": float(np.min(fs)),
+            "f_max": float(np.max(fs)), "precision": float(np.mean(ps)),
+            "recall": float(np.mean(rs)), "query_s": dt}

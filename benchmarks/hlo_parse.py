@@ -1,0 +1,367 @@
+"""Optimized-HLO parser for roofline reconstruction.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` (while loop) body is costed once regardless of trip count
+(verified empirically; see EXPERIMENTS.md §Roofline methodology). This
+parser rebuilds true per-step totals:
+
+  1. split the module into computations,
+  2. read each while loop's trip count from its condition computation
+     (``compare(%iter, %constant(K)), direction=LT``),
+  3. propagate call multiplicities entry→leaves (while bodies ×trip,
+     fusions/calls ×1 per call site),
+  4. weight per-computation dot FLOPs and collective bytes by multiplicity.
+
+Works on the SPMD-partitioned module, so all numbers are per-device.
+"""
+
+from __future__ import annotations
+
+import gzip
+import re
+from collections import defaultdict
+
+_DT = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute", "collective-broadcast")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DT:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DT[dt]
+    return total
+
+
+def _result_dims(rhs: str):
+    """(dtype, dims list) of the op result (first shape on the rhs)."""
+    m = _SHAPE_RE.search(rhs)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def split_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and not line.startswith("  "):
+            cur = hdr.group(2)
+            comps[cur] = []
+            if hdr.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and line.strip():
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _symbols(lines):
+    sym = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            sym[m.group(1)] = m.group(2)
+    return sym
+
+
+def _trip_count(cond_lines) -> int:
+    """Trip count from a scan condition: compare(LT) against a constant."""
+    sym = _symbols(cond_lines)
+    for line in cond_lines:
+        m = re.search(r"compare\(%([\w.\-]+),\s*%([\w.\-]+)\).*direction=LT",
+                      line)
+        if m:
+            rhs_def = sym.get(m.group(2), "")
+            c = re.search(r"constant\((\d+)\)", rhs_def)
+            if c:
+                return int(c.group(1))
+    # Fallback: largest scalar integer constant in the condition.
+    best = 1
+    for line in cond_lines:
+        c = re.search(r"constant\((\d+)\)", line)
+        if c:
+            best = max(best, int(c.group(1)))
+    return best
+
+
+def call_multiplicities(comps, entry):
+    """(computation -> times executed per step, fusion-internal comps)."""
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    internal: set[str] = set()     # fusion bodies / reducers: no HBM traffic
+    for name, lines in comps.items():
+        for line in lines:
+            wb = (re.search(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", line)
+                  or re.search(r"body=%?([\w.\-]+),\s*condition=%?([\w.\-]+)",
+                               line))
+            if wb:
+                a, b = wb.group(1), wb.group(2)
+                cond, body = (a, b) if "condition=%" + a in line or \
+                    f"condition={a}" in line else (b, a)
+                trip = _trip_count(comps.get(cond, []))
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip + 1))
+                continue
+            for pat in (r"calls=%?([\w.\-]+)", r"to_apply=%?([\w.\-]+)"):
+                for callee in re.findall(pat, line):
+                    edges[name].append((callee, 1))
+                    internal.add(callee)
+
+    # Callees are defined before callers in HLO text, so one pass over
+    # names in reverse definition order visits every caller before its
+    # callees (the call graph is a DAG).
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    for name in list(comps.keys())[::-1]:
+        w = mult.get(name, 0.0)
+        if w == 0.0:
+            continue
+        for callee, f in edges.get(name, []):
+            mult[callee] += w * f
+    return dict(mult), internal
+
+
+def dot_flops(comps, mult) -> float:
+    """Σ over dots: 2 · prod(result) · prod(contracting dims), ×mult."""
+    total = 0.0
+    for name, lines in comps.items():
+        w = mult.get(name, 0.0)
+        if w == 0.0:
+            continue
+        sym = _symbols(lines)
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m or " dot(" not in m.group(2):
+                continue
+            rhs = m.group(2)
+            _, rdims = _result_dims(rhs)
+            ops = re.search(r"dot\(%([\w.\-]+)", rhs)
+            kc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            if not ops or not kc:
+                continue
+            lhs_def = sym.get(ops.group(1), "")
+            _, ldims = _result_dims(lhs_def)
+            k = 1
+            for ci in kc.group(1).split(","):
+                if ci and int(ci) < len(ldims):
+                    k *= ldims[int(ci)]
+            n = 1
+            for d in rdims:
+                n *= d
+            total += w * 2.0 * n * k
+    return total
+
+
+def collective_bytes_weighted(comps, mult) -> dict:
+    out = {k: 0.0 for k in _COLL}
+    out["count_static"] = 0
+    out["count_dynamic"] = 0.0
+    for name, lines in comps.items():
+        w = mult.get(name, 0.0)
+        if w == 0.0:
+            continue
+        for line in lines:
+            m = re.search(r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))"
+                          r"\s+([\w-]+)\(", line)
+            if not m:
+                continue
+            op = m.group(2)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLL and not op.endswith("-done"):
+                b = _shape_bytes(m.group(1))
+                out[base] += w * b
+                out["count_static"] += 1
+                out["count_dynamic"] += w
+    out["total"] = sum(out[k] for k in _COLL)
+    return out
+
+
+# Ops that do not materialize HBM traffic (or whose traffic is accounted
+# elsewhere: while/call bodies count their own internals; loop-carry
+# copies are elided by TPU buffer aliasing).
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "opt-barrier", "partition-id", "replica-id", "iota", "copy",
+    "copy-start", "copy-done",
+}
+
+
+_OP_RE = re.compile(r"^((?:\([^)]*\)|\S+))\s+([\w-]+)\((.*)$")
+
+
+def _parse_def(rhs: str):
+    """RHS of '%x = ...' → (result_bytes, opname, operands, rest) or None."""
+    m = _OP_RE.match(rhs)
+    if not m:
+        return None
+    shape_part, opname, rest = m.group(1), m.group(2), m.group(3)
+    operands = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+    return _shape_bytes(shape_part), opname, operands, rest
+
+
+# Unary ops that neither move nor combine data — resolved through when
+# tracking who really consumes/produces a buffer inside a fusion.
+_PASS_THROUGH = {"convert", "bitcast", "reshape", "copy", "transpose"}
+
+
+def _fusion_io_bytes(comp_lines) -> tuple[dict, float | None]:
+    """Effective HBM traffic of a fused computation's boundary.
+
+    Returns (param_idx → effective read bytes, effective write bytes or
+    None for "use the call-site result shape"). A parameter consumed only
+    by dynamic-slice ops — possibly through convert/bitcast chains —
+    reads just the slices (the loop-carry KV-cache pattern); a ROOT that
+    resolves to a dynamic-update-slice writes just the update (in-place
+    on TPU; CPU XLA's full-buffer f32 round-trip is a backend artifact).
+    """
+    defs = {}
+    param_idx = {}
+    uses = defaultdict(list)
+    root = None
+    for line in comp_lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        p = _parse_def(m.group(2))
+        if p is None:
+            continue
+        name = m.group(1)
+        defs[name] = p
+        if p[1] == "parameter":
+            pidx = re.search(r"parameter\((\d+)\)", m.group(2))
+            if pidx:
+                param_idx[name] = int(pidx.group(1))
+        for pos, a in enumerate(p[2]):
+            uses[a].append((name, p[1], pos))
+        if line.strip().startswith("ROOT"):
+            root = name
+
+    def real_consumers(name, depth=0):
+        """(opname, consumer def, operand position) skipping pass-through."""
+        out = []
+        for cname, cop, pos in uses.get(name, []):
+            if cop in _PASS_THROUGH and depth < 8:
+                out.extend(real_consumers(cname, depth + 1))
+            else:
+                out.append((cop, defs[cname], pos))
+        return out
+
+    def resolve_producer(name, depth=0):
+        while depth < 8 and name in defs and defs[name][1] in _PASS_THROUGH \
+                and defs[name][2]:
+            name = defs[name][2][0]
+            depth += 1
+        return name
+
+    eff_params = {}
+    for pname, idx in param_idx.items():
+        full = defs[pname][0]
+        u = real_consumers(pname)
+        if u and all(op == "dynamic-slice" and pos == 0 for op, _, pos in u):
+            eff_params[idx] = sum(d[0] for _, d, _ in u)
+        elif u and all(op == "dynamic-update-slice" and pos == 0
+                       for op, _, pos in u):
+            # In-place update target: reads nothing beyond the update.
+            eff_params[idx] = 0
+        else:
+            eff_params[idx] = full
+
+    eff_write = None
+    if root:
+        rname = resolve_producer(root)
+        if rname in defs and defs[rname][1] == "dynamic-update-slice":
+            ops = defs[rname][2]
+            upd = resolve_producer(ops[1]) if len(ops) > 1 else None
+            if upd in defs:
+                eff_write = float(defs[upd][0])
+    return eff_params, eff_write
+
+
+def bytes_accessed_weighted(comps, mult, internal) -> float:
+    """Σ over materialized ops of (result + operand bytes) × multiplicity.
+
+    Fusion-body computations are skipped (their internals never touch
+    HBM); the ``fusion(...)`` op at the call site carries the real
+    traffic. This mirrors XLA's own per-op bytes-accessed convention but
+    re-weighted by while-loop trip counts.
+    """
+    total = 0.0
+    fusion_io_cache: dict[str, tuple] = {}
+    for name, lines in comps.items():
+        w = mult.get(name, 0.0)
+        if w == 0.0 or name in internal:
+            continue
+        sym = {}
+        parsed = []
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            p = _parse_def(m.group(2))
+            if p is None:
+                continue
+            sym[m.group(1)] = p[0]              # name → result bytes
+            parsed.append(p)
+        for res_bytes, opname, operands, rest in parsed:
+            if opname in _NO_TRAFFIC:
+                continue
+            if opname == "dynamic-update-slice":
+                # In-place on TPU: traffic = write + read of the update
+                # slice (operand 1), not the whole buffer.
+                upd = sym.get(operands[1], 0) if len(operands) > 1 else 0
+                total += w * 2 * upd
+                continue
+            if opname == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", rest)
+                callee = cm.group(1) if cm else None
+                if callee and callee in comps:
+                    if callee not in fusion_io_cache:
+                        fusion_io_cache[callee] = _fusion_io_bytes(comps[callee])
+                    eff_params, eff_write = fusion_io_cache[callee]
+                    b = eff_write if eff_write is not None else res_bytes
+                    for i, a in enumerate(operands):
+                        b += eff_params.get(i, sym.get(a, 0))
+                    total += w * b
+                    continue
+            b = res_bytes + sum(sym.get(a, 0) for a in operands)
+            total += w * b
+    return total
+
+
+def analyze_hlo_file(path: str) -> dict:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        text = f.read()
+    comps, entry = split_computations(text)
+    mult, internal = call_multiplicities(comps, entry)
+    return {
+        "flops_weighted": dot_flops(comps, mult),
+        "bytes_weighted": bytes_accessed_weighted(comps, mult, internal),
+        "collectives_weighted": collective_bytes_weighted(comps, mult),
+        "n_computations": len(comps),
+        "n_while": sum(1 for lines in comps.values()
+                       for ln in lines if " while(" in ln),
+    }

@@ -1,0 +1,98 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (DESIGN.md §7) + the kernel microbench
++ the §Roofline table (from the dry-run artifacts, if present).
+``--full`` runs at larger scale; default is the quick CI profile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_accuracy_distribution,
+    bench_buffer_size,
+    bench_construction,
+    bench_kernels,
+    bench_sketch_ablation,
+    bench_space_accuracy,
+    bench_threshold,
+    bench_time_accuracy,
+    bench_uniform_exact,
+    bench_zipf_sweep,
+)
+
+SUITES = [
+    ("fig5_buffer_size", bench_buffer_size),
+    ("fig6_sketch_ablation", bench_sketch_ablation),
+    ("fig10_13_space_accuracy", bench_space_accuracy),
+    ("fig14_accuracy_distribution", bench_accuracy_distribution),
+    ("fig15_threshold", bench_threshold),
+    ("fig16_zipf_sweep", bench_zipf_sweep),
+    ("fig17_time_accuracy", bench_time_accuracy),
+    ("fig18_t3_construction", bench_construction),
+    ("fig19_uniform_exact", bench_uniform_exact),
+    ("kernel_microbench", bench_kernels),
+]
+
+
+def _print_rows(rows, limit=100):
+    if not rows:
+        print("  (no rows)")
+        return
+    cols = list(rows[0].keys())
+    print("  " + " | ".join(f"{c}" for c in cols))
+    for r in rows[:limit]:
+        print("  " + " | ".join(str(r.get(c, "")) for c in cols))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    failures = 0
+    for name, mod in SUITES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"\n=== {name} ===")
+        try:
+            rows = mod.run(quick=not args.full)
+            _print_rows(rows)
+            print(f"  [{time.time()-t0:.1f}s] → reports/bench/{name}.csv")
+        except Exception:
+            failures += 1
+            print(f"  FAILED after {time.time()-t0:.1f}s")
+            traceback.print_exc()
+
+    print("\n=== roofline (from dry-run artifacts) ===")
+    try:
+        import os
+
+        from benchmarks import roofline
+        dd = ("reports/dryrun_v2" if os.path.isdir("reports/dryrun_v2")
+              else "reports/dryrun")
+        print(f"  source: {dd} (optimized defaults; baseline snapshot in "
+              "reports/roofline_baseline.csv)")
+        rows = roofline.run(dryrun_dir=dd)
+        if rows:
+            _print_rows(rows, limit=50)
+            print("  → reports/roofline.csv")
+        else:
+            print("  no dry-run artifacts; run: "
+                  "PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    print(f"\n{'ALL BENCHMARKS OK' if not failures else f'{failures} FAILURES'}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

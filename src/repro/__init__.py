@@ -1,0 +1,14 @@
+"""repro — production-grade JAX/TPU framework for GB-KMV containment similarity search.
+
+Paper: "GB-KMV: An Augmented KMV Sketch for Approximate Containment
+Similarity Search" (Yang, Zhang, Zhang, Huang, 2018).
+
+Public API surface:
+    repro.core        — KMV / G-KMV / GB-KMV sketches, estimators, search
+    repro.sketchindex — packed, distributed sketch index
+    repro.models      — assigned architecture model zoo
+    repro.configs     — architecture registry (``get_config(arch_id)``)
+    repro.launch      — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "0.1.0"

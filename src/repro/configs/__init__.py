@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCH_IDS, family, get_module, shapes_for  # noqa: F401
+from repro.configs.shapes import FAMILY_SHAPES  # noqa: F401

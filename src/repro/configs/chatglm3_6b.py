@@ -1,0 +1,36 @@
+"""chatglm3-6b [dense]: 28L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=65024 — 2D-RoPE (rotary on half the head dim), GQA.
+[arXiv:2406.12793; hf]
+"""
+
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "chatglm3-6b"
+FAMILY = "lm"
+
+
+def config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID,
+        n_layers=28,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=2,
+        d_ff=13_696,
+        vocab=65_024,
+        rope_mode="2d",
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=160,
+        vocab=512,
+        rope_mode="2d",
+        chunk_q=32,
+    )

@@ -1,0 +1,37 @@
+"""din [recsys]: embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80
+interaction=target-attn. [arXiv:1706.06978; paper]
+
+Item table: 10⁶ hashed rows (industrial scale; the assignment leaves the
+vocab open — 10⁶ sits in its 10⁶–10⁹ band).
+"""
+
+from repro.models.recsys import RecSysConfig
+
+ARCH_ID = "din"
+FAMILY = "recsys"
+
+
+def config() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID,
+        kind="din",
+        embed_dim=18,
+        seq_len=100,
+        vocab_rows=1_000_000,
+        attn_mlp=(80, 40),
+        mlp=(200, 80),
+        cand_chunk=8_000,
+    )
+
+
+def reduced() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID + "-smoke",
+        kind="din",
+        embed_dim=8,
+        seq_len=12,
+        vocab_rows=500,
+        attn_mlp=(16, 8),
+        mlp=(24, 12),
+        cand_chunk=64,
+    )

@@ -1,0 +1,32 @@
+"""fm [recsys]: n_sparse=39 embed_dim=10 interaction=fm-2way — pairwise
+⟨vᵢ,vⱼ⟩xᵢxⱼ via the O(nk) sum-square trick. [ICDM'10 (Rendle); paper]
+
+The 39 sparse fields (Criteo layout) hash into one 10⁶-row table.
+"""
+
+from repro.models.recsys import RecSysConfig
+
+ARCH_ID = "fm"
+FAMILY = "recsys"
+
+
+def config() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID,
+        kind="fm",
+        embed_dim=10,
+        n_fields=39,
+        vocab_rows=1_000_000,
+        cand_chunk=8_000,
+    )
+
+
+def reduced() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID + "-smoke",
+        kind="fm",
+        embed_dim=4,
+        n_fields=8,
+        vocab_rows=500,
+        cand_chunk=64,
+    )

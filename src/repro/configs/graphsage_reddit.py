@@ -1,0 +1,36 @@
+"""graphsage-reddit [gnn]: n_layers=2 d_hidden=128 aggregator=mean
+sample_sizes=25-10. [arXiv:1706.02216; paper]
+
+d_feat / n_classes vary per assigned shape (cora / reddit / products /
+molecule) — configs/shapes.py carries them; ``config(d_feat, n_classes)``
+builds the matching GNNConfig.
+"""
+
+from repro.models.gnn import GNNConfig
+
+ARCH_ID = "graphsage-reddit"
+FAMILY = "gnn"
+
+
+def config(d_feat: int = 602, n_classes: int = 41) -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID,
+        n_layers=2,
+        d_hidden=128,
+        d_feat=d_feat,
+        n_classes=n_classes,
+        aggregator="mean",
+        sample_sizes=(25, 10),
+    )
+
+
+def reduced() -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_hidden=16,
+        d_feat=24,
+        n_classes=5,
+        aggregator="mean",
+        sample_sizes=(4, 3),
+    )

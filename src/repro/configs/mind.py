@@ -1,0 +1,37 @@
+"""mind [recsys]: embed_dim=64 n_interests=4 capsule_iters=3
+interaction=multi-interest. [arXiv:1904.08030; unverified]
+
+Behaviour-sequence length is unspecified by the assignment; 100 chosen to
+match DIN (both model user histories).
+"""
+
+from repro.models.recsys import RecSysConfig
+
+ARCH_ID = "mind"
+FAMILY = "recsys"
+
+
+def config() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID,
+        kind="mind",
+        embed_dim=64,
+        seq_len=100,
+        vocab_rows=1_000_000,
+        n_interests=4,
+        capsule_iters=3,
+        cand_chunk=8_000,
+    )
+
+
+def reduced() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID + "-smoke",
+        kind="mind",
+        embed_dim=8,
+        seq_len=12,
+        vocab_rows=500,
+        n_interests=2,
+        capsule_iters=2,
+        cand_chunk=64,
+    )

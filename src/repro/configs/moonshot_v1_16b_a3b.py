@@ -1,0 +1,42 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=163840, MoE 64e top-6 (kimi/moonlight).
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+
+Config taken verbatim (DESIGN.md §6.7); every layer is MoE.
+"""
+
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "moonshot-v1-16b-a3b"
+FAMILY = "lm"
+
+
+def config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID,
+        n_layers=48,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab=163_840,
+        rope_mode="full",
+        moe=MoEConfig(num_experts=64, top_k=6, d_ff=1408, every=1),
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=96,
+        vocab=512,
+        rope_mode="full",
+        chunk_q=32,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff=96, every=1,
+                      group_size=256, capacity_factor=8.0),
+    )

@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` → config module."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "qwen3-0.6b",
+    "stablelm-12b",
+    "chatglm3-6b",
+    "llama4-maverick-400b-a17b",
+    "moonshot-v1-16b-a3b",
+    "graphsage-reddit",
+    "din",
+    "fm",
+    "mind",
+    "wide-deep",
+]
+
+_MODULES = {
+    "qwen3-0.6b": "qwen3_0_6b",
+    "stablelm-12b": "stablelm_12b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "graphsage-reddit": "graphsage_reddit",
+    "din": "din",
+    "fm": "fm",
+    "mind": "mind",
+    "wide-deep": "wide_deep",
+}
+
+
+def get_module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def family(arch_id: str) -> str:
+    return get_module(arch_id).FAMILY
+
+
+def shapes_for(arch_id: str) -> dict:
+    from repro.configs.shapes import FAMILY_SHAPES
+
+    return FAMILY_SHAPES[family(arch_id)]

@@ -1,0 +1,46 @@
+"""Assigned input-shape sets, one per architecture family (task spec).
+
+Every (arch × shape) pair is one dry-run/roofline cell; the launcher's
+``cells.py`` turns (family, shape dict) into concrete step functions and
+ShapeDtypeStruct inputs.
+"""
+
+LM_SHAPES = {
+    "train_4k":    dict(kind="train",   seq=4_096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32_768,  batch=128),
+    # long_500k is a DECODE shape (one token, 512k KV cache) — decode
+    # attention is O(L) so it runs for all 5 LM archs with the cache
+    # sequence-sharded (DESIGN.md §6.9); no sub-quadratic skip needed.
+    "long_500k":   dict(kind="decode",  seq=524_288, batch=1),
+}
+
+GNN_SHAPES = {
+    # Cora-scale citation graph (full-batch).
+    "full_graph_sm": dict(kind="full", n_nodes=2_708, n_edges=10_556,
+                          d_feat=1_433, n_classes=7),
+    # Reddit (sampled-training): real fanout-sampled minibatches.
+    "minibatch_lg":  dict(kind="sampled", n_nodes=232_965,
+                          n_edges=114_615_892, batch_nodes=1_024,
+                          fanout=(15, 10), d_feat=602, n_classes=41),
+    # ogbn-products (full-batch-large).
+    "ogb_products":  dict(kind="full", n_nodes=2_449_029,
+                          n_edges=61_859_140, d_feat=100, n_classes=47),
+    # Batched small dense graphs. d_feat/n_classes are unspecified by the
+    # assignment; 64/2 chosen (typical molecular property tasks).
+    "molecule":      dict(kind="molecule", n_nodes=30, n_edges=64,
+                          batch=128, d_feat=64, n_classes=2),
+}
+
+RECSYS_SHAPES = {
+    "train_batch":    dict(kind="train",     batch=65_536),
+    "serve_p99":      dict(kind="serve",     batch=512),
+    "serve_bulk":     dict(kind="serve",     batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+FAMILY_SHAPES = {
+    "lm": LM_SHAPES,
+    "gnn": GNN_SHAPES,
+    "recsys": RECSYS_SHAPES,
+}

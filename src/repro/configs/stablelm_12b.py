@@ -1,0 +1,35 @@
+"""stablelm-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352. [hf:stabilityai/stablelm-2-1_6b; hf]
+"""
+
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "stablelm-12b"
+FAMILY = "lm"
+
+
+def config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID,
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=13_824,
+        vocab=100_352,
+        rope_mode="full",
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        d_ff=160,
+        vocab=512,
+        rope_mode="full",
+        chunk_q=32,
+    )

@@ -1,0 +1,32 @@
+"""wide-deep [recsys]: n_sparse=40 embed_dim=32 mlp=1024-512-256
+interaction=concat. [arXiv:1606.07792; paper]
+"""
+
+from repro.models.recsys import RecSysConfig
+
+ARCH_ID = "wide-deep"
+FAMILY = "recsys"
+
+
+def config() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID,
+        kind="wide_deep",
+        embed_dim=32,
+        n_fields=40,
+        vocab_rows=1_000_000,
+        mlp=(1024, 512, 256),
+        cand_chunk=8_000,
+    )
+
+
+def reduced() -> RecSysConfig:
+    return RecSysConfig(
+        name=ARCH_ID + "-smoke",
+        kind="wide_deep",
+        embed_dim=8,
+        n_fields=8,
+        vocab_rows=500,
+        mlp=(32, 16),
+        cand_chunk=64,
+    )

@@ -1,0 +1,8 @@
+# The paper's primary contribution: KMV / G-KMV / GB-KMV sketches,
+# estimators, cost model, baselines (MinHash, LSH-E), exact engines,
+# and the unified search front end.
+
+from repro.core.gbkmv import GBKMVIndex, build_gbkmv, sketch_query, search  # noqa: F401
+from repro.core.gkmv import build_gkmv, select_global_threshold  # noqa: F401
+from repro.core.kmv import build_kmv  # noqa: F401
+from repro.core.search import evaluate_engine, f_score, run_search  # noqa: F401

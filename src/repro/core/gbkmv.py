@@ -1,0 +1,140 @@
+"""GB-KMV: G-KMV + a bitmap buffer of the top-r frequent elements
+(paper §IV-B, Algorithm 1-2).
+
+Budget accounting follows Algorithm 1: with budget ``b`` measured in hash
+slots (32-bit words), the buffer costs ``r/32`` words per record and the
+G-KMV tail gets the remainder: ``Σ_X (r/32 + n_X) <= b``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.gkmv import select_global_threshold
+from repro.core.hashing import hash_u32_np, PAD
+from repro.core.sketches import PackedSketches, make_bitmaps, pack_rows
+
+
+@dataclasses.dataclass
+class GBKMVIndex:
+    """A GB-KMV index: packed sketches + the metadata to sketch queries."""
+
+    sketches: PackedSketches
+    tau: np.uint32            # global hash threshold of the G-KMV part
+    top_elems: np.ndarray     # element ids owning buffer bits (len r)
+    seed: int
+    buffer_bits: int          # r
+
+    @property
+    def num_records(self) -> int:
+        return self.sketches.num_records
+
+    def nbytes(self) -> int:
+        return self.sketches.nbytes()
+
+
+def element_frequencies(records: Sequence[np.ndarray]) -> Counter:
+    cnt: Counter = Counter()
+    for rec in records:
+        cnt.update(int(e) for e in np.asarray(rec))
+    return cnt
+
+
+def choose_top_elements(freq: Counter, r: int) -> np.ndarray:
+    """The r globally most frequent element ids (ties broken by id)."""
+    if r <= 0:
+        return np.zeros(0, dtype=np.int64)
+    items = sorted(freq.items(), key=lambda kv: (-kv[1], kv[0]))[:r]
+    return np.asarray([e for e, _ in items], dtype=np.int64)
+
+
+def build_gbkmv(
+    records: Sequence[np.ndarray],
+    budget: int,
+    r: int | str = "auto",
+    seed: int = 0,
+    capacity: int | None = None,
+) -> GBKMVIndex:
+    """Algorithm 1: pick r (cost model), top-r elements, τ, pack sketches.
+
+    Args:
+      records:  element-id arrays (distinct ids within each record)
+      budget:   total space in 32-bit slots across all records
+      r:        buffer bits per record; "auto" runs the §IV-C6 cost model
+      capacity: optional cap on the packed G-KMV row length
+    """
+    m = len(records)
+    freq = element_frequencies(records)
+
+    if r == "auto":
+        sizes = np.asarray([len(rec) for rec in records], dtype=np.int64)
+        freqs = np.asarray(sorted(freq.values(), reverse=True), dtype=np.int64)
+        r = cost_model.choose_buffer_size(freqs, sizes, budget, m)
+    r = int(r)
+
+    top = choose_top_elements(freq, r)
+    top_set = set(int(e) for e in top)
+
+    # Split records: buffered head (exact bitmap) vs hashed tail (G-KMV).
+    tails = []
+    for rec in records:
+        rec = np.asarray(rec)
+        if top_set:
+            mask = np.asarray([int(e) not in top_set for e in rec], dtype=bool)
+            tails.append(rec[mask])
+        else:
+            tails.append(rec)
+
+    hrows = [np.sort(hash_u32_np(t, seed=seed)) if len(t) else np.zeros(0, np.uint32)
+             for t in tails]
+
+    words_per_rec = -(-r // 32) if r else 0
+    tail_budget = max(budget - m * words_per_rec, m)  # ≥1 slot per record
+    tau = select_global_threshold(hrows, tail_budget)
+
+    kept = [h[h <= tau] for h in hrows]
+    bitmaps = make_bitmaps(records, top)
+    sizes = np.asarray([len(rec) for rec in records], dtype=np.int32)
+    thr = np.full(m, tau, dtype=np.uint32)
+    packed = pack_rows(kept, thr, sizes, bitmaps=bitmaps, capacity=capacity)
+    return GBKMVIndex(sketches=packed, tau=np.uint32(tau), top_elems=top,
+                      seed=seed, buffer_bits=r)
+
+
+def sketch_query(index: GBKMVIndex, q_ids: np.ndarray) -> PackedSketches:
+    """Sketch a query with the index's τ / top-r / seed (§IV-B)."""
+    from repro.core.gkmv import sketch_query as _sq
+
+    q = _sq(q_ids, index.tau, seed=index.seed,
+            capacity=index.sketches.capacity, top_elems=index.top_elems)
+    # Align buffer word width with the index (make_bitmaps already matches
+    # because top_elems defines the width; guard the r=0 case).
+    if q.buf.shape[1] != index.sketches.buf.shape[1]:
+        w = index.sketches.buf.shape[1]
+        buf = np.zeros((1, w), dtype=np.uint32)
+        buf[:, : q.buf.shape[1]] = q.buf
+        q = dataclasses.replace(q, buf=buf)
+    return q
+
+
+def containment_scores(index: GBKMVIndex, q: PackedSketches, backend: str = "jnp"):
+    """Ĉ(Q→X) for every record (Eq. 27): buffer popcount + G-KMV tail."""
+    from repro.core.estimators import gbkmv_containment
+
+    return np.asarray(gbkmv_containment(q, index.sketches))
+
+
+def search(
+    index: GBKMVIndex,
+    q_ids: np.ndarray,
+    threshold: float,
+) -> np.ndarray:
+    """Algorithm 2: record ids with estimated containment ≥ t*."""
+    q = sketch_query(index, q_ids)
+    scores = containment_scores(index, q)
+    return np.nonzero(scores >= threshold)[0]

@@ -1,0 +1,79 @@
+"""G-KMV: KMV with a global hash threshold (paper §IV-A(2), Theorems 2-3).
+
+Every record keeps *all* hash values ``h(e) <= τ``. τ is set from the space
+budget: the expected row length is ``τ · |X|``, so ``Σ_j τ·x_j = b`` gives
+``τ = b / N`` (paper §IV-C4). We compute τ *exactly* instead: the b-th
+smallest value of the multiset of all record-element hashes, which hits the
+budget precisely on the given data rather than in expectation.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hashing import hash_u32_np, PAD
+from repro.core.sketches import PackedSketches, pack_rows
+
+
+def select_global_threshold(
+    hash_rows: Sequence[np.ndarray], budget: int
+) -> np.uint32:
+    """Exact τ: the budget-th smallest hash over all (record, element) pairs.
+
+    ``hash_rows`` are per-record hash arrays (need not be sorted). When the
+    budget exceeds the total number of elements, τ = PAD-1 (keep all).
+    """
+    total = sum(len(r) for r in hash_rows)
+    if budget >= total or total == 0:
+        return np.uint32(PAD - np.uint32(1))
+    allh = np.concatenate([np.asarray(r, dtype=np.uint32) for r in hash_rows])
+    # budget-th smallest (1-indexed) == partition at budget-1
+    tau = np.partition(allh, budget - 1)[budget - 1]
+    return np.uint32(tau)
+
+
+def build_gkmv(
+    records: Sequence[np.ndarray],
+    budget: int,
+    seed: int = 0,
+    capacity: int | None = None,
+) -> PackedSketches:
+    """Build a G-KMV index: filter every record's hashes at the global τ.
+
+    ``capacity`` optionally caps row length (rows above it fall back to a
+    lower per-record effective threshold — see sketches.pack_rows).
+    """
+    m = len(records)
+    hrows = [np.sort(hash_u32_np(np.asarray(r), seed=seed)) for r in records]
+    tau = select_global_threshold(hrows, budget)
+    kept = [r[r <= tau] for r in hrows]
+    sizes = np.asarray([len(r) for r in records], dtype=np.int32)
+    thr = np.full(m, tau, dtype=np.uint32)
+    return pack_rows(kept, thr, sizes, capacity=capacity)
+
+
+def sketch_query(
+    q_ids: np.ndarray,
+    tau: np.uint32,
+    seed: int = 0,
+    capacity: int | None = None,
+    top_elems: np.ndarray | None = None,
+) -> PackedSketches:
+    """Sketch one query record at threshold τ (matching an index build)."""
+    from repro.core.sketches import make_bitmaps
+
+    q_ids = np.asarray(q_ids)
+    if top_elems is not None and len(top_elems):
+        top_set = set(int(e) for e in top_elems)
+        tail = np.asarray([e for e in q_ids if int(e) not in top_set])
+        bitmaps = make_bitmaps([q_ids], top_elems)
+    else:
+        tail = q_ids
+        bitmaps = None
+    h = np.sort(hash_u32_np(tail, seed=seed)) if len(tail) else np.zeros(0, np.uint32)
+    kept = h[h <= tau]
+    thr = np.asarray([tau], dtype=np.uint32)
+    sizes = np.asarray([len(q_ids)], dtype=np.int32)
+    return pack_rows([kept], thr, sizes, bitmaps=bitmaps, capacity=capacity)

@@ -1,0 +1,43 @@
+"""Plain KMV sketch (paper §II-C) — equal-allocation baseline.
+
+Theorem 1: under a total budget ``b`` over ``m`` records, the optimal plain
+KMV allocation is uniform ``k_i = floor(b / m)``, because pair estimation
+uses ``k = min(k_Q, k_X)`` (Eq. 8). We implement exactly that.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hashing import hash_u32_np
+from repro.core.sketches import PackedSketches, pack_rows
+from repro.core.hashing import PAD
+
+
+def build_kmv(records: Sequence[np.ndarray], budget: int, seed: int = 0) -> PackedSketches:
+    """Keep the ``floor(budget/m)`` minimum hash values of every record.
+
+    ``budget`` counts hash slots (paper's "number of signatures").
+    """
+    m = len(records)
+    k = max(budget // max(m, 1), 2)
+    rows = []
+    sizes = np.zeros(m, dtype=np.int32)
+    for i, rec in enumerate(records):
+        h = np.sort(hash_u32_np(np.asarray(rec), seed=seed))
+        rows.append(h[:k])
+        sizes[i] = len(rec)
+    # Plain KMV has no threshold semantics; use PAD-1 so τ_pair never binds.
+    thr = np.full(m, PAD - np.uint32(1), dtype=np.uint32)
+    return pack_rows(rows, thr, sizes, capacity=k)
+
+
+def kmv_distinct_estimate_np(hashes: np.ndarray, k: int) -> float:
+    """D̂ = (k-1)/U_(k) (paper §II-C) for a single record, NumPy."""
+    h = np.sort(np.asarray(hashes))
+    if len(h) < k or k < 2:
+        return float(len(set(h.tolist())))
+    u = (float(h[k - 1]) + 1.0) / 4294967296.0
+    return (k - 1) / u

@@ -1,0 +1,42 @@
+"""MinHash substrate (paper §II-B) — basis of the LSH-E baseline.
+
+Signatures use k independent hash functions (k minimum values, one per
+function). Jaccard is estimated as the collision fraction (Eq. 5);
+containment via the size transformation (Eq. 14).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hashing import hash_u32_np, PAD
+
+
+def build_signatures(
+    records: Sequence[np.ndarray], num_hashes: int, seed: int = 0
+) -> np.ndarray:
+    """uint32[m, k] MinHash signature matrix."""
+    m = len(records)
+    sig = np.full((m, num_hashes), PAD, dtype=np.uint32)
+    for i, rec in enumerate(records):
+        ids = np.asarray(rec, dtype=np.uint64)
+        if len(ids) == 0:
+            continue
+        for h in range(num_hashes):
+            sig[i, h] = hash_u32_np(ids, seed=seed * 1000003 + h).min()
+    return sig
+
+
+def jaccard_estimate(q_sig: np.ndarray, sigs: np.ndarray) -> np.ndarray:
+    """ŝ (Eq. 5): collision fraction of one signature vs m signatures."""
+    return (sigs == q_sig[None, :]).mean(axis=1)
+
+
+def containment_from_jaccard(
+    s_hat: np.ndarray, x_sizes: np.ndarray, q_size: int
+) -> np.ndarray:
+    """t̂ = (x/q + 1)·ŝ / (1 + ŝ) — Eq. 14 (true record sizes)."""
+    alpha = x_sizes.astype(np.float64) / max(q_size, 1) + 1.0
+    return alpha * s_hat / (1.0 + s_hat)

@@ -1,0 +1,75 @@
+"""Unified containment-search front end + evaluation metrics (paper §V-A).
+
+``run_search`` dispatches to any of the implemented engines so benchmarks
+compare methods through one door. ``f_score`` implements Eq. 35.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import exact as exact_mod
+from repro.core import gbkmv as gbkmv_mod
+from repro.core import lshe as lshe_mod
+
+
+def f_score(truth: np.ndarray, returned: np.ndarray, alpha: float = 1.0) -> float:
+    """F_α (Eq. 35). truth/returned are id arrays."""
+    t, a = set(np.asarray(truth).tolist()), set(np.asarray(returned).tolist())
+    if not a and not t:
+        return 1.0
+    if not a or not t:
+        return 0.0
+    inter = len(t & a)
+    prec = inter / len(a)
+    rec = inter / len(t)
+    if prec + rec == 0:
+        return 0.0
+    return (1 + alpha**2) * prec * rec / (alpha**2 * prec + rec)
+
+
+def precision_recall(truth: np.ndarray, returned: np.ndarray) -> tuple[float, float]:
+    t, a = set(np.asarray(truth).tolist()), set(np.asarray(returned).tolist())
+    if not a:
+        return (1.0 if not t else 0.0), (1.0 if not t else 0.0)
+    inter = len(t & a)
+    return inter / len(a), (inter / len(t) if t else 1.0)
+
+
+def run_search(engine, index, q_ids: np.ndarray, threshold: float, seed: int = 0):
+    """engine ∈ {gbkmv, lshe, exact, prefix} → candidate id array."""
+    if engine == "gbkmv":
+        return gbkmv_mod.search(index, q_ids, threshold)
+    if engine == "lshe":
+        return lshe_mod.query_lshe(index, q_ids, threshold, seed=seed)
+    if engine == "exact":
+        return exact_mod.exact_search(index, q_ids, threshold)
+    if engine == "prefix":
+        return exact_mod.prefix_filter_search(index, q_ids, threshold)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def evaluate_engine(
+    engine,
+    index,
+    exact_index,
+    queries: Sequence[np.ndarray],
+    threshold: float,
+    alpha: float = 1.0,
+    seed: int = 0,
+) -> dict:
+    """Mean F_α / precision / recall of an engine over a query workload."""
+    fs, ps, rs = [], [], []
+    for q in queries:
+        truth = exact_mod.exact_search(exact_index, q, threshold)
+        got = run_search(engine, index, q, threshold, seed=seed)
+        fs.append(f_score(truth, got, alpha=alpha))
+        p, r = precision_recall(truth, got)
+        ps.append(p)
+        rs.append(r)
+    return {
+        "f": float(np.mean(fs)), "f_min": float(np.min(fs)), "f_max": float(np.max(fs)),
+        "precision": float(np.mean(ps)), "recall": float(np.mean(rs)),
+    }

@@ -1,0 +1,153 @@
+"""Packed, fixed-capacity sketch containers (TPU-native layout).
+
+The paper stores one variable-length hash list per record. On TPU we pack
+the whole index into dense matrices (DESIGN.md §3):
+
+    values  uint32[m, C]   sorted ascending, PAD-filled
+    lengths int32[m]       number of live hash values per row
+    thresh  uint32[m]      per-record *effective* threshold: the global τ,
+                           or (C-th smallest hash) for rows that overflowed
+                           the capacity C
+    buf     uint32[m, W]   GB-KMV bitmap buffer (W = ceil(r / 32) words)
+    sizes   int32[m]       true |X| (record cardinalities; known, per paper)
+
+A pair (Q, X) is estimated under τ_pair = min(thresh_Q, thresh_X): both
+rows provably contain *every* element hashing below τ_pair, so the union
+of the truncated rows is a valid KMV synopsis of Q ∪ X (paper Theorem 2
+applied at τ_pair). This keeps correctness under bounded capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import PAD, hash_u32_np
+
+
+@dataclasses.dataclass
+class PackedSketches:
+    """Device-ready GB-KMV index (or a single-query slice of one)."""
+
+    values: np.ndarray | jnp.ndarray   # uint32[m, C]
+    lengths: np.ndarray | jnp.ndarray  # int32[m]
+    thresh: np.ndarray | jnp.ndarray   # uint32[m]
+    buf: np.ndarray | jnp.ndarray      # uint32[m, W] (W may be 0)
+    sizes: np.ndarray | jnp.ndarray    # int32[m]
+
+    @property
+    def num_records(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def buf_words(self) -> int:
+        return self.buf.shape[1]
+
+    def row(self, i: int) -> "PackedSketches":
+        return PackedSketches(
+            values=self.values[i : i + 1],
+            lengths=self.lengths[i : i + 1],
+            thresh=self.thresh[i : i + 1],
+            buf=self.buf[i : i + 1],
+            sizes=self.sizes[i : i + 1],
+        )
+
+    def to_device(self) -> "PackedSketches":
+        return PackedSketches(
+            values=jnp.asarray(self.values),
+            lengths=jnp.asarray(self.lengths),
+            thresh=jnp.asarray(self.thresh),
+            buf=jnp.asarray(self.buf),
+            sizes=jnp.asarray(self.sizes),
+        )
+
+    def nbytes(self) -> int:
+        return sum(int(np.asarray(a).nbytes) for a in
+                   (self.values, self.lengths, self.thresh, self.buf, self.sizes))
+
+
+# PackedSketches crosses jit boundaries (sketchindex/distributed.py).
+jax.tree_util.register_dataclass(
+    PackedSketches,
+    data_fields=["values", "lengths", "thresh", "buf", "sizes"],
+    meta_fields=[],
+)
+
+
+def pack_rows(
+    hash_rows: Sequence[np.ndarray],
+    thresholds: np.ndarray,
+    sizes: np.ndarray,
+    bitmaps: np.ndarray | None = None,
+    capacity: int | None = None,
+    pad_to_multiple: int = 8,
+) -> PackedSketches:
+    """Pack per-record sorted hash arrays into a :class:`PackedSketches`.
+
+    ``hash_rows[i]`` must already be filtered to ``h <= thresholds[i]`` and
+    sorted ascending. Rows longer than ``capacity`` are truncated to their
+    ``capacity`` smallest values and their effective threshold lowered to
+    the largest kept value (so τ_pair semantics stay exact).
+    """
+    m = len(hash_rows)
+    max_len = max((len(r) for r in hash_rows), default=0)
+    cap = capacity if capacity is not None else max_len
+    cap = max(cap, 1)
+    cap = -(-cap // pad_to_multiple) * pad_to_multiple  # round up
+
+    values = np.full((m, cap), PAD, dtype=np.uint32)
+    lengths = np.zeros(m, dtype=np.int32)
+    thr = np.asarray(thresholds, dtype=np.uint32).copy()
+    for i, row in enumerate(hash_rows):
+        row = np.asarray(row, dtype=np.uint32)
+        if len(row) > cap:
+            row = row[:cap]
+            # Effective threshold drops to the largest kept value.
+            thr[i] = row[-1]
+        values[i, : len(row)] = row
+        lengths[i] = len(row)
+
+    if bitmaps is None:
+        bitmaps = np.zeros((m, 0), dtype=np.uint32)
+    return PackedSketches(
+        values=values,
+        lengths=lengths,
+        thresh=thr,
+        buf=np.asarray(bitmaps, dtype=np.uint32),
+        sizes=np.asarray(sizes, dtype=np.int32),
+    )
+
+
+def make_bitmaps(records: Sequence[np.ndarray], top_elems: np.ndarray) -> np.ndarray:
+    """Per-record bitmap over the top-r frequent elements.
+
+    ``top_elems[j]`` is the element id owning bit ``j``. Returns
+    ``uint32[m, ceil(r/32)]`` (r rounded up to a word). Word layout: bit j
+    lives in word ``j // 32`` at position ``j % 32``.
+    """
+    r = len(top_elems)
+    words = max(-(-r // 32), 1) if r else 0
+    m = len(records)
+    out = np.zeros((m, words), dtype=np.uint32)
+    if r == 0:
+        return out
+    pos = {int(e): j for j, e in enumerate(np.asarray(top_elems))}
+    for i, rec in enumerate(records):
+        for e in np.asarray(rec):
+            j = pos.get(int(e))
+            if j is not None:
+                out[i, j // 32] |= np.uint32(1) << np.uint32(j % 32)
+    return out
+
+
+def hash_records(records: Sequence[np.ndarray], seed: int = 0) -> list[np.ndarray]:
+    """Hash each record's element ids → sorted uint32 arrays (host side)."""
+    return [np.sort(hash_u32_np(np.asarray(r), seed=seed)) for r in records]

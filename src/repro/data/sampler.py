@@ -1,0 +1,64 @@
+"""GNN neighbor sampler (the real thing, not a stub): CSR adjacency +
+layer-wise fanout sampling for the ``minibatch_lg`` regime.
+
+Host-side numpy (samplers are IO/pipeline work, per GraphSAGE practice);
+emits fixed-shape [B, f1, ...] feature tensors ready for the jitted step.
+Sampling with replacement (uniform per neighbor) keeps shapes static —
+isolated nodes self-loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray    # int64[N+1]
+    indices: np.ndarray   # int32[E]
+    num_nodes: int
+
+    @staticmethod
+    def from_edges(edges: np.ndarray, num_nodes: int) -> "CSRGraph":
+        """edges i32[E, 2] (src, dst) → CSR over *incoming* neighbors."""
+        dst = edges[:, 1].astype(np.int64)
+        order = np.argsort(dst, kind="stable")
+        sorted_src = edges[order, 0].astype(np.int32)
+        counts = np.bincount(dst, minlength=num_nodes)
+        indptr = np.zeros(num_nodes + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSRGraph(indptr=indptr, indices=sorted_src, num_nodes=num_nodes)
+
+    def sample_neighbors(self, nodes: np.ndarray, fanout: int,
+                         rng: np.random.Generator) -> np.ndarray:
+        """Uniform with replacement → i32[len(nodes), fanout]."""
+        lo = self.indptr[nodes]
+        deg = self.indptr[nodes + 1] - lo
+        safe_deg = np.maximum(deg, 1)
+        draw = rng.integers(0, 1 << 62, size=(len(nodes), fanout)) % safe_deg[:, None]
+        neigh = self.indices[(lo[:, None] + draw).astype(np.int64)]
+        # Isolated nodes: self-loop.
+        return np.where(deg[:, None] > 0, neigh, nodes[:, None]).astype(np.int32)
+
+
+def sample_batch(
+    graph: CSRGraph,
+    feats: np.ndarray,
+    labels: np.ndarray,
+    batch_nodes: int,
+    fanout: tuple[int, int],
+    rng: np.random.Generator,
+) -> dict:
+    """One layer-wise sampled minibatch for the 2-layer GraphSAGE step."""
+    f1, f2 = fanout
+    seeds = rng.integers(0, graph.num_nodes, size=batch_nodes).astype(np.int32)
+    hop1 = graph.sample_neighbors(seeds, f1, rng)              # [B, f1]
+    hop2 = graph.sample_neighbors(hop1.reshape(-1), f2, rng)   # [B*f1, f2]
+    return {
+        "seed_feats": feats[seeds],
+        "h1": feats[hop1],
+        "h2": feats[hop2].reshape(batch_nodes, f1, f2, -1),
+        "labels": labels[seeds].astype(np.int32),
+    }

@@ -1,0 +1,61 @@
+"""Elastic scaling: resume the same logical training run on a different
+mesh (fewer/more hosts) without changing the math.
+
+Invariants preserved across a re-mesh:
+  * global batch size       — microbatch count is re-derived so
+                              global_batch = dp_size · per_device · micros
+  * optimization trajectory — params/opt-state restored bit-exact, then
+                              resharded onto the new mesh (ft/checkpoint
+                              does device_put with the new shardings)
+  * data order              — the data cursor (seed, step) rides in the
+                              checkpoint manifest
+
+The launcher calls ``plan_remesh`` on restart after the straggler monitor
+(or the scheduler) changed the node set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.ft import checkpoint as ckpt_mod
+from repro.parallel.sharding import tree_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    dp_size: int                # data-parallel ways on the new mesh
+    per_device_batch: int
+    microbatches: int
+    notes: str = ""
+
+
+def plan_remesh(new_mesh, global_batch: int, per_device_batch: int) -> RemeshPlan:
+    """Re-derive microbatching so the global batch survives the re-mesh."""
+    axes = dict(zip(new_mesh.axis_names, new_mesh.devices.shape))
+    dp = axes.get("data", 1) * axes.get("pod", 1)
+    denom = dp * per_device_batch
+    if global_batch % denom:
+        # Shrink per-device batch until it divides (keeps global batch exact).
+        while per_device_batch > 1 and global_batch % (dp * per_device_batch):
+            per_device_batch //= 2
+        denom = dp * per_device_batch
+        if global_batch % denom:
+            raise ValueError(
+                f"global_batch={global_batch} unreachable on dp={dp}")
+    micro = global_batch // denom
+    return RemeshPlan(dp_size=dp, per_device_batch=per_device_batch,
+                      microbatches=micro,
+                      notes=f"dp={dp} pdb={per_device_batch} micro={micro}")
+
+
+def resume(ckpt_dir: str, new_mesh, state_like, state_axes, step=None):
+    """Restore + reshard a run's state onto ``new_mesh``.
+
+    ``state_like``  — pytree of arrays/ShapeDtypeStructs (tree structure)
+    ``state_axes``  — matching pytree of logical-axis tuples
+    """
+    shardings = tree_shardings(state_axes, new_mesh)
+    state, manifest = ckpt_mod.restore_checkpoint(
+        ckpt_dir, step=step, target=state_like, shardings=shardings)
+    return state, manifest

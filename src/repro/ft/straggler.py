@@ -1,0 +1,58 @@
+"""Straggler detection: per-step wall-time EWMA + deviation policy.
+
+On a real pod the per-step time is a barrier over all hosts, so one slow
+host inflates every step it participates in; the monitor distinguishes a
+*step spike* (one-off, e.g. checkpoint write) from a *sustained straggle*
+(failing HBM / thermal throttle) by counting consecutive flags, and its
+``action()`` feeds the launcher's policy: log → re-shard data away from
+the slow host → evict + elastic re-mesh (ft/elastic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.05            # EWMA smoothing
+    sigma_thresh: float = 3.0      # flag beyond mean + k·std
+    sustain_steps: int = 5         # consecutive flags → sustained
+    warmup: int = 10               # steps before flagging starts
+
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    consecutive: int = 0
+
+    def record(self, step_time: float) -> str:
+        """Feed one step's wall time; returns "ok" | "spike" | "sustained".
+
+        Flagged samples do NOT update the EWMA — otherwise a sustained
+        straggle drags the baseline up until it stops being detected.
+        """
+        self.n += 1
+        if self.n == 1:
+            self.mean = step_time
+            return "ok"
+
+        std = max(self.var ** 0.5, 0.05 * max(self.mean, 1e-9))
+        flagged = (self.n > self.warmup
+                   and step_time > self.mean + self.sigma_thresh * std)
+        if flagged:
+            self.consecutive += 1
+            return ("sustained" if self.consecutive >= self.sustain_steps
+                    else "spike")
+
+        delta = step_time - self.mean
+        self.mean += self.alpha * delta
+        self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        self.consecutive = 0
+        return "ok"
+
+    def action(self, status: str) -> str:
+        return {
+            "ok": "none",
+            "spike": "log",
+            "sustained": "evict-and-remesh",
+        }[status]

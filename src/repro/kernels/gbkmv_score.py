@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: fused GB-KMV containment scoring (the paper's search
+hot loop, Algorithm 2 line 4).
+
+One sweep of the record-sketch matrix scores a whole *batch* of queries
+(beyond-paper: the paper scores one query per index pass; batching divides
+the HBM-bound roofline term by the query-batch size Gq — see
+EXPERIMENTS.md §Perf).
+
+Per (record block, query) the kernel fuses:
+  1. bitmap-buffer intersection: popcount(x_buf & q_buf)          (exact part)
+  2. pairwise threshold      : τ_pair = min(x_thresh, q_thresh)
+  3. live counts             : n_x, n_q = #values ≤ τ_pair
+  4. sorted-set membership   : K∩ via chunked equality-broadcast —
+       both rows are sorted *and duplicate-free* (the hash is a uint32
+       bijection), so equality-count is the exact intersection size; no
+       gather/binary-search needed (TPU VPU-friendly, DESIGN.md §3)
+  5. KMV estimator           : D̂∩ = K∩/k · (k-1)/U_(k)           (Eq. 25)
+  6. score                   : (popcount + D̂∩) / |Q|             (Eq. 27)
+
+Layout: records blocked over the grid; the query pack (values, thresholds,
+buffers, sizes) is small and resident in VMEM for every block.
+
+VMEM budget (defaults BM=8, C≤2048, Gq≤16, QCHUNK=128):
+  x block 8·C·4 ≤ 64 KiB; equality intermediate 8·C·128 ≤ 2 MiB bool;
+  well under the ~16 MiB/core VMEM of TPU v5e.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import TWO32
+
+# Lane-aligned chunk of query sketch values per membership step.
+QCHUNK = 128
+
+
+def _score_kernel(
+    x_values_ref,   # u32[BM, C]
+    x_thresh_ref,   # u32[BM, 1]
+    x_buf_ref,      # u32[BM, W]
+    q_values_ref,   # u32[Gq, Cq]
+    q_thresh_ref,   # u32[Gq, 1]
+    q_buf_ref,      # u32[Gq, W]
+    q_sizes_ref,    # i32[Gq, 1]
+    out_ref,        # f32[BM, Gq]
+):
+    xv = x_values_ref[...]                    # [BM, C]
+    xt = x_thresh_ref[...][:, 0]              # [BM]
+    xb = x_buf_ref[...]                       # [BM, W]
+    bm, c = xv.shape
+    gq, cq = q_values_ref.shape
+
+    for g in range(gq):                       # static unroll over query batch
+        qv = q_values_ref[g, :]               # [Cq]
+        qt = q_thresh_ref[g, 0]
+        qb = q_buf_ref[g, :]
+        qs = q_sizes_ref[g, 0]
+
+        tau = jnp.minimum(xt, qt)             # [BM]
+        live_x = xv <= tau[:, None]           # [BM, C]  (PAD rows excluded)
+        nx = jnp.sum(live_x.astype(jnp.int32), axis=-1)
+        live_q = qv[None, :] <= tau[:, None]  # [BM, Cq]
+        nq = jnp.sum(live_q.astype(jnp.int32), axis=-1)
+
+        # K∩: x values present in the query sketch, chunked over Cq so the
+        # [BM, C, QCHUNK] equality intermediate stays VMEM-small.
+        def mem_body(i, member):
+            chunk = lax.dynamic_slice(qv, (i * QCHUNK,), (QCHUNK,))
+            hit = jnp.any(xv[:, :, None] == chunk[None, None, :], axis=-1)
+            return member | hit
+
+        member = lax.fori_loop(
+            0, cq // QCHUNK, mem_body, jnp.zeros((bm, c), jnp.bool_)
+        )
+        kcap = jnp.sum((member & live_x).astype(jnp.int32), axis=-1)
+        k = nx + nq - kcap
+
+        # U_(k): largest live hash on either side.
+        ux = jnp.max(jnp.where(live_x, xv, jnp.uint32(0)), axis=-1)
+        uq = jnp.max(jnp.where(live_q, qv[None, :], jnp.uint32(0)), axis=-1)
+        u = jnp.maximum(ux, uq)
+        u_unit = (u.astype(jnp.float32) + 1.0) / TWO32
+
+        kf = k.astype(jnp.float32)
+        d_hat = (kcap.astype(jnp.float32) / jnp.maximum(kf, 1.0)) * (
+            (kf - 1.0) / jnp.maximum(u_unit, 1e-30)
+        )
+        d_hat = jnp.where((k >= 2) & (kcap >= 1), d_hat,
+                          jnp.where(kcap >= 1, kcap.astype(jnp.float32), 0.0))
+
+        o1 = jnp.sum(lax.population_count(xb & qb[None, :]), axis=-1)
+        score = (o1.astype(jnp.float32) + d_hat) / jnp.maximum(
+            qs.astype(jnp.float32), 1.0)
+        out_ref[:, g] = score
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "interpret")
+)
+def gbkmv_score(
+    x_values, x_thresh, x_buf,
+    q_values, q_thresh, q_buf, q_sizes,
+    *, block_m: int = 8, interpret: bool = False,
+):
+    """pallas_call wrapper. Shapes as in kernels/ref.py:gbkmv_score_ref.
+
+    Preconditions (ops.py enforces by padding): M % block_m == 0,
+    Cq % QCHUNK == 0, W >= 1.
+    """
+    m, c = x_values.shape
+    gq, cq = q_values.shape
+    w = x_buf.shape[1]
+    assert m % block_m == 0 and cq % QCHUNK == 0 and w >= 1
+
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, w), lambda i: (i, 0)),
+            pl.BlockSpec((gq, cq), lambda i: (0, 0)),
+            pl.BlockSpec((gq, 1), lambda i: (0, 0)),
+            pl.BlockSpec((gq, w), lambda i: (0, 0)),
+            pl.BlockSpec((gq, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, gq), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, gq), jnp.float32),
+        interpret=interpret,
+    )(x_values, x_thresh, x_buf, q_values, q_thresh, q_buf, q_sizes)

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused fingerprint hash + global-τ filter
+(GB-KMV construction hot loop, Algorithm 1 line 6).
+
+Element ids stream through in lane-aligned 2D tiles; each tile is mixed
+(murmur3 fmix32) and compared against the global threshold in registers —
+one HBM read (ids) and two writes (hashes, keep-mask) per element, no
+intermediate materialization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _hash_kernel(seed_ref, tau_ref, ids_ref, h_ref, keep_ref):
+    x = ids_ref[...].astype(jnp.uint32)
+    x = x + jnp.uint32(0x9E3779B9) * (seed_ref[0, 0].astype(jnp.uint32) + jnp.uint32(1))
+    h = x ^ (x >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    h_ref[...] = h
+    keep_ref[...] = (h <= tau_ref[0, 0]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def hash_threshold(ids2d, seed, tau, *, block_rows: int = 8, interpret: bool = False):
+    """ids2d u32[R, 128] → (hashes u32[R, 128], keep i32[R, 128]).
+
+    ops.py reshapes/pads flat id streams into the [R, LANES] view.
+    """
+    r, l = ids2d.shape
+    assert l == LANES and r % block_rows == 0
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    tau_arr = jnp.asarray(tau, jnp.uint32).reshape(1, 1)
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _hash_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, LANES), jnp.uint32),
+            jax.ShapeDtypeStruct((r, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(seed_arr, tau_arr, ids2d)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` layer).
+
+These are the semantics of record; kernel sweeps assert allclose against
+them. They delegate to the same estimator math the core library uses
+(repro.core.estimators), so kernel == core == paper formulas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import buffer_intersection, gkmv_pair_estimate
+from repro.core.hashing import TWO32
+
+
+def gbkmv_score_ref(
+    x_values, x_thresh, x_buf,
+    q_values, q_thresh, q_buf, q_sizes,
+):
+    """Containment scores f32[M, Gq] for every (record, query) pair.
+
+    Shapes: x_values u32[M, C], x_thresh u32[M], x_buf u32[M, W],
+            q_values u32[Gq, Cq], q_thresh u32[Gq], q_buf u32[Gq, W],
+            q_sizes i32[Gq].
+    """
+    def one_query(qv, qt, qb, qs):
+        d_hat, _, _ = gkmv_pair_estimate(qv, None, qt, x_values, None, x_thresh)
+        o1 = buffer_intersection(qb, x_buf)
+        return (o1.astype(jnp.float32) + d_hat) / jnp.maximum(
+            qs.astype(jnp.float32), 1.0)
+
+    scores = jax.vmap(one_query)(q_values, q_thresh, q_buf, q_sizes)  # [Gq, M]
+    return scores.T
+
+
+def hash_threshold_ref(ids, seed, tau):
+    """(hashes u32[N], kept bool[N]): murmur-mix then global-τ filter."""
+    x = jnp.asarray(ids).astype(jnp.uint32)
+    x = x + jnp.uint32(0x9E3779B9) * jnp.uint32(seed + 1)
+    h = x ^ (x >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h, h <= jnp.uint32(tau)

@@ -1,0 +1,354 @@
+"""Cell builders: (arch × input-shape × mesh) → lowerable step function.
+
+A *cell* bundles everything ``jax.jit(...).lower(...)`` needs:
+    fn             — the step callable (train_step / prefill / decode /
+                     serve forward / retrieval scoring)
+    args           — pytree of ShapeDtypeStructs (no allocation)
+    in_shardings   — matching NamedSharding pytree
+    out_shardings  — pinned for train (params/opt stay put), else None
+    donate         — arg indices donated (train: params + opt state)
+
+All sharding decisions route through parallel/sharding.py logical-axis
+rules; per-cell overrides (the §Perf hillclimb knob) come in via ``rules``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.shapes import FAMILY_SHAPES
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tfm
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    named_sharding_for,
+    tree_shardings_for,
+)
+from repro.train import optim, steps
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any          # None → XLA's choice
+    donate_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+    rules: Any = None           # trace-time logical-axis override
+
+    def lower(self):
+        from repro.parallel.sharding import rules_scope
+
+        jit = jax.jit(self.fn,
+                      in_shardings=self.in_shardings,
+                      out_shardings=self.out_shardings,
+                      donate_argnums=self.donate_argnums)
+        # The rules must be live while TRACING so in-model constrain()
+        # calls resolve against the variant mapping, not the defaults.
+        with rules_scope(self.rules):
+            return jit.lower(*self.args)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _axes_shardings(abstract_tree, axes_tree, mesh, rules):
+    return tree_shardings_for(abstract_tree, axes_tree, mesh, rules)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    """Round a data count up so every mesh axis divides (the data pipeline
+    pads with masked/no-op entries; dry-run cells record the true count in
+    meta)."""
+    return -(-n // mult) * mult
+
+
+# Per-arch training knobs (microbatches keep per-device transients sane;
+# bf16 moments + bf16 grad accumulation keep the 400B MoE inside
+# 16 GB/chip — DESIGN.md §6). MoE archs run micro=4: the FSDP expert-
+# weight re-gather scales with the microbatch count (§Perf cells B/F;
+# micro=2 would shave another ~15 % but busts the HBM budget).
+LM_TRAIN_MICRO = {
+    "llama4-maverick-400b-a17b": 4,
+    "moonshot-v1-16b-a3b": 4,
+}
+LM_MOMENT_DTYPE = {
+    "llama4-maverick-400b-a17b": "bfloat16",
+}
+LM_ACCUM_DTYPE = {
+    "llama4-maverick-400b-a17b": "bfloat16",
+}
+DEFAULT_LM_MICRO = 8
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_abstract_params(cfg):
+    return jax.eval_shape(lambda: tfm.init(jax.random.PRNGKey(0), cfg))
+
+
+def _lm_cache_abstract(cfg, batch: int, seq: int):
+    """KV cache SDS tree matching transformer.prefill's stacking."""
+    nd, nm, interleaved = cfg.layer_plan()
+    dt = jnp.dtype(cfg.dtype)
+    kv = lambda n: (_sds((n, batch, seq, cfg.n_kv_heads, cfg.hd), dt),
+                    _sds((n, batch, seq, cfg.n_kv_heads, cfg.hd), dt))
+    if interleaved:
+        n_pairs = cfg.n_layers // cfg.moe.every
+        return {"dense": kv(n_pairs), "moe": kv(n_pairs)}
+    out = {}
+    if nd:
+        out["dense"] = kv(nd)
+    if nm:
+        out["moe"] = kv(nm)
+    return out
+
+
+def _lm_cache_axes(cfg):
+    ax = tfm.cache_axes(cfg)
+    tree = _lm_cache_abstract(cfg, 1, 1)
+    return jax.tree.map(lambda _: ax, tree)
+
+
+def _lm_cell(arch, shape_id, spec, mesh, rules, overrides=None) -> Cell:
+    overrides = overrides or {}
+    mod = registry.get_module(arch)
+    cfg = mod.config()
+    if "cfg_replace" in overrides:
+        cfg = dataclasses.replace(cfg, **overrides["cfg_replace"])
+    params = _lm_abstract_params(cfg)
+    p_axes = tfm.param_axes(cfg)
+    p_sh = _axes_shardings(params, p_axes, mesh, rules)
+    b, s = spec["batch"], spec["seq"]
+
+    if spec["kind"] == "train":
+        ocfg = optim.OptConfig(
+            moment_dtype=LM_MOMENT_DTYPE.get(arch, "float32"))
+        opt = jax.eval_shape(lambda: optim.init(params, ocfg))
+        o_sh = _axes_shardings(opt, optim.opt_state_axes(p_axes), mesh, rules)
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        b_sh = _axes_shardings(
+            batch, {"tokens": ("batch", None), "labels": ("batch", None)},
+            mesh, rules)
+        micro = overrides.get("microbatches",
+                              LM_TRAIN_MICRO.get(arch, DEFAULT_LM_MICRO))
+        fn = steps.make_train_step(
+            functools.partial(_lm_loss, cfg=cfg), ocfg, microbatches=micro,
+            accum_dtype=LM_ACCUM_DTYPE.get(arch, "float32"))
+        return Cell(arch, shape_id, fn, (params, opt, batch),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None),
+                    donate_argnums=(0, 1),
+                    meta={"microbatches": micro, "global_batch": b, "seq": s})
+
+    if spec["kind"] == "prefill":
+        tokens = _sds((b, s), jnp.int32)
+        t_sh = named_sharding_for((b, s), ("batch", None), mesh, rules)
+        fn = functools.partial(_lm_prefill, cfg=cfg)
+        return Cell(arch, shape_id, fn, (params, tokens), (p_sh, t_sh), None,
+                    meta={"global_batch": b, "seq": s})
+
+    assert spec["kind"] == "decode"
+    caches = _lm_cache_abstract(cfg, b, s)
+    c_sh = _axes_shardings(caches, _lm_cache_axes(cfg), mesh, rules)
+    token = _sds((b, 1), jnp.int32)
+    lengths = _sds((b,), jnp.int32)
+    tok_sh = named_sharding_for((b, 1), ("batch", None), mesh, rules)
+    len_sh = named_sharding_for((b,), ("batch",), mesh, rules)
+    fn = functools.partial(_lm_decode, cfg=cfg)
+    # Caches are donated (in-place update) and must come back unmoved.
+    return Cell(arch, shape_id, fn, (params, caches, token, lengths),
+                (p_sh, c_sh, tok_sh, len_sh), (None, c_sh, None),
+                donate_argnums=(1,),
+                meta={"global_batch": b, "kv_seq": s})
+
+
+def _lm_loss(params, batch, cfg):
+    return tfm.loss_fn(params, batch, cfg)
+
+
+def _lm_prefill(params, tokens, cfg):
+    return tfm.prefill(params, tokens, cfg)
+
+
+def _lm_decode(params, caches, token, lengths, cfg):
+    logits, new_caches, new_len = tfm.decode_step(
+        params, caches, token, lengths, cfg)
+    return logits, new_caches, new_len
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch, shape_id, spec, mesh, rules, overrides=None) -> Cell:
+    mod = registry.get_module(arch)
+    cfg = mod.config(d_feat=spec["d_feat"], n_classes=spec["n_classes"])
+    params = jax.eval_shape(lambda: gnn_mod.init(jax.random.PRNGKey(0), cfg))
+    p_axes = gnn_mod.param_axes(cfg)
+    p_sh = _axes_shardings(params, p_axes, mesh, rules)
+    ocfg = optim.OptConfig()
+    opt = jax.eval_shape(lambda: optim.init(params, ocfg))
+    o_sh = _axes_shardings(opt, optim.opt_state_axes(p_axes), mesh, rules)
+    n_dev = mesh.devices.size
+
+    if spec["kind"] == "full":
+        # Node/edge counts padded to the mesh size; the pipeline pads with
+        # masked self-loop edges / mask-0 nodes (data/graphs.py).
+        nn = _pad_to(spec["n_nodes"], n_dev)
+        ne = _pad_to(spec["n_edges"], n_dev)
+        batch = {"feats": _sds((nn, spec["d_feat"]), jnp.float32),
+                 "edges": _sds((ne, 2), jnp.int32),
+                 "labels": _sds((nn,), jnp.int32),
+                 "mask": _sds((nn,), jnp.float32)}
+        b_axes = {"feats": ("nodes", None), "edges": ("edges", None),
+                  "labels": ("nodes",), "mask": ("nodes",)}
+        loss = gnn_mod.loss_full
+    elif spec["kind"] == "sampled":
+        bn = spec["batch_nodes"]
+        f1, f2 = spec["fanout"]
+        d = spec["d_feat"]
+        batch = {"seed_feats": _sds((bn, d), jnp.float32),
+                 "h1": _sds((bn, f1, d), jnp.float32),
+                 "h2": _sds((bn, f1, f2, d), jnp.float32),
+                 "labels": _sds((bn,), jnp.int32)}
+        b_axes = {"seed_feats": ("batch", None), "h1": ("batch", None, None),
+                  "h2": ("batch", None, None, None), "labels": ("batch",)}
+        loss = gnn_mod.loss_sampled
+    else:  # molecule
+        bsz, n = spec["batch"], spec["n_nodes"]
+        batch = {"feats": _sds((bsz, n, spec["d_feat"]), jnp.float32),
+                 "adj": _sds((bsz, n, n), jnp.float32),
+                 "labels": _sds((bsz,), jnp.int32)}
+        b_axes = {"feats": ("batch", None, None), "adj": ("batch", None, None),
+                  "labels": ("batch",)}
+        loss = gnn_mod.loss_molecule
+
+    b_sh = _axes_shardings(batch, b_axes, mesh, rules)
+    fn = steps.make_train_step(functools.partial(loss, cfg=cfg), ocfg)
+    return Cell(arch, shape_id, fn, (params, opt, batch),
+                (p_sh, o_sh, b_sh), (p_sh, o_sh, None),
+                donate_argnums=(0, 1), meta=dict(spec))
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_spec(cfg, b: int):
+    if cfg.kind in ("fm", "wide_deep"):
+        batch = {"ids": _sds((b, cfg.n_fields), jnp.int32),
+                 "labels": _sds((b,), jnp.float32)}
+        axes = {"ids": ("batch", None), "labels": ("batch",)}
+    else:
+        batch = {"hist_ids": _sds((b, cfg.seq_len), jnp.int32),
+                 "hist_mask": _sds((b, cfg.seq_len), jnp.bool_),
+                 "target_ids": _sds((b,), jnp.int32),
+                 "labels": _sds((b,), jnp.float32)}
+        axes = {"hist_ids": ("batch", None), "hist_mask": ("batch", None),
+                "target_ids": ("batch",), "labels": ("batch",)}
+    return batch, axes
+
+
+def _recsys_cell(arch, shape_id, spec, mesh, rules, overrides=None) -> Cell:
+    mod = registry.get_module(arch)
+    cfg = mod.config()
+    params = jax.eval_shape(lambda: recsys_mod.init(jax.random.PRNGKey(0), cfg))
+    p_axes = recsys_mod.param_axes(cfg)
+    p_sh = _axes_shardings(params, p_axes, mesh, rules)
+
+    if spec["kind"] == "train":
+        ocfg = optim.OptConfig()
+        opt = jax.eval_shape(lambda: optim.init(params, ocfg))
+        o_sh = _axes_shardings(opt, optim.opt_state_axes(p_axes), mesh, rules)
+        batch, b_axes = _recsys_batch_spec(cfg, spec["batch"])
+        b_sh = _axes_shardings(batch, b_axes, mesh, rules)
+        fn = steps.make_train_step(
+            functools.partial(recsys_mod.loss_fn, cfg=cfg), ocfg)
+        return Cell(arch, shape_id, fn, (params, opt, batch),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None),
+                    donate_argnums=(0, 1), meta=dict(spec))
+
+    if spec["kind"] == "serve":
+        batch, b_axes = _recsys_batch_spec(cfg, spec["batch"])
+        batch.pop("labels")
+        b_axes.pop("labels")
+        b_sh = _axes_shardings(batch, b_axes, mesh, rules)
+        fn = functools.partial(_recsys_forward, cfg=cfg)
+        return Cell(arch, shape_id, fn, (params, batch), (p_sh, b_sh), None,
+                    meta=dict(spec))
+
+    assert spec["kind"] == "retrieval"
+    user, u_axes = _recsys_batch_spec(cfg, spec["batch"])
+    user.pop("labels")
+    u_axes.pop("labels")
+    if cfg.kind in ("fm", "wide_deep"):
+        # The candidate occupies the item field: user context is F-1 wide.
+        user["ids"] = _sds((spec["batch"], cfg.n_fields - 1), jnp.int32)
+    u_sh = _axes_shardings(user, u_axes, mesh, rules)
+    # Candidates shard over the whole mesh (like sketch-index records);
+    # count padded to the mesh size (serving pads with a sentinel id).
+    nc = _pad_to(spec["n_candidates"], mesh.devices.size)
+    cand = _sds((nc,), jnp.int32)
+    c_sh = named_sharding_for((nc,), ("records",), mesh, rules)
+    fn = functools.partial(_recsys_retrieval, cfg=cfg)
+    return Cell(arch, shape_id, fn, (params, user, cand),
+                (p_sh, u_sh, c_sh), None,
+                meta={**spec, "n_candidates_padded": nc})
+
+
+def _recsys_forward(params, batch, cfg):
+    return recsys_mod.forward(params, batch, cfg)
+
+
+def _recsys_retrieval(params, user, cand, cfg):
+    return recsys_mod.retrieval_scores(params, user, cand, cfg, chunked=False)
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+_FAMILY_BUILDERS = {
+    "lm": _lm_cell,
+    "gnn": _gnn_cell,
+    "recsys": _recsys_cell,
+}
+
+
+def build_cell(arch: str, shape_id: str, mesh: Mesh, rules=None,
+               overrides=None) -> Cell:
+    """``rules`` overrides the logical-axis → mesh-axis mapping (the §Perf
+    hillclimb knob); ``overrides`` carries per-cell knobs (microbatches,
+    cfg_replace)."""
+    fam = registry.family(arch)
+    spec = FAMILY_SHAPES[fam][shape_id]
+    rules = rules or DEFAULT_RULES
+    cell = _FAMILY_BUILDERS[fam](arch, shape_id, spec, mesh, rules,
+                                 overrides=overrides)
+    cell.rules = rules
+    return cell
+
+
+def all_cells():
+    """The 40 assigned (arch × shape) pairs."""
+    out = []
+    for arch in registry.ARCH_IDS:
+        for shape_id in FAMILY_SHAPES[registry.family(arch)]:
+            out.append((arch, shape_id))
+    return out

@@ -1,0 +1,207 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract memory / cost / collective analyses.
+
+MUST be run as a script or module entry; the two lines below must execute
+before ANY jax import (jax locks the device count at first init).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+# TPU v5e roofline constants (DESIGN.md §8).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device result bytes of every collective op in optimized HLO.
+
+    Counts ``<op>`` and ``<op>-start`` (async) lines, never ``-done``.
+    For all-reduce result==operand bytes; for all-gather the result is the
+    gathered (larger) buffer — a conservative upper bound on wire bytes.
+    """
+    out = {k: 0 for k in _COLL_KINDS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+                      r"([\w-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLL_KINDS and not op.endswith("-done"):
+            out[base] += _shape_bytes(m.group(1))
+            out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool, out_dir: str,
+             rules=None, overrides=None, tag: str = "") -> dict:
+    import jax
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_id, "mesh": mesh_name,
+           "chips": int(n_chips), "ok": False, "tag": tag}
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_id, mesh, rules=rules,
+                          overrides=overrides)
+        with mesh:
+            lowered = cell.lower()
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis()
+        flops = float(ca.get("flops", 0.0))
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+        rec["cost"] = {"flops": flops, "bytes_accessed": bytes_acc}
+
+        hlo_text = compiled.as_text()
+        coll = collective_bytes(hlo_text)
+        rec["collectives"] = coll
+
+        rec["roofline"] = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll["total"] / ICI_BW,
+        }
+        dom = max(rec["roofline"], key=rec["roofline"].get)
+        rec["roofline"]["dominant"] = dom
+        rec["meta"] = {k: v for k, v in cell.meta.items()
+                       if isinstance(v, (int, float, str, bool, tuple, list))}
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    os.makedirs(out_dir, exist_ok=True)
+    stem = f"{arch}__{shape_id}__{mesh_name}" + (f"__{tag}" if tag else "")
+    with open(os.path.join(out_dir, stem + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["ok"]:
+        # Persist optimized HLO for the roofline multiplicity parser
+        # (benchmarks/roofline.py re-weights while-loop bodies).
+        import gzip
+        with gzip.open(os.path.join(out_dir, stem + ".hlo.gz"), "wt") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def _spawn(arch, shape_id, multi_pod, out_dir, timeout=1800):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape_id, "--out", out_dir]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout, env=env)
+        return r.returncode, (r.stdout + r.stderr)[-800:]
+    except subprocess.TimeoutExpired:
+        return -1, "TIMEOUT"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every cell in subprocesses")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        sys.path.insert(0, "src")
+        from repro.launch.cells import all_cells
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = 0
+        for arch, shape_id in all_cells():
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_id}__{mesh_name}.json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            print(f"SKIP (done) {arch} {shape_id} {mesh_name}")
+                            continue
+                t0 = time.time()
+                code, tail = _spawn(arch, shape_id, mp, args.out)
+                ok = False
+                if os.path.exists(path):
+                    with open(path) as f:
+                        ok = json.load(f).get("ok", False)
+                status = "OK" if ok else f"FAIL(rc={code})"
+                print(f"{status:10s} {arch:28s} {shape_id:15s} {mesh_name} "
+                      f"{time.time()-t0:7.1f}s")
+                if not ok:
+                    failures += 1
+                    print("  tail:", tail.replace("\n", " | ")[-400:])
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.out)
+    print(json.dumps(rec, indent=1))
+    sys.exit(0 if rec["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state).
+
+Target: TPU v5e pods. Single-pod = 16×16 = 256 chips (data, model);
+multi-pod = 2×16×16 = 512 chips (pod, data, model) — the "pod" axis
+crosses the slow DCI links and carries only the DP gradient reduction
+(optionally int8-compressed, parallel/compression.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Mesh over the first prod(shape) visible devices."""
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — the dry-run "
+            "launcher must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import (launch/dryrun.py does)")
+    return jax.make_mesh(shape, axes, devices=np.array(devs[:n]),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def host_mesh(model: int = 1) -> Mesh:
+    """1×model CPU mesh for tests/examples on the single real device."""
+    return make_mesh((1, model), ("data", "model"))

@@ -1,0 +1,329 @@
+"""§Perf hillclimb runner: named sharding/knob variants for the three
+chosen cells (+ the paper's own sketch-serving cell), each re-lowered and
+re-analysed per the hypothesis → change → measure → validate loop.
+
+MUST run as a fresh process (512-device flag below, before any jax import).
+
+    PYTHONPATH=src python -m repro.launch.perf --cell qwen-train --variant dp256
+    PYTHONPATH=src python -m repro.launch.perf --all
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+from repro.parallel.sharding import DEFAULT_RULES
+
+OUT = "reports/perf"
+
+
+def _rules(**kw):
+    r = dict(DEFAULT_RULES)
+    r.update(kw)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# variant registry — each entry: (arch, shape, rules, overrides)
+# Hypotheses are recorded in EXPERIMENTS.md §Perf; this file is the
+# executable record of the changes.
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    # ---- cell A: qwen3-0.6b × train_4k (worst LM roofline fraction) ----
+    # H-A1: at d_model=1024, TP=16 all-reduces dwarf compute; converting
+    # the model axis to extra data parallelism (batch over all axes,
+    # vocab-TP kept for the unembed/xent) removes per-layer collectives.
+    "qwen-train:baseline": ("qwen3-0.6b", "train_4k", None, None),
+    "qwen-train:dp256": (
+        "qwen3-0.6b", "train_4k",
+        _rules(batch=(("pod", "data", "model"),), heads=(), kv_heads=(),
+               ff=()),
+        None),
+    # H-A2: with 1 sequence/device there is nothing left to microbatch;
+    # micro=1 cuts the FSDP weight re-gather ×8 → ×1.
+    "qwen-train:dp256-micro1": (
+        "qwen3-0.6b", "train_4k",
+        _rules(batch=(("pod", "data", "model"),), heads=(), kv_heads=(),
+               ff=()),
+        {"microbatches": 1}),
+    # H-A3 (A2 refuted by measurement: vocab-TP over "model" fights
+    # batch-over-"model" on the logits → 19s of resharding gathers):
+    # un-shard the vocab too; the replicated unembed is only 311 MB and
+    # the xent becomes fully local.
+    "qwen-train:dp256-micro1-novocab": (
+        "qwen3-0.6b", "train_4k",
+        _rules(batch=(("pod", "data", "model"),), heads=(), kv_heads=(),
+               ff=(), vocab=()),
+        {"microbatches": 1}),
+    # Control: isolate the micro effect under the baseline TP sharding.
+    "qwen-train:micro1": ("qwen3-0.6b", "train_4k", None,
+                          {"microbatches": 1}),
+    # H-A4 (A3 refuted: the 19s gather is the ACTIVATIONS — with batch on
+    # ("data","model") and weights FSDP'd on "data", SPMD gathers x
+    # instead of the weight slice): a 0.6B model doesn't need FSDP at
+    # all on 16 GB chips — replicate weights+moments (≈7 GB), keep pure
+    # DP-256; the only collective left is the gradient all-reduce.
+    "qwen-train:pure-dp256": (
+        "qwen3-0.6b", "train_4k",
+        _rules(batch=(("pod", "data", "model"),), heads=(), kv_heads=(),
+               ff=(), vocab=(), embed=(), expert_embed=()),
+        {"microbatches": 1}),
+
+    # ---- cell B: llama4 × train_4k (most collective-bound) ----
+    # H-B1: collective term ∝ microbatches (FSDP expert-weight re-gather
+    # per microbatch × {fwd, remat, bwd}); micro 8→4 halves it, carry
+    # memory doubles (still fits with bf16 moments).
+    "llama4-train:baseline": ("llama4-maverick-400b-a17b", "train_4k",
+                              None, None),
+    "llama4-train:micro4": ("llama4-maverick-400b-a17b", "train_4k", None,
+                            {"microbatches": 4}),
+    # H-B2: micro 8→2 → gather tax ÷4.
+    "llama4-train:micro2": ("llama4-maverick-400b-a17b", "train_4k", None,
+                            {"microbatches": 2}),
+    # H-B3: move the expert FSDP shard from d_model to d_ff — weights
+    # stay resident per-(expert-shard, ff-slice); whichever side XLA then
+    # gathers (tokens ≈1.3 GB/layer vs weights ≈5.6 GB/layer) should cut
+    # the gather term ~4×.
+    "llama4-train:expert-ff-shard": (
+        "llama4-maverick-400b-a17b", "train_4k",
+        _rules(expert_embed=(), expert_ff=("data",)),
+        {"microbatches": 4}),
+    # H-B4: remat policy "dots" — saving GEMM outputs removes the
+    # backward recompute pass, i.e. one of the three weight-gather
+    # passes (-33% gather traffic) at the cost of activation memory.
+    "llama4-train:micro4-dots": (
+        "llama4-maverick-400b-a17b", "train_4k", None,
+        {"microbatches": 4, "cfg_replace": {"remat_policy": "dots"}}),
+
+    # ---- cell F (extra): moonshot × train_4k (collective-bound MoE,
+    # same FSDP-gather pattern as llama4 — apply the validated recipe) --
+    "moonshot-train:baseline": ("moonshot-v1-16b-a3b", "train_4k",
+                                None, None),
+    "moonshot-train:micro4": ("moonshot-v1-16b-a3b", "train_4k", None,
+                              {"microbatches": 4}),
+    "moonshot-train:micro2": ("moonshot-v1-16b-a3b", "train_4k", None,
+                              {"microbatches": 2}),
+
+    # ---- cell D (extra): qwen3 × long_500k (long-context decode) ----
+    # H-D1: with batch=1 the data axis is idle; sharding the KV sequence
+    # over BOTH axes (524288 % 256 == 0) cuts the per-device cache read
+    # 16× → memory term ~16× down.
+    "qwen-long:baseline": ("qwen3-0.6b", "long_500k", None, None),
+    "qwen-long:seq-2d": (
+        "qwen3-0.6b", "long_500k",
+        _rules(kv_seq=(("data", "model"),)), None),
+
+    # ---- cell E (extra): graphsage × ogb_products (collective-bound
+    # full-graph: edge-sharded scatter into node-sharded features) ----
+    # H-E1: shard the hidden feature dim over the (idle) model axis —
+    # every halo gather/scatter payload splits 16× (hidden 128 % 16 == 0;
+    # the input d_feat=100 dim stays unsharded via divisibility fallback).
+    "gnn-prod:baseline": ("graphsage-reddit", "ogb_products", None, None),
+    "gnn-prod:hidden-model": (
+        "graphsage-reddit", "ogb_products",
+        _rules(gnn_hidden=("model",)), None),
+    # H-E2: align edge shards with node shards (drop the model axis from
+    # edges) so scatter destinations are more local.
+    "gnn-prod:edges-data": (
+        "graphsage-reddit", "ogb_products",
+        _rules(edges=(("pod", "data"),)), None),
+
+    # ---- cell C: fm × retrieval_cand (paper-representative: candidate-
+    # set scoring ≈ containment retrieval; collective-bound) ----
+    # H-C1: the FM table is only 40 MB — vocab-sharding it buys nothing
+    # and costs an all-gather per lookup; replicating it zeroes the
+    # collective term (table placement policy: shard only when > HBM/8).
+    "fm-retr:baseline": ("fm", "retrieval_cand", None, None),
+    "fm-retr:replicated-table": (
+        "fm", "retrieval_cand", _rules(table_vocab=()), None),
+    # Same placement policy applied to the other collective-bound recsys
+    # serving cell (wide-deep table = 128 MB, still replicable).
+    "wd-bulk:baseline": ("wide-deep", "serve_bulk", None, None),
+    "wd-bulk:replicated-table": (
+        "wide-deep", "serve_bulk", _rules(table_vocab=()), None),
+}
+
+
+# ---------------------------------------------------------------------------
+# The paper's own serving cell: GB-KMV batched scoring on the production
+# mesh. m=1M records × capacity 64 (≈10% budget of a 640-element-average
+# corpus), query batch Gq swept — the §Perf query-batching knob: one sweep
+# of the sketch matrix amortized over Gq queries.
+# ---------------------------------------------------------------------------
+
+SKETCH_GQ = (1, 16, 128)
+
+
+def run_sketch_cell(gq: int):
+    import json as _json
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.dryrun import (collective_bytes, ICI_BW, HBM_BW,
+                                     PEAK_FLOPS)
+    from repro.launch.mesh import make_production_mesh
+    from repro.parallel.sharding import named_sharding_for
+    from repro.sketchindex.distributed import _scores_jnp
+
+    mesh = make_production_mesh()
+    m, cap, w, cq = 1_048_576, 64, 8, 64
+    args = {
+        "values": jax.ShapeDtypeStruct((m, cap), jnp.uint32),
+        "lengths": jax.ShapeDtypeStruct((m,), jnp.int32),
+        "thresh": jax.ShapeDtypeStruct((m,), jnp.uint32),
+        "buf": jax.ShapeDtypeStruct((m, w), jnp.uint32),
+        "q_values": jax.ShapeDtypeStruct((gq, cq), jnp.uint32),
+        "q_thresh": jax.ShapeDtypeStruct((gq,), jnp.uint32),
+        "q_buf": jax.ShapeDtypeStruct((gq, w), jnp.uint32),
+        "q_sizes": jax.ShapeDtypeStruct((gq,), jnp.int32),
+    }
+    rows = lambda s: named_sharding_for(s, ("records",) + (None,) * (len(s) - 1),
+                                        mesh)
+    rep = lambda s: named_sharding_for(s, (None,) * len(s), mesh)
+    shardings = {k: (rows(v.shape) if k in ("values", "lengths", "thresh",
+                                            "buf") else rep(v.shape))
+                 for k, v in args.items()}
+
+    def fn(values, lengths, thresh, buf, q_values, q_thresh, q_buf, q_sizes):
+        return _scores_jnp(values, lengths, thresh, buf,
+                           q_values, q_thresh, q_buf, q_sizes)
+
+    rec = {"arch": "gbkmv-index", "shape": f"serve_gq{gq}",
+           "mesh": "pod16x16", "chips": int(mesh.devices.size), "ok": False,
+           "tag": f"sketch_gq{gq}"}
+    t0 = _time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=tuple(
+            shardings[k] for k in args)).lower(*args.values())
+        compiled = lowered.compile()
+    rec["compile_s"] = round(_time.time() - t0, 2)
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec["memory"] = {"argument_bytes": int(ma.argument_size_in_bytes),
+                     "temp_bytes": int(ma.temp_size_in_bytes),
+                     "peak_bytes_est": int(ma.argument_size_in_bytes
+                                           + ma.output_size_in_bytes
+                                           + ma.temp_size_in_bytes)}
+    rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                   "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    rec["collectives"] = coll
+    rec["roofline"] = {
+        "compute_s": rec["cost"]["flops"] / PEAK_FLOPS,
+        "memory_s": rec["cost"]["bytes_accessed"] / HBM_BW,
+        "memory_s_per_query": rec["cost"]["bytes_accessed"] / HBM_BW / gq,
+        "collective_s": coll["total"] / ICI_BW,
+    }
+    rec["ok"] = True
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"gbkmv-index__serve_gq{gq}.json"), "w") as f:
+        _json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_variant(name: str):
+    from repro.launch.dryrun import run_cell
+
+    if name.startswith("sketch-serve:gq"):
+        return run_sketch_cell(int(name.split("gq")[1]))
+    arch, shape, rules, overrides = VARIANTS[name]
+    tag = name.replace(":", "_")
+    return run_cell(arch, shape, multi_pod=False, out_dir=OUT,
+                    rules=rules, overrides=overrides, tag=tag)
+
+
+def analyze(name: str) -> dict | None:
+    """Roofline terms of a finished variant (weighted HLO parse)."""
+    sys.path.insert(0, ".")
+    from benchmarks.hlo_parse import analyze_hlo_file
+
+    arch, shape, _, _ = VARIANTS[name]
+    tag = name.replace(":", "_")
+    stem = os.path.join(OUT, f"{arch}__{shape}__pod16x16__{tag}")
+    if not os.path.exists(stem + ".json"):
+        return None
+    with open(stem + ".json") as f:
+        rec = json.load(f)
+    if not rec.get("ok"):
+        return {"variant": name, "ok": False, "error": rec.get("error")}
+    w = analyze_hlo_file(stem + ".hlo.gz")
+    return {
+        "variant": name, "ok": True,
+        "compute_s": w["flops_weighted"] / 197e12,
+        "memory_s": w["bytes_weighted"] / 819e9,
+        "collective_s": w["collectives_weighted"]["total"] / 50e9,
+        "peak_gb": rec["memory"]["peak_bytes_est"] / 1e9,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+
+    if args.report:
+        print(f"{'variant':34s} {'compute':>9s} {'memory':>9s} "
+              f"{'collective':>11s} {'bound':>10s} {'peak':>7s}")
+        for name in VARIANTS:
+            r = analyze(name)
+            if r is None:
+                continue
+            if not r["ok"]:
+                print(f"{name:34s} ERROR {r['error'][:60]}")
+                continue
+            terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                     "collective": r["collective_s"]}
+            dom = max(terms, key=terms.get)
+            print(f"{name:34s} {r['compute_s']:9.3f} {r['memory_s']:9.3f} "
+                  f"{r['collective_s']:11.3f} {dom:>10s} {r['peak_gb']:6.1f}G")
+        for gq in SKETCH_GQ:
+            path = os.path.join(OUT, f"gbkmv-index__serve_gq{gq}.json")
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                rec = json.load(f)
+            rl = rec["roofline"]
+            print(f"{'sketch-serve:gq%d' % gq:34s} {rl['compute_s']:9.5f} "
+                  f"{rl['memory_s']:9.5f} {rl['collective_s']:11.5f} "
+                  f"{'memory':>10s}  per-query mem "
+                  f"{rl['memory_s_per_query']:.5f}s")
+        return
+
+    if args.all:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+        names = list(VARIANTS) + [f"sketch-serve:gq{g}" for g in SKETCH_GQ]
+        for name in names:
+            t0 = time.time()
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.perf", "--variant", name],
+                capture_output=True, text=True, env=env, timeout=1800)
+            ok = "OK" if r.returncode == 0 else "FAIL"
+            print(f"{ok:5s} {name:34s} {time.time()-t0:7.1f}s", flush=True)
+            if r.returncode:
+                print(r.stdout[-400:], r.stderr[-400:])
+        return
+
+    rec = run_variant(args.variant)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("traceback",)}, indent=1))
+    sys.exit(0 if rec["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

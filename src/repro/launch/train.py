@@ -1,0 +1,205 @@
+"""Production training driver: ``python -m repro.launch.train --arch <id>``.
+
+Wires every substrate together: config registry → model init (sharded) →
+AdamW → microbatched train step (pjit) → checkpoint/restart → straggler
+monitor → optional int8-compressed DP gradient sync (shard_map mode).
+
+On this CPU container run it with ``--reduced`` (smoke-scale configs);
+on a pod the same flags drive the full configs. Elastic restart: rerun
+with a different --mesh after a checkpoint exists — restore reshards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import synth
+from repro.data.pipeline import BatchCursor, dedup_corpus, token_batches
+from repro.ft import checkpoint as ckpt_mod
+from repro.ft.elastic import plan_remesh
+from repro.ft.straggler import StragglerMonitor
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as tfm
+from repro.parallel.sharding import tree_shardings_for
+from repro.train import optim, steps
+
+
+def parse_mesh(s: str):
+    dims = tuple(int(x) for x in s.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    return make_mesh(dims, axes)
+
+
+def _train_non_lm(args, fam: str):
+    """GNN / recsys training loops (synthetic data, same substrate:
+    AdamW + jit step + straggler monitor + checkpointing)."""
+    import functools
+
+    from repro.ft.straggler import StragglerMonitor
+
+    mod = registry.get_module(args.arch)
+    rng = np.random.default_rng(args.seed)
+    if fam == "gnn":
+        from repro.data.graphs import powerlaw_graph
+        from repro.models import gnn as gnn_mod
+
+        cfg = mod.reduced() if args.reduced else mod.config()
+        g = powerlaw_graph(n_nodes=300, n_edges=1500, d_feat=cfg.d_feat,
+                           n_classes=cfg.n_classes, seed=args.seed)
+        batch = {k: jnp.asarray(v) for k, v in g.items()}
+        params = gnn_mod.init(jax.random.PRNGKey(args.seed), cfg)
+        loss = functools.partial(gnn_mod.loss_full, cfg=cfg)
+        batch_fn = lambda step: batch                   # full-batch
+    else:
+        from repro.models import recsys as recsys_mod
+
+        cfg = mod.reduced() if args.reduced else mod.config()
+        params = recsys_mod.init(jax.random.PRNGKey(args.seed), cfg)
+        loss = functools.partial(recsys_mod.loss_fn, cfg=cfg)
+
+        def batch_fn(step):
+            r = np.random.default_rng(args.seed * 7919 + step)
+            b = args.batch
+            if cfg.kind in ("fm", "wide_deep"):
+                return {"ids": jnp.asarray(
+                            r.integers(0, cfg.vocab_rows, (b, cfg.n_fields)),
+                            jnp.int32),
+                        "labels": jnp.asarray(r.integers(0, 2, b), jnp.float32)}
+            return {"hist_ids": jnp.asarray(
+                        r.integers(0, cfg.vocab_rows, (b, cfg.seq_len)),
+                        jnp.int32),
+                    "hist_mask": jnp.asarray(r.integers(0, 2, (b, cfg.seq_len)),
+                                             bool),
+                    "target_ids": jnp.asarray(
+                        r.integers(0, cfg.vocab_rows, (b,)), jnp.int32),
+                    "labels": jnp.asarray(r.integers(0, 2, b), jnp.float32)}
+
+    ocfg = optim.OptConfig(lr=args.lr, warmup_steps=args.steps // 10 + 1,
+                           total_steps=args.steps)
+    opt_state = optim.init(params, ocfg)
+    step_fn = jax.jit(steps.make_train_step(loss, ocfg), donate_argnums=(0, 1))
+    mon = StragglerMonitor()
+    for step in range(args.steps):
+        t0 = time.time()
+        params, opt_state, met = step_fn(params, opt_state, batch_fn(step))
+        mon.record(time.time() - t0)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(met['loss']):.4f} "
+                  f"({(time.time()-t0)*1e3:.0f} ms)")
+    if args.ckpt_dir:
+        ckpt_mod.save_checkpoint(args.ckpt_dir, args.steps,
+                                 {"params": params, "opt": opt_state})
+    print(f"[train:{fam}] done; final loss {float(met['loss']):.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--mesh", default="1x1", help="e.g. 16x16 or 2x16x16")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--dedup", action="store_true",
+                    help="GB-KMV near-dup filter on the corpus first")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    fam = registry.family(args.arch)
+    if fam != "lm":
+        return _train_non_lm(args, fam)
+
+    mod = registry.get_module(args.arch)
+    cfg = mod.reduced() if args.reduced else mod.config()
+    mesh = parse_mesh(args.mesh)
+    print(f"[train] arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    plan = plan_remesh(mesh, args.batch * args.micro,
+                       per_device_batch=max(args.batch // max(
+                           mesh.shape.get("data", 1) * mesh.shape.get("pod", 1), 1), 1))
+    print(f"[train] remesh plan: {plan.notes}")
+
+    # --- data: synthetic corpus (+ optional GB-KMV dedup stage) ---
+    recs = synth.generate_dataset(m=200, n_elems=max(cfg.vocab - 1, 500),
+                                  alpha_freq=1.1, alpha_size=2.0,
+                                  size_min=32, size_max=256, seed=args.seed)
+    docs = [np.asarray(r) % cfg.vocab for r in recs]
+    if args.dedup:
+        kept, stats = dedup_corpus(docs, threshold=0.8)
+        print(f"[data] GB-KMV dedup: {stats}")
+        docs = [docs[i] for i in kept]
+    cursor = BatchCursor(seed=args.seed)
+    stream = token_batches(docs, args.batch, args.seq, cursor)
+
+    # --- state (sharded) ---
+    ocfg = optim.OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                           total_steps=args.steps)
+    p_axes = tfm.param_axes(cfg)
+    abstract = jax.eval_shape(lambda: tfm.init(jax.random.PRNGKey(args.seed), cfg))
+    p_sh = tree_shardings_for(abstract, p_axes, mesh)
+    with mesh:
+        params = jax.jit(lambda: tfm.init(jax.random.PRNGKey(args.seed), cfg),
+                         out_shardings=p_sh)()
+        opt_state = optim.init(params, ocfg)
+
+    start_step = 0
+    if args.resume and args.ckpt_dir and ckpt_mod.latest_step(args.ckpt_dir) is not None:
+        state, manifest = ckpt_mod.restore_checkpoint(
+            args.ckpt_dir, target={"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start_step = manifest["step"]
+        cursor.step = manifest["extra"].get("cursor_step", start_step)
+        print(f"[ckpt] resumed at step {start_step} (resharded onto this mesh)")
+
+    step_fn = jax.jit(
+        steps.make_train_step(
+            functools.partial(lambda p, b, c: tfm.loss_fn(p, b, c), c=cfg),
+            ocfg, microbatches=args.micro),
+        donate_argnums=(0, 1))
+
+    mon = StragglerMonitor()
+    with mesh:
+        for step in range(start_step, args.steps):
+            batch = next(stream)
+            t0 = time.time()
+            params, opt_state, met = step_fn(
+                params, opt_state,
+                {k: jnp.asarray(v) for k, v in batch.items()})
+            met = {k: float(v) for k, v in met.items()}
+            dt = time.time() - t0
+            status = mon.record(dt)
+            if status != "ok":
+                print(f"[straggler] step {step}: {status} "
+                      f"({dt:.2f}s vs mean {mon.mean:.2f}s) → {mon.action(status)}")
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {met['loss']:.4f} "
+                      f"gnorm {met['grad_norm']:.2f} {dt*1e3:.0f}ms")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt_mod.save_checkpoint(
+                    args.ckpt_dir, step + 1,
+                    {"params": params, "opt": opt_state},
+                    extra={"cursor_step": cursor.step, "seed": args.seed})
+    if args.ckpt_dir:
+        ckpt_mod.save_checkpoint(
+            args.ckpt_dir, args.steps, {"params": params, "opt": opt_state},
+            extra={"cursor_step": cursor.step, "seed": args.seed})
+        print(f"[ckpt] final checkpoint at step {args.steps}")
+    print("[train] done; final loss", met["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""GQA attention: chunked-causal (train/prefill), cached decode.
+
+Memory discipline for long context (DESIGN.md §4):
+  * train/prefill: ``lax.scan`` over query chunks with online softmax
+    (flash-attention algorithm in pure JAX) — peak score buffer is
+    [B, H, chunk_q, S] instead of [B, H, S, S];
+  * decode: one query token against a KV cache whose *sequence* dim may be
+    mesh-sharded ("kv_seq" logical axis) — the softmax reductions over the
+    sharded S lower to tiny all-reduces, giving sequence-parallel decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import _current_mesh, constrain
+
+NEG_INF = -2.0e38
+
+
+def _flat_heads(hq: int) -> bool:
+    """Score-layout choice (EXPERIMENTS.md §Perf cell B):
+
+    * flat [B,Hq,T,S] when Hq divides the model axis — heads shard
+      cleanly and the Hq↔(Hkv,G) reshape sits OUTSIDE the sharded region;
+    * grouped [B,Hkv,G,T,S] otherwise — XLA pads+gathers a reshaped
+      non-divisible head dim (measured 12.4 TB/device/step on llama4).
+    """
+    mesh = _current_mesh()
+    msize = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+    return hq % msize == 0
+
+
+def _gqa_scores(q, k):
+    """q [B,T,Hq,D], k [B,S,Hkv,D] -> GROUPED scores [B,Hkv,G,T,S] (f32).
+
+    Scores stay in the grouped layout end-to-end (softmax is over the
+    last axis either way). Reshaping Hkv·G ↔ (Hkv, G) between sharded ops
+    blocks SPMD propagation — XLA falls back to a full all-gather of the
+    [B,H,T,S] tensor per attention chunk (measured: 12.4 TB/device/step
+    on llama4 train_4k — EXPERIMENTS.md §Perf cell B).
+    """
+    b, t, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, t, hkv, g, d)
+    return jnp.einsum("bthgd,bshd->bhgts", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p [B,Hkv,G,T,S] (f32), v [B,S,Hkv,D] -> [B,T,Hq,D]."""
+    b, hkv, g, t, s = p.shape
+    o = jnp.einsum("bhgts,bshd->bthgd", p.astype(v.dtype), v)
+    return o.reshape(b, t, hkv * g, v.shape[3])
+
+
+def causal_attention(q, k, v, *, chunk_q: int = 512, scale: float | None = None):
+    """Causal self-attention, online-softmax over query chunks.
+
+    q [B,S,Hq,D], k/v [B,S,Hkv,D] -> [B,S,Hq,D].
+    """
+    b, s, hq, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    if s <= chunk_q:
+        scores = _gqa_scores(q * scale, k)       # [B,Hkv,G,S,S]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return _gqa_out(p, v)
+
+    assert s % chunk_q == 0, (s, chunk_q)
+    n_chunks = s // chunk_q
+    q_chunks = (q * scale).reshape(b, n_chunks, chunk_q, hq, d)
+    kpos = jnp.arange(s)
+
+    flat = _flat_heads(hq)
+
+    def body(_, qc_i):
+        qc, i = qc_i                                        # [B,cq,Hq,D]
+        scores = _gqa_scores(qc, k)                         # [B,Hkv,G,cq,S]
+        # Keep SPMD from replicating the scores transient inside the
+        # remat-recomputed backward: flat layout shards heads→model when
+        # Hq divides; grouped layout avoids the pad+gather otherwise.
+        if flat:
+            b_, hkv_, g_, t_, s_ = scores.shape
+            scores = scores.reshape(b_, hkv_ * g_, t_, s_)
+            scores = constrain(scores, ("batch", "heads", None, None))
+            scores = scores.reshape(b_, hkv_, g_, t_, s_)
+        else:
+            scores = constrain(scores,
+                               ("batch", "kv_heads", None, None, None))
+        qpos = i * chunk_q + jnp.arange(chunk_q)
+        mask = kpos[None, :] <= qpos[:, None]               # [cq, S]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return None, _gqa_out(p, v)                         # [B,cq,Hq,D]
+
+    # Remat per chunk: backward recomputes each chunk's [cq, S] scores
+    # instead of stacking them across the chunk scan (flash-attention
+    # memory discipline; the [B,Hq,cq,S] probs never persist).
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = lax.scan(body, None,
+                       (jnp.moveaxis(q_chunks, 1, 0), jnp.arange(n_chunks)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, d)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None):
+    """One-token decode vs a (possibly sequence-sharded) KV cache.
+
+    q [B,1,Hq,D]; k/v_cache [B,S,Hkv,D]; lengths i32[B] = live cache fill
+    (the new token is already written at index lengths-1).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    scores = _gqa_scores(q * scale, k_cache)               # [B,Hkv,G,1,S]
+    spos = jnp.arange(k_cache.shape[1])
+    mask = spos[None, :] < lengths[:, None]                # [B,S]
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(p, v_cache)                            # [B,1,Hq,D]

@@ -1,0 +1,78 @@
+"""Shared model substrate: norms, rotary embeddings, initializers, losses.
+
+Functional style throughout: params are nested dicts of jnp arrays; every
+model module exposes ``init(rng, cfg) -> params``, a matching
+``param_axes(cfg)`` tree of *logical* sharding axes (parallel/sharding.py),
+and pure ``apply`` functions. Layer stacks are scan-ready ([L, ...] leading
+dim) so compile size is O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32
+                                                ).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+#   mode "full":    rotate the whole head dim (llama / qwen style)
+#   mode "2d":      rotate only the first half of the head dim (chatglm's
+#                   2D-RoPE: half carries rotary position, half is NoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, rope_dim: int, base: float = 10000.0):
+    exponent = jnp.arange(0, rope_dim, 2, dtype=jnp.float32) / rope_dim
+    return 1.0 / (base ** exponent)                      # [rope_dim/2]
+
+
+def apply_rope(x, positions, mode: str = "full", base: float = 10000.0):
+    """x [..., T, H, D]; positions [..., T] int32."""
+    d = x.shape[-1]
+    rope_dim = d if mode == "full" else d // 2
+    inv = rope_frequencies(d, rope_dim, base)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., T, rope_dim/2]
+    sin = jnp.sin(ang)[..., :, None, :]                      # [..., T, 1, rd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+
+    rot, rest = x[..., :rope_dim], x[..., rope_dim:]
+    r1, r2 = jnp.split(rot, 2, axis=-1)
+    rotated = jnp.concatenate(
+        [r1 * cos - r2 * sin, r2 * cos + r1 * sin], axis=-1)
+    out = jnp.concatenate([rotated, rest], axis=-1) if rest.shape[-1] else rotated
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Token-mean xent; logits [..., V] (vocab may be mesh-sharded — the
+    reductions below lower to cheap all-reduces of [...]-shaped partials)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss.mean()
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

@@ -1,0 +1,63 @@
+"""Sparse-embedding substrate for the recsys family.
+
+JAX has no native EmbeddingBag and no CSR/CSC sparse (BCOO only), so the
+lookup path is built from first principles (kernel taxonomy §RecSys):
+
+  * ``embedding_lookup``   — plain row gather (``jnp.take``); the table's
+    vocab dim carries the "table_vocab" logical axis → row-sharded over
+    "model" at scale (XLA SPMD partitions the gather: local masked lookup
+    + all-reduce of the partial rows).
+  * ``embedding_bag``      — multi-hot / variable-length bags:
+    ``jnp.take`` + ``jax.ops.segment_sum`` over a flat (indices, segments)
+    stream — this IS the EmbeddingBag op, not a stub.
+
+Hashing multi-field categorical ids into one physical table keeps one big
+10⁶–10⁹-row tensor per model (realistic industrial layout) instead of 40
+small ones; field offsets de-alias the key spaces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup(table, ids):
+    """table [V, D] (vocab row-sharded); ids i32[...] -> [..., D]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table, indices, segments, num_segments: int, combiner: str = "sum"):
+    """EmbeddingBag from first principles: gather + segment-reduce.
+
+    Args:
+      table:        [V, D]
+      indices:      i32[Nnz]   flat row ids across all bags
+      segments:     i32[Nnz]   bag id of each index (ascending not required)
+      num_segments: number of bags (static)
+      combiner:     "sum" | "mean" | "max"
+
+    Returns [num_segments, D].
+    """
+    rows = jnp.take(table, indices, axis=0)                   # [Nnz, D]
+    if combiner == "max":
+        return jax.ops.segment_max(rows, segments, num_segments)
+    out = jax.ops.segment_sum(rows, segments, num_segments)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segments, jnp.float32), segments, num_segments)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def field_offsets(field_vocabs):
+    """Cumulative offsets hashing per-field ids into one shared table."""
+    import numpy as np
+    offs = np.zeros(len(field_vocabs), dtype=np.int64)
+    offs[1:] = np.cumsum(field_vocabs)[:-1]
+    return offs
+
+
+def fielded_lookup(table, ids, offsets):
+    """ids i32[B, F] per-field ids; offsets i32[F] -> [B, F, D]."""
+    return embedding_lookup(table, ids + offsets[None, :].astype(ids.dtype))

@@ -1,0 +1,143 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216) — mean aggregator.
+
+Three execution regimes (kernel taxonomy §GNN — SpMM regime):
+  * full-graph:   message passing via ``jax.ops.segment_sum`` over an
+                  edge index (src→dst scatter). JAX has no CSR SpMM; the
+                  segment-sum formulation IS the SpMM here.
+  * minibatch:    layer-wise sampled neighborhoods (fanout f1-f2) — dense
+                  gathers + mean over the fanout axis (the real neighbor
+                  sampler lives in data/sampler.py).
+  * molecule:     batched small dense graphs — normalized adjacency matmul.
+
+Distribution: nodes row-sharded over ("pod","data"); edges sharded over all
+axes with destination-sorted partitions; the per-layer feature gather is
+the halo-exchange-degenerate all-gather (DESIGN.md §4) — deliberately the
+collective-bound roofline cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_feat: int = 602
+    n_classes: int = 41
+    aggregator: str = "mean"
+    sample_sizes: tuple = (25, 10)
+    dtype: str = "float32"
+
+
+def init(key, cfg: GNNConfig):
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    params = {}
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        params[f"w_self_{i}"] = common.truncated_normal(
+            k1, (dims[i], dims[i + 1]), dims[i] ** -0.5, jnp.dtype(cfg.dtype))
+        params[f"w_neigh_{i}"] = common.truncated_normal(
+            k2, (dims[i], dims[i + 1]), dims[i] ** -0.5, jnp.dtype(cfg.dtype))
+    return params
+
+
+def param_axes(cfg: GNNConfig):
+    return {k: (None, "ff") if k.endswith("0") or True else (None, None)
+            for k in [f"w_{s}_{i}" for s in ("self", "neigh")
+                      for i in range(cfg.n_layers)]}
+
+
+def _layer(h_self, h_neigh, w_self, w_neigh, last: bool):
+    out = h_self @ w_self + h_neigh @ w_neigh
+    return out if last else jax.nn.relu(out)
+
+
+def forward_full(params, feats, edges, cfg: GNNConfig):
+    """feats [N, F]; edges i32[E, 2] (src, dst) -> logits [N, classes].
+
+    Activations carry ("nodes", "gnn_hidden") — by default the hidden dim
+    is unsharded; flipping "gnn_hidden"→model (§Perf cell E) splits every
+    halo gather/scatter payload across the model axis.
+    """
+    n = feats.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    deg = jnp.maximum(
+        jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst, n), 1.0)
+    h = feats
+    for i in range(cfg.n_layers):
+        h = constrain(h, ("nodes", "gnn_hidden"))
+        msgs = jnp.take(h, src, axis=0)                     # gather (halo)
+        msgs = constrain(msgs, ("edges", "gnn_hidden"))
+        agg = jax.ops.segment_sum(msgs, dst, n) / deg[:, None]
+        h = _layer(h, agg, params[f"w_self_{i}"], params[f"w_neigh_{i}"],
+                   last=(i == cfg.n_layers - 1))
+    return h
+
+
+def forward_sampled(params, seed_feats, hop_feats, cfg: GNNConfig):
+    """Layer-wise sampled forward (2-layer case).
+
+    seed_feats [B, F]; hop_feats = (h1 [B, f1, F], h2 [B, f1, f2, F]).
+    Aggregation proceeds bottom-up: hop2 → hop1 → seeds.
+    """
+    h1, h2 = hop_feats
+    # layer 0 applied at depth-1 nodes (needs their hop-2 neighborhoods)
+    agg2 = h2.mean(axis=2)                                  # [B, f1, F]
+    d1 = _layer(h1, agg2, params["w_self_0"], params["w_neigh_0"], last=False)
+    # and at the seeds (their hop-1 neighborhoods)
+    agg1 = h1.mean(axis=1)                                  # [B, F]
+    d0 = _layer(seed_feats, agg1, params["w_self_0"], params["w_neigh_0"],
+                last=False)
+    # layer 1 at the seeds, aggregating the depth-1 activations
+    agg = d1.mean(axis=1)                                   # [B, d_hidden]
+    return _layer(d0, agg, params["w_self_1"], params["w_neigh_1"], last=True)
+
+
+def forward_molecule(params, feats, adj, cfg: GNNConfig):
+    """Batched small graphs. feats [B, n, F]; adj f32[B, n, n] (0/1)."""
+    deg = jnp.maximum(adj.sum(-1, keepdims=True), 1.0)
+    h = feats
+    for i in range(cfg.n_layers):
+        agg = (adj @ h) / deg
+        h = _layer(h, agg, params[f"w_self_{i}"], params[f"w_neigh_{i}"],
+                   last=(i == cfg.n_layers - 1))
+    return h.mean(axis=1)                                   # graph readout
+
+
+def _masked_xent(logits, labels, mask):
+    """Per-node xent with a validity mask (mesh-padding support)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per = (lse - ll) * mask
+    return per.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_full(params, batch, cfg: GNNConfig):
+    """Full-graph xent. Optional batch["mask"] f32[N] marks real nodes
+    (padding to the mesh size adds mask-0 nodes / self-loop edges)."""
+    logits = forward_full(params, batch["feats"], batch["edges"], cfg)
+    mask = batch.get("mask")
+    if mask is None:
+        return common.softmax_cross_entropy(logits, batch["labels"]), {}
+    return _masked_xent(logits, batch["labels"], mask), {}
+
+
+def loss_sampled(params, batch, cfg: GNNConfig):
+    logits = forward_sampled(params, batch["seed_feats"],
+                             (batch["h1"], batch["h2"]), cfg)
+    return common.softmax_cross_entropy(logits, batch["labels"]), {}
+
+
+def loss_molecule(params, batch, cfg: GNNConfig):
+    logits = forward_molecule(params, batch["feats"], batch["adj"], cfg)
+    return common.softmax_cross_entropy(logits, batch["labels"]), {}

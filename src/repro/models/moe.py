@@ -1,0 +1,119 @@
+"""Mixture-of-Experts block: top-k routing, capacity, gather-based dispatch
+(GShard semantics, sparse-dispatch implementation).
+
+Instead of the classic [tokens, E, C] one-hot dispatch einsum (which is the
+memory hog at scale), dispatch/combine are expressed as gathers/scatters:
+
+  sources[e, c]  — which token fills expert e's c-th slot (scatter of ids)
+  expert_in      — x gathered at sources                 [G, E, C, D]
+  expert FFN     — dense batched GEMMs over the E dim (experts mesh-sharded
+                   over "model"; XLA inserts the all-to-all)
+  combine        — h gathered back per (token, k) slot, weighted by gates
+
+Tokens over capacity are dropped (gate 0), per GShard. Router runs in f32;
+an auxiliary load-balance loss (Switch-style) is returned to the caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden
+    every: int = 1                  # MoE every N-th layer (2 = interleaved)
+    shared_expert: bool = False     # llama4-style always-on shared FFN
+    capacity_factor: float = 1.25
+    group_size: int = 4096          # tokens per routing group
+
+
+def moe_params_shape(cfg, d_model: int):
+    e, f = cfg.num_experts, cfg.d_ff
+    return {
+        "router": (d_model, e),
+        "w_gate": (e, d_model, f),
+        "w_up": (e, d_model, f),
+        "w_down": (e, f, d_model),
+    }
+
+
+def moe_param_axes():
+    return {
+        "router": ("stack", "embed", None),
+        "w_gate": ("stack", "experts", "expert_embed", None),
+        "w_up": ("stack", "experts", "expert_embed", None),
+        "w_down": ("stack", "experts", None, "expert_embed"),
+    }
+
+
+def moe_block(x, p, cfg: MoEConfig):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    gs = min(cfg.group_size, t)
+    while t % gs:
+        gs //= 2
+    g = t // gs
+    xg = tokens.reshape(g, gs, d)
+
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(int(gs * k * cfg.capacity_factor / e), 4)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [g, gs, E]
+    gates, eidx = lax.top_k(probs, k)                          # [g, gs, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): E * Σ_e fraction_e · mean-prob_e.
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.float32)        # [g, gs, K, E]
+    frac = onehot.sum(2).mean(1)                               # [g, E]
+    aux = (e * (frac * probs.mean(1)).sum(-1)).mean()
+
+    # Position of each (token, k) within its expert (first-come priority).
+    flat_oh = onehot.reshape(g, gs * k, e)
+    pos = jnp.cumsum(flat_oh, axis=1) - 1.0                    # [g, gs*K, E]
+    pos = (pos * flat_oh).sum(-1).astype(jnp.int32)            # [g, gs*K]
+    eflat = eidx.reshape(g, gs * k)
+    keep = pos < cap
+    slot = eflat * cap + pos                                   # [g, gs*K]
+    slot = jnp.where(keep, slot, e * cap)                      # overflow bin
+
+    # sources[e*cap + c] = token index (scatter; overflow bin dropped).
+    tok_ids = jnp.broadcast_to(jnp.arange(gs)[:, None], (gs, k)).reshape(gs * k)
+    sources = jnp.zeros((g, e * cap + 1), jnp.int32)
+    sources = jax.vmap(lambda srcs, sl: srcs.at[sl].set(tok_ids))(sources, slot)
+    filled = jnp.zeros((g, e * cap + 1), bool)
+    filled = jax.vmap(lambda f, sl: f.at[sl].set(True))(filled, slot)
+
+    expert_in = jnp.take_along_axis(
+        xg, sources[:, : e * cap, None], axis=1)                # [g, E*cap, D]
+    expert_in = jnp.where(filled[:, : e * cap, None], expert_in, 0.0)
+    expert_in = expert_in.reshape(g, e, cap, d)
+    # groups→data (batch-major), experts→model; XLA inserts the all-to-all.
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    h = jax.nn.silu(h) * u
+    h = constrain(h, ("batch", "experts", None, None))
+    h = jnp.einsum("gecf,efd->gecd", h, p["w_down"])            # [g,E,cap,D]
+
+    # Combine: gather each (token, k)'s expert output, weight by gate.
+    hflat = h.reshape(g, e * cap, d)
+    gathered = jnp.take_along_axis(
+        hflat, jnp.minimum(slot, e * cap - 1)[:, :, None], axis=1)
+    w = (gates.reshape(g, gs * k) * keep.astype(gates.dtype))[:, :, None]
+    contrib = (gathered * w.astype(gathered.dtype)).reshape(g, gs, k, d)
+    y = contrib.sum(2).reshape(b, s, d).astype(x.dtype)
+    return y, aux

@@ -1,0 +1,276 @@
+"""RecSys family: FM, Wide&Deep, DIN, MIND (kernel taxonomy §RecSys).
+
+Shared anatomy: one huge hashed embedding table (vocab row-sharded over
+"model" via the "table_vocab" logical axis) → feature interaction
+(FM 2-way / concat / target-attention / multi-interest capsules) → small
+MLP head. The lookup is the hot path and runs through
+models/embedding.py's take+segment_sum EmbeddingBag substrate.
+
+``retrieval_scores`` scores one user against ``n_cand`` candidates as
+chunked batched compute (lax.scan over candidate chunks, each chunk fully
+vectorized) — never a per-candidate python loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+from repro.models.embedding import embedding_lookup, fielded_lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    kind: str                       # "fm" | "wide_deep" | "din" | "mind"
+    embed_dim: int
+    n_fields: int = 0               # sparse fields (fm / wide_deep)
+    seq_len: int = 0                # behaviour history (din / mind)
+    vocab_rows: int = 1_000_000     # physical table rows (hashed)
+    mlp: Sequence[int] = ()         # deep-head hidden dims
+    attn_mlp: Sequence[int] = ()    # din target-attention hidden dims
+    n_interests: int = 0            # mind
+    capsule_iters: int = 0          # mind
+    dtype: str = "float32"
+    cand_chunk: int = 8192          # retrieval scoring chunk
+
+
+def _mlp_init(key, dims, dtype):
+    ws = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        ws[f"w{i}"] = common.truncated_normal(k1, (a, b), a ** -0.5, dtype)
+        ws[f"b{i}"] = jnp.zeros((b,), dtype)
+    return ws
+
+
+def _mlp_apply(ws, x, n_layers: int, final_act: bool = False):
+    for i in range(n_layers):
+        x = x @ ws[f"w{i}"] + ws[f"b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_axes(dims):
+    axes = {}
+    for i in range(len(dims) - 1):
+        axes[f"w{i}"] = (None, None)
+        axes[f"b{i}"] = (None,)
+    return axes
+
+
+def init(key, cfg: RecSysConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.embed_dim
+    p = {"table": common.truncated_normal(
+        jax.random.fold_in(key, 0), (cfg.vocab_rows, d), 0.01, dtype)}
+
+    if cfg.kind == "fm":
+        p["linear"] = jnp.zeros((cfg.vocab_rows,), dtype)
+        p["bias"] = jnp.zeros((), dtype)
+    elif cfg.kind == "wide_deep":
+        p["wide"] = jnp.zeros((cfg.vocab_rows,), dtype)
+        dims = [cfg.n_fields * d, *cfg.mlp, 1]
+        p["deep"] = _mlp_init(jax.random.fold_in(key, 1), dims, dtype)
+    elif cfg.kind == "din":
+        att_dims = [4 * d, *cfg.attn_mlp, 1]
+        p["attn"] = _mlp_init(jax.random.fold_in(key, 1), att_dims, dtype)
+        head_dims = [2 * d, *cfg.mlp, 1]
+        p["head"] = _mlp_init(jax.random.fold_in(key, 2), head_dims, dtype)
+    elif cfg.kind == "mind":
+        p["route_s"] = common.truncated_normal(
+            jax.random.fold_in(key, 1), (d, d), d ** -0.5, dtype)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def param_axes(cfg: RecSysConfig):
+    axes = {"table": ("table_vocab", None)}
+    if cfg.kind == "fm":
+        axes["linear"] = ("table_vocab",)
+        axes["bias"] = ()
+    elif cfg.kind == "wide_deep":
+        axes["wide"] = ("table_vocab",)
+        axes["deep"] = _mlp_axes([cfg.n_fields * cfg.embed_dim, *cfg.mlp, 1])
+    elif cfg.kind == "din":
+        axes["attn"] = _mlp_axes([4 * cfg.embed_dim, *cfg.attn_mlp, 1])
+        axes["head"] = _mlp_axes([2 * cfg.embed_dim, *cfg.mlp, 1])
+    elif cfg.kind == "mind":
+        axes["route_s"] = (None, None)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# interactions
+# ---------------------------------------------------------------------------
+
+def _fm_logit(p, ids):
+    """FM 2-way via the O(nk) sum-square trick: ½(‖Σv‖² − Σ‖v‖²)."""
+    v = embedding_lookup(p["table"], ids)                    # [B, F, D]
+    s = v.sum(axis=1)                                        # [B, D]
+    pair = 0.5 * (jnp.square(s) - jnp.square(v).sum(axis=1)).sum(axis=-1)
+    lin = jnp.take(p["linear"], ids, axis=0).sum(axis=1)
+    return p["bias"] + lin + pair
+
+
+def _wide_deep_logit(p, ids, cfg):
+    v = embedding_lookup(p["table"], ids)                    # [B, F, D]
+    deep = _mlp_apply(p["deep"], v.reshape(v.shape[0], -1),
+                      len(cfg.mlp) + 1)[:, 0]
+    wide = jnp.take(p["wide"], ids, axis=0).sum(axis=1)
+    return wide + deep
+
+
+def _din_attend(p, hist_e, mask, target_e, cfg):
+    """Target attention: weights from MLP([h, t, h−t, h·t]) (DIN eq. 3)."""
+    t = jnp.broadcast_to(target_e[:, None, :], hist_e.shape)
+    feats = jnp.concatenate([hist_e, t, hist_e - t, hist_e * t], axis=-1)
+    w = _mlp_apply(p["attn"], feats, len(cfg.attn_mlp) + 1)[..., 0]  # [B, L]
+    w = jnp.where(mask, w, 0.0)           # DIN keeps raw weights (no softmax)
+    return (w[..., None] * hist_e).sum(axis=1)               # [B, D]
+
+
+def _din_logit(p, hist_ids, hist_mask, target_ids, cfg):
+    hist_e = embedding_lookup(p["table"], hist_ids)          # [B, L, D]
+    hist_e = hist_e * hist_mask[..., None].astype(hist_e.dtype)
+    target_e = embedding_lookup(p["table"], target_ids)      # [B, D]
+    pooled = _din_attend(p, hist_e, hist_mask, target_e, cfg)
+    x = jnp.concatenate([pooled, target_e], axis=-1)
+    return _mlp_apply(p["head"], x, len(cfg.mlp) + 1)[:, 0]
+
+
+def _squash(v, axis=-1, eps=1e-9):
+    n2 = jnp.square(v).sum(axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * v / jnp.sqrt(n2 + eps)
+
+
+def _mind_interests(p, hist_ids, hist_mask, cfg):
+    """B2I dynamic routing → K interest capsules [B, K, D]."""
+    e = embedding_lookup(p["table"], hist_ids)               # [B, L, D]
+    mask = hist_mask.astype(e.dtype)[..., None]
+    e = e * mask
+    u = e @ p["route_s"]                                     # shared bilinear map
+    b, l, d = u.shape
+    k = cfg.n_interests
+    # Fixed (non-trainable) random logit init, per the MIND paper.
+    logits0 = jax.random.normal(jax.random.PRNGKey(17), (1, l, k), u.dtype)
+    logits = jnp.broadcast_to(logits0, (b, l, k))
+
+    def routing_iter(logits, _):
+        w = jax.nn.softmax(logits, axis=-1) * mask           # [B, L, K]
+        z = jnp.einsum("blk,bld->bkd", w, u)
+        v = _squash(z)                                       # [B, K, D]
+        logits_new = logits + jnp.einsum("bld,bkd->blk", u, v)
+        return logits_new, v
+
+    logits, vs = lax.scan(routing_iter, logits, None, length=cfg.capsule_iters)
+    return vs[-1]                                            # last iteration's capsules
+
+
+def _mind_logit(p, hist_ids, hist_mask, target_ids, cfg):
+    interests = _mind_interests(p, hist_ids, hist_mask, cfg)  # [B, K, D]
+    t = embedding_lookup(p["table"], target_ids)              # [B, D]
+    # Label-aware attention (pow 2) at train; hard-max at serving.
+    att = jnp.einsum("bkd,bd->bk", interests, t)
+    w = jax.nn.softmax(jnp.square(att), axis=-1)
+    user = jnp.einsum("bk,bkd->bd", w, interests)
+    return jnp.einsum("bd,bd->b", user, t)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg: RecSysConfig):
+    """batch → logits f32[B]. Field layouts per kind (see configs/)."""
+    if cfg.kind == "fm":
+        return _fm_logit(params, batch["ids"])
+    if cfg.kind == "wide_deep":
+        return _wide_deep_logit(params, batch["ids"], cfg)
+    if cfg.kind == "din":
+        return _din_logit(params, batch["hist_ids"], batch["hist_mask"],
+                          batch["target_ids"], cfg)
+    if cfg.kind == "mind":
+        return _mind_logit(params, batch["hist_ids"], batch["hist_mask"],
+                           batch["target_ids"], cfg)
+    raise ValueError(cfg.kind)
+
+
+def loss_fn(params, batch, cfg: RecSysConfig):
+    """Binary cross-entropy with logits; labels f32[B] ∈ {0, 1}."""
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"bce": loss}
+
+
+def retrieval_scores(params, user_batch, cand_ids, cfg: RecSysConfig,
+                     *, chunked: bool = True):
+    """Score ONE user context against n_cand candidates → f32[n_cand].
+
+    Vectorized per chunk; scan over chunks keeps the peak intermediate at
+    [chunk, ...] instead of [n_cand, ...] (e.g. DIN's [n_cand, L, 4D]).
+    ``chunked=False`` scores all candidates in one vectorized pass — the
+    mesh-sharded serving path (candidates sharded over every axis), where
+    the per-device slice IS the chunk.
+    """
+    n = cand_ids.shape[0]
+    if chunked:
+        chunk = min(cfg.cand_chunk, n)
+        assert n % chunk == 0, (n, chunk)
+        chunks = cand_ids.reshape(n // chunk, chunk)
+
+    if cfg.kind == "mind":
+        interests = _mind_interests(
+            params, user_batch["hist_ids"], user_batch["hist_mask"], cfg)[0]
+
+        def body(_, ids):
+            c = embedding_lookup(params["table"], ids)        # [chunk, D]
+            s = jnp.max(c @ interests.T, axis=-1)             # hard-max over K
+            return None, s
+    elif cfg.kind == "din":
+        hist_e = embedding_lookup(params["table"], user_batch["hist_ids"])
+        hist_m = user_batch["hist_mask"]
+        hist_e = hist_e * hist_m[..., None].astype(hist_e.dtype)
+
+        def body(_, ids):
+            c = embedding_lookup(params["table"], ids)        # [chunk, D]
+            he = jnp.broadcast_to(hist_e, (ids.shape[0],) + hist_e.shape[1:])
+            hm = jnp.broadcast_to(hist_m, (ids.shape[0],) + hist_m.shape[1:])
+            pooled = _din_attend(params, he, hm, c, cfg)
+            x = jnp.concatenate([pooled, c], axis=-1)
+            return None, _mlp_apply(params["head"], x, len(cfg.mlp) + 1)[:, 0]
+    elif cfg.kind == "fm":
+        # User context = first F-1 fields; candidate fills the item field.
+        # The user part of the FM score is candidate-independent: s_u = Σ v_f.
+        u_ids = user_batch["ids"][0, : cfg.n_fields - 1]
+        v_u = embedding_lookup(params["table"], u_ids)        # [F-1, D]
+        s_u = v_u.sum(axis=0)
+
+        def body(_, ids):
+            c = embedding_lookup(params["table"], ids)
+            lin = jnp.take(params["linear"], ids, axis=0)
+            return None, c @ s_u + lin + params["bias"]
+    elif cfg.kind == "wide_deep":
+        u_ids = user_batch["ids"][0, : cfg.n_fields - 1]      # [F-1]
+
+        def body(_, ids):
+            full = jnp.concatenate(
+                [jnp.broadcast_to(u_ids[None], (ids.shape[0], u_ids.shape[0])),
+                 ids[:, None]], axis=1)
+            return None, _wide_deep_logit(params, full, cfg)
+    else:
+        raise ValueError(cfg.kind)
+
+    if not chunked:
+        return body(None, cand_ids)[1]
+    _, scores = lax.scan(body, None, chunks)
+    return scores.reshape(n)

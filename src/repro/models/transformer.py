@@ -1,0 +1,371 @@
+"""Decoder-only transformer LM family (dense + MoE), scan-over-layers.
+
+Covers the five assigned LM architectures:
+  qwen3-0.6b      — GQA + qk-norm, RoPE full
+  stablelm-12b    — GQA, RoPE full
+  chatglm3-6b     — GQA (kv=2), 2D-RoPE (rotary on half the head dim)
+  llama4-maverick — interleaved MoE (every 2nd layer) + shared expert, top-1
+  moonshot-v1-16b — all-MoE, 64 experts top-6
+
+Params are nested dicts with [L, ...]-stacked layer weights; ``param_axes``
+mirrors the tree with logical sharding axes (parallel/sharding.py):
+TP over "model" (heads / ff / vocab / experts), FSDP over "data" (params'
+d_model dim), DP over ("pod","data") for activations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+from repro.models.attention import causal_attention, decode_attention
+from repro.models.moe import MoEConfig, moe_block, moe_param_axes
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    rope_mode: str = "full"            # "full" | "2d"
+    qk_norm: bool = False
+    moe: Optional[MoEConfig] = None
+    dense_d_ff: Optional[int] = None   # dense-layer FFN width when interleaved
+    dtype: str = "bfloat16"
+    chunk_q: int = 512
+    remat: bool = True
+    remat_policy: str = "nothing"      # "nothing" | "dots" (§Perf B4)
+    aux_loss_coef: float = 0.01
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def layer_plan(self):
+        """(n_dense_blocks, n_moe_blocks, interleaved?)"""
+        if self.moe is None:
+            return self.n_layers, 0, False
+        if self.moe.every == 1:
+            return 0, self.n_layers, False
+        assert self.n_layers % self.moe.every == 0
+        n_pairs = self.n_layers // self.moe.every
+        return n_pairs * (self.moe.every - 1), n_pairs, True
+
+
+# ---------------------------------------------------------------------------
+# init / param_axes
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg: LMConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    shapes = {
+        "ln1": (d,), "ln2": (d,),
+        "wq": (d, hq, hd), "wk": (d, hkv, hd), "wv": (d, hkv, hd),
+        "wo": (hq, hd, d),
+    }
+    if cfg.qk_norm:
+        shapes["qn"] = (hd,)
+        shapes["kn"] = (hd,)
+    return shapes
+
+
+def _attn_axes(cfg: LMConfig):
+    axes = {
+        "ln1": ("stack", None), "ln2": ("stack", None),
+        "wq": ("stack", "embed", "heads", None),
+        "wk": ("stack", "embed", "kv_heads", None),
+        "wv": ("stack", "embed", "kv_heads", None),
+        "wo": ("stack", "heads", None, "embed"),
+    }
+    if cfg.qk_norm:
+        axes["qn"] = ("stack", None)
+        axes["kn"] = ("stack", None)
+    return axes
+
+
+def _mlp_shapes(d: int, f: int):
+    return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+
+
+_MLP_AXES = {
+    "w_gate": ("stack", "embed", "ff"),
+    "w_up": ("stack", "embed", "ff"),
+    "w_down": ("stack", "ff", "embed"),
+}
+
+
+def _stack_init(key, shapes: dict, n: int, dtype, scale: float):
+    out = {}
+    for i, (name, shp) in enumerate(sorted(shapes.items())):
+        if len(shp) == 1:                      # norm scales start at 0 (rms 1+s)
+            out[name] = jnp.zeros((n,) + shp, dtype)
+        else:
+            fan_in = shp[0] if len(shp) == 2 else shp[0] * (shp[1] if name == "wo" else 1)
+            k = jax.random.fold_in(key, i)
+            out[name] = common.truncated_normal(
+                k, (n,) + shp, scale / (fan_in ** 0.5), dtype)
+    return out
+
+
+def init(key, cfg: LMConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    nd, nm, _ = cfg.layer_plan()
+    d = cfg.d_model
+    params = {
+        "embed": common.truncated_normal(jax.random.fold_in(key, 0),
+                                         (cfg.vocab, d), 0.02, dtype),
+        "unembed": common.truncated_normal(jax.random.fold_in(key, 1),
+                                           (d, cfg.vocab), d ** -0.5, dtype),
+        "final_ln": jnp.zeros((d,), dtype),
+    }
+    if nd:
+        dense_ff = cfg.dense_d_ff or cfg.d_ff
+        shapes = {**_attn_shapes(cfg), **_mlp_shapes(d, dense_ff)}
+        params["dense"] = _stack_init(jax.random.fold_in(key, 2), shapes, nd, dtype, 1.0)
+    if nm:
+        m = cfg.moe
+        shapes = {
+            **_attn_shapes(cfg),
+            "router": (d, m.num_experts),
+            "e_gate": (m.num_experts, d, m.d_ff),
+            "e_up": (m.num_experts, d, m.d_ff),
+            "e_down": (m.num_experts, m.d_ff, d),
+        }
+        if m.shared_expert:
+            shapes.update({f"s_{k}": v for k, v in _mlp_shapes(d, m.d_ff).items()})
+        params["moe"] = _stack_init(jax.random.fold_in(key, 3), shapes, nm, dtype, 1.0)
+    return params
+
+
+def param_axes(cfg: LMConfig):
+    nd, nm, _ = cfg.layer_plan()
+    axes = {
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "final_ln": (None,),
+    }
+    if nd:
+        axes["dense"] = {**_attn_axes(cfg), **_MLP_AXES}
+    if nm:
+        moe_axes = {
+            **_attn_axes(cfg),
+            "router": ("stack", "embed", None),
+            "e_gate": ("stack", "experts", "expert_embed", "expert_ff"),
+            "e_up": ("stack", "experts", "expert_embed", "expert_ff"),
+            "e_down": ("stack", "experts", "expert_ff", "expert_embed"),
+        }
+        if cfg.moe.shared_expert:
+            moe_axes.update({f"s_{k}": v for k, v in _MLP_AXES.items()})
+        axes["moe"] = moe_axes
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _project_qkv(x, p, cfg: LMConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["qn"])
+        k = common.rms_norm(k, p["kn"])
+    q = common.apply_rope(q, positions, mode=cfg.rope_mode)
+    k = common.apply_rope(k, positions, mode=cfg.rope_mode)
+    return q, k, v
+
+
+def _attn_block(x, p, cfg: LMConfig, positions):
+    # Re-pin activation sharding at every block boundary so SPMD keeps
+    # batch→data / heads→model through the remat-recompute graphs.
+    x = constrain(x, ("batch", None, None))
+    h = common.rms_norm(x, p["ln1"])
+    q, k, v = _project_qkv(h, p, cfg, positions)
+    q = constrain(q, ("batch", None, "heads", None))
+    o = causal_attention(q, k, v, chunk_q=cfg.chunk_q)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def _mlp(h, p, prefix=""):
+    g = jnp.einsum("bsd,df->bsf", h, p[prefix + "w_gate"])
+    u = jnp.einsum("bsd,df->bsf", h, p[prefix + "w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p[prefix + "w_down"])
+
+
+def _dense_layer(x, p, cfg: LMConfig, positions):
+    x, kv = _attn_block(x, p, cfg, positions)
+    x = x + _mlp(common.rms_norm(x, p["ln2"]), p)
+    return x, kv, jnp.float32(0.0)
+
+
+def _moe_layer(x, p, cfg: LMConfig, positions):
+    x, kv = _attn_block(x, p, cfg, positions)
+    h = common.rms_norm(x, p["ln2"])
+    moe_p = {"router": p["router"], "w_gate": p["e_gate"],
+             "w_up": p["e_up"], "w_down": p["e_down"]}
+    y, aux = moe_block(h, moe_p, cfg.moe)
+    if cfg.moe.shared_expert:
+        y = y + _mlp(h, p, prefix="s_")
+    return x + y, kv, aux
+
+
+def _remat_policy(cfg: LMConfig):
+    """"nothing": recompute everything (min memory, re-gathers FSDP
+    weights in backward); "dots": save matmul outputs (no recompute of
+    GEMMs → no second weight gather, more activation memory) — §Perf B4."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _scan_blocks(x, params, cfg: LMConfig, positions, collect_kv: bool):
+    """Run all layers via lax.scan (interleaving dense/MoE when configured)."""
+    nd, nm, interleaved = cfg.layer_plan()
+    aux_total = jnp.float32(0.0)
+    kvs = {}
+
+    def run(kind, x, stacked, aux_total):
+        layer_fn = _dense_layer if kind == "dense" else _moe_layer
+
+        def body(carry, lp):
+            xc, aux = carry
+            xn, kv, a = layer_fn(xc, lp, cfg, positions)
+            y = kv if collect_kv else None
+            return (xn, aux + a), y
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        (x, aux_total), ys = lax.scan(body, (x, aux_total), stacked)
+        return x, aux_total, ys
+
+    if interleaved:
+        # dense / moe alternate: scan over pairs with both param stacks.
+        def pair_body(carry, lp):
+            xc, aux = carry
+            xc, kv_d, _ = _dense_layer(xc, lp["d"], cfg, positions)
+            xc, kv_m, a = _moe_layer(xc, lp["m"], cfg, positions)
+            ys = (kv_d, kv_m) if collect_kv else None
+            return (xc, aux + a), ys
+
+        if cfg.remat:
+            pair_body = jax.checkpoint(pair_body, policy=_remat_policy(cfg))
+        (x, aux_total), ys = lax.scan(
+            pair_body, (x, aux_total), {"d": params["dense"], "m": params["moe"]})
+        if collect_kv:
+            kvs = {"dense": ys[0], "moe": ys[1]}
+    else:
+        if nd:
+            x, aux_total, ys = run("dense", x, params["dense"], aux_total)
+            if collect_kv:
+                kvs["dense"] = ys
+        if nm:
+            x, aux_total, ys = run("moe", x, params["moe"], aux_total)
+            if collect_kv:
+                kvs["moe"] = ys
+    return x, aux_total, kvs
+
+
+def forward(params, tokens, cfg: LMConfig, *, positions=None, collect_kv=False):
+    """tokens i32[B,S] -> (logits f32→dtype [B,S,V], aux, kv caches)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x, aux, kvs = _scan_blocks(x, params, cfg, positions, collect_kv)
+    x = common.rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return logits, aux, kvs
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    """Next-token xent + MoE aux loss. batch = {tokens, labels} i32[B,S]."""
+    logits, aux, _ = forward(params, batch["tokens"], cfg)
+    loss = common.softmax_cross_entropy(logits, batch["labels"])
+    return loss + cfg.aux_loss_coef * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: LMConfig):
+    """Full-sequence forward returning last-token logits + stacked KV caches.
+
+    Cache trees: {"dense": (k, v), "moe": (k, v)} with k/v [L*, B, S, Hkv, hd].
+    """
+    logits, _, kvs = forward(params, tokens, cfg, collect_kv=True)
+    return logits[:, -1], kvs
+
+
+def decode_step(params, caches, token, lengths, cfg: LMConfig):
+    """One-token decode. token i32[B,1]; lengths i32[B] = cache fill.
+
+    Returns (logits [B, V], updated caches, lengths+1). The caches' seq dim
+    carries the "kv_seq" logical axis → sequence-parallel decode.
+    """
+    b = token.shape[0]
+    positions = lengths[:, None]
+    x = jnp.take(params["embed"], token, axis=0)            # [B,1,D]
+    nd, nm, interleaved = cfg.layer_plan()
+
+    def one_layer(x, lp, cache_kv, kind):
+        p = lp
+        h = common.rms_norm(x, p["ln1"])
+        q, k, v = _project_qkv(h, p, cfg, positions)
+        kc = cache_kv[0].at[jnp.arange(b), lengths].set(k[:, 0])
+        vc = cache_kv[1].at[jnp.arange(b), lengths].set(v[:, 0])
+        o = decode_attention(q, kc, vc, lengths + 1)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        h2 = common.rms_norm(x, p["ln2"])
+        if kind == "dense":
+            x = x + _mlp(h2, p)
+        else:
+            moe_p = {"router": p["router"], "w_gate": p["e_gate"],
+                     "w_up": p["e_up"], "w_down": p["e_down"]}
+            y, _ = moe_block(h2, moe_p, cfg.moe)
+            if cfg.moe.shared_expert:
+                y = y + _mlp(h2, p, prefix="s_")
+            x = x + y
+        return x, (kc, vc)
+
+    new_caches = {}
+    if interleaved:
+        def body(x, lp_cache):
+            lp, (cd, cm) = lp_cache
+            x, cd2 = one_layer(x, lp["d"], cd, "dense")
+            x, cm2 = one_layer(x, lp["m"], cm, "moe")
+            return x, (cd2, cm2)
+        x, ys = lax.scan(body, x, ({"d": params["dense"], "m": params["moe"]},
+                                   (caches["dense"], caches["moe"])))
+        new_caches = {"dense": ys[0], "moe": ys[1]}
+    else:
+        kind = "dense" if nd else "moe"
+        stacked = params[kind]
+
+        def body(x, lp_cache):
+            lp, c = lp_cache
+            x, c2 = one_layer(x, lp, c, kind)
+            return x, c2
+        x, ys = lax.scan(body, x, (stacked, caches[kind]))
+        new_caches[kind] = ys
+
+    x = common.rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])[:, 0]
+    return logits, new_caches, lengths + 1
+
+
+def cache_axes(cfg: LMConfig):
+    """Logical axes of one KV cache tensor [L, B, S, Hkv, hd]."""
+    return ("stack", "batch", "kv_seq", "kv_heads", None)

@@ -1,0 +1,63 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At 1000+ nodes the data-parallel gradient reduction is the dominant
+inter-pod collective. XLA exposes no sub-word all-reduce, so quantization
+only saves wire bytes if the collective itself carries int8. We therefore
+implement the reduction as **quantize → all_gather(int8) → local sum**:
+
+    per-device sent/received bytes:  n·S·1   (int8 all-gather)
+    vs f32 ring all-reduce:          ≈ 2·S·4
+
+a ≥4× win for axis sizes n ≤ 8 — exactly the regime of the "pod" axis
+(2–8 pods), which crosses the slow DCI links. Within a pod the fast ICI
+all-reduce stays uncompressed f32 (XLA-inserted).
+
+Error feedback (Seide'14 / Karimireddy'19) keeps convergence: whatever
+rounding drops this step is added back next step.
+
+Scheme (per leaf):
+    e      — persistent error-feedback buffer (f32, same shape)
+    x      = grad + e
+    scale  = pmax(max|x|) / 127   (shared symmetric scale → summable ints)
+    q      = round(x / scale) ∈ int8
+    e'     = x − q·scale
+    synced = Σ_pods q · scale / n (dequantized after the int8 all-gather)
+
+Used inside ``shard_map`` over the pod axis (launch/train.py --compress-dp);
+the plain pjit path leaves all reductions to XLA uncompressed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def init_error_state(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compressed_psum_mean(grads, err_state, axis_name):
+    """Mean-all-reduce a gradient tree in int8 with error feedback.
+
+    Must run inside shard_map with ``axis_name`` bound. Returns
+    (mean-reduced f32 grads, new error-feedback state).
+    """
+    n = lax.psum(1, axis_name)
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        amax = lax.pmax(jnp.max(jnp.abs(x)), axis_name)   # shared scale
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        e_new = x - q.astype(jnp.float32) * scale
+        gathered = lax.all_gather(q, axis_name)            # int8 on the wire
+        summed = gathered.astype(jnp.int32).sum(axis=0).astype(jnp.float32)
+        return summed * scale / n, e_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))

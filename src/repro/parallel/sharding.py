@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Tensors are annotated with *logical* axis names; ``logical_to_spec`` maps
+them onto whatever mesh is in scope ((data, model) single-pod or
+(pod, data, model) multi-pod), dropping axes the mesh doesn't have.
+
+Parallelism styles expressed through the rules:
+  DP   — "batch" over (pod, data)
+  TP   — "heads"/"ff"/"vocab" over model (Megatron)
+  FSDP — "embed" (params' d_model dim) over data (ZeRO-3: XLA all-gathers
+         one scan step's layer slice on demand)
+  EP   — "experts" over model
+  SP   — "kv_seq" over model (decode KV cache); "act_seq" optionally over
+         model for very long sequences
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Trace-time rules override: launch/perf.py variants re-map logical axes
+# INSIDE model code (constrain calls), not just at the jit boundary.
+_RULES_OVERRIDE: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_rules_override", default=None)
+
+
+@contextlib.contextmanager
+def rules_scope(rules):
+    """Make ``rules`` the default for constrain/named_sharding while
+    tracing (a no-op when rules is None)."""
+    tok = _RULES_OVERRIDE.set(rules)
+    try:
+        yield
+    finally:
+        _RULES_OVERRIDE.reset(tok)
+
+
+def active_rules(explicit=None):
+    return explicit or _RULES_OVERRIDE.get() or DEFAULT_RULES
+
+# logical axis -> preferred mesh axes (first match present in mesh wins;
+# tuple entries that are themselves tuples shard over several mesh axes).
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"),),
+    "records": (("pod", "data", "model"),),   # sketch index rows
+    "embed": (("pod", "data"),),               # FSDP dim of params (the
+                                               # pod axis joins at 512
+                                               # chips → state halves)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_embed": (("pod", "data"),),
+    "expert_ff": (),                           # §Perf B3 flips this to data
+    "kv_seq": ("model",),
+    "act_seq": (),
+    "nodes": (("pod", "data"),),
+    "edges": (("pod", "data", "model"),),
+    "gnn_hidden": (),                          # §Perf cell E flips to model
+    "table_vocab": ("model",),
+    "stack": (),                               # scan-stacked layer dim
+    None: (),
+}
+
+
+def _resolve(axis_name, mesh_axes, rules):
+    for cand in rules.get(axis_name, ()):
+        if isinstance(cand, tuple):
+            picked = tuple(a for a in cand if a in mesh_axes)
+            if picked:
+                return picked if len(picked) > 1 else picked[0]
+        elif cand in mesh_axes:
+            return cand
+    return None
+
+
+def logical_to_spec(logical_axes, mesh: Mesh, rules=None) -> P:
+    """("batch", None, "ff") -> PartitionSpec for this mesh."""
+    rules = active_rules(rules)
+    mesh_axes = set(mesh.axis_names)
+    used: set = set()
+    out = []
+    for ax in logical_axes:
+        r = _resolve(ax, mesh_axes, rules)
+        # A mesh axis may shard only one tensor dim.
+        flat = r if isinstance(r, tuple) else (r,) if r else ()
+        if any(a in used for a in flat):
+            r = None
+        else:
+            used.update(flat)
+        out.append(r)
+    return P(*out)
+
+
+def named_sharding(logical_axes, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, mesh, rules))
+
+
+def spec_for_shape(shape, logical_axes, mesh: Mesh, rules=None) -> P:
+    """Shape-aware spec: drops mesh axes a dim's size cannot divide.
+
+    pjit argument shardings must divide exactly; e.g. kv_heads=8 cannot
+    shard over model=16 → that dim falls back (rightmost mesh axis dropped
+    first, so ("pod","data","model") degrades toward the DP axes).
+    """
+    base = logical_to_spec(logical_axes, mesh, rules)
+    out = []
+    for dim, entry in zip(shape, tuple(base)):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = list(entry) if isinstance(entry, tuple) else [entry]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if dim % prod == 0:
+                break
+            axes.pop()            # drop the innermost (rightmost) axis
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def named_sharding_for(shape, logical_axes, mesh: Mesh, rules=None):
+    return NamedSharding(mesh, spec_for_shape(shape, logical_axes, mesh, rules))
+
+
+def tree_shardings_for(abstract_tree, logical_tree, mesh: Mesh, rules=None):
+    """Shape-aware twin of tree_shardings: needs the abstract arg tree."""
+    return jax.tree.map(
+        lambda sds, ax: named_sharding_for(sds.shape, ax, mesh, rules),
+        abstract_tree, logical_tree)
+
+
+def tree_shardings(logical_tree, mesh: Mesh, rules=None):
+    """Map a pytree of logical-axis tuples -> pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda ax: named_sharding(ax, mesh, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def constrain(x, logical_axes, mesh: Mesh | None = None, rules=None):
+    """with_sharding_constraint by logical axes (no-op without a mesh)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(logical_axes, mesh, rules))
+
+
+def _current_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None

@@ -1,0 +1,139 @@
+"""Online serving front end for containment search: deadline-aware
+request micro-batching over the distributed sketch index.
+
+The roofline says one index sweep costs the same for 1 or Gq queries
+(with the fused kernel — EXPERIMENTS.md §Perf); the batcher's job is to
+*fill* Gq without blowing the latency SLO:
+
+    flush when  batch == max_batch                      (full)
+            or  oldest request age ≥ max_wait           (deadline)
+
+Event-driven with an injectable clock: deterministic in tests, wall-clock
+in production. Single-threaded by design — on a real pod the batcher
+runs on the coordinator host; device work is the jitted score+topk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    q_ids: np.ndarray
+    arrival: float
+    threshold: float = 0.5
+
+
+@dataclasses.dataclass
+class BatchStats:
+    flushes_full: int = 0
+    flushes_deadline: int = 0
+    served: int = 0
+    total_wait: float = 0.0
+    total_batch: int = 0
+
+    @property
+    def mean_batch(self) -> float:
+        n = self.flushes_full + self.flushes_deadline
+        return self.total_batch / n if n else 0.0
+
+    @property
+    def mean_wait(self) -> float:
+        return self.total_wait / self.served if self.served else 0.0
+
+
+class MicroBatcher:
+    def __init__(self, max_batch: int = 16, max_wait: float = 0.01,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self.clock = clock
+        self.pending: list[Request] = []
+        self.stats = BatchStats()
+
+    def submit(self, req: Request) -> list[Request] | None:
+        """Enqueue; returns a batch to execute when the size bound hits."""
+        self.pending.append(req)
+        if len(self.pending) >= self.max_batch:
+            return self._flush(full=True)
+        return None
+
+    def poll(self) -> list[Request] | None:
+        """Deadline check — call on a timer (or between device steps)."""
+        if not self.pending:
+            return None
+        if self.clock() - self.pending[0].arrival >= self.max_wait:
+            return self._flush(full=False)
+        return None
+
+    def _flush(self, full: bool) -> list[Request]:
+        batch, self.pending = self.pending, []
+        if full:
+            self.stats.flushes_full += 1
+        else:
+            self.stats.flushes_deadline += 1
+        now = self.clock()
+        self.stats.served += len(batch)
+        self.stats.total_wait += sum(now - r.arrival for r in batch)
+        self.stats.total_batch += len(batch)
+        return batch
+
+
+class SketchServer:
+    """Batcher + distributed GB-KMV index + global top-k, end to end."""
+
+    def __init__(self, index, mesh, max_batch: int = 16,
+                 max_wait: float = 0.01, topk: int = 10,
+                 clock: Callable[[], float] = time.monotonic):
+        from repro.sketchindex import to_device_index
+
+        self.index = index
+        self.mesh = mesh
+        self.didx = to_device_index(index, mesh)
+        self.topk = topk
+        self.batcher = MicroBatcher(max_batch, max_wait, clock)
+        self._next_rid = 0
+        self.results: dict[int, dict] = {}
+
+    def submit(self, q_ids: np.ndarray, threshold: float = 0.5) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        batch = self.batcher.submit(
+            Request(rid, np.asarray(q_ids), self.batcher.clock(), threshold))
+        if batch is not None:
+            self._execute(batch)
+        return rid
+
+    def poll(self):
+        batch = self.batcher.poll()
+        if batch is not None:
+            self._execute(batch)
+
+    def flush(self):
+        if self.batcher.pending:
+            self._execute(self.batcher._flush(full=False))
+
+    def _execute(self, batch: list[Request]):
+        import jax
+
+        from repro.sketchindex import batch_queries, distributed_topk, score_batch
+
+        qp = batch_queries(self.index, [r.q_ids for r in batch])
+        scores = score_batch(self.didx, qp)
+        vals, ids = distributed_topk(scores, self.topk, self.mesh)
+        jax.block_until_ready(vals)
+        m = self.index.num_records
+        sc = np.asarray(scores)[:m]
+        for j, req in enumerate(batch):
+            hits = np.nonzero(sc[:, j] >= req.threshold)[0]
+            self.results[req.rid] = {
+                "hits": hits,
+                "topk_ids": np.asarray(ids)[j],
+                "topk_scores": np.asarray(vals)[j],
+            }

@@ -1,0 +1,9 @@
+from repro.sketchindex.distributed import (  # noqa: F401
+    DeviceIndex,
+    batch_queries,
+    distributed_search,
+    distributed_topk,
+    score_batch,
+    to_device_index,
+)
+from repro.sketchindex.build import distributed_tau  # noqa: F401

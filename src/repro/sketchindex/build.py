@@ -1,0 +1,95 @@
+"""Distributed GB-KMV construction primitives.
+
+At 1000 nodes the records stream in sharded; per-record hashing/filtering/
+sorting is purely local (kernels/hash_threshold.py is the device hot
+path). Two quantities need global agreement and both reduce to fixed-size
+collective reductions — never a data shuffle:
+
+  * the global threshold τ (budget-th smallest hash over ALL elements):
+    a two-level histogram refine — psum a 4096-bin histogram of the top
+    12 hash bits, locate the budget-crossing bin, psum a second 4096-bin
+    histogram *within* that bin. τ lands within 2^8 hash values of exact
+    (≪ one element of budget error in expectation).
+  * the top-r frequent elements: psum of per-shard element-count
+    histograms (or count-min at 10⁹-element universes — noted in
+    DESIGN.md); top-r is then a local argsort of the reduced counts.
+
+``distributed_tau`` below is the shard_map reduction; ``histogram_tau``
+is the single-device core both the tests and the launcher share.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_LEVEL_BITS = 12
+_BINS = 1 << _LEVEL_BITS
+
+
+def _hist(hashes, shift: int, mask_base, mask_width: int):
+    """Histogram of ((h >> shift) & (BINS-1)) restricted to a bin prefix."""
+    h = hashes
+    if mask_width:
+        keep = (h >> jnp.uint32(shift + _LEVEL_BITS)) == mask_base
+    else:
+        keep = jnp.ones(h.shape, bool)
+    idx = ((h >> jnp.uint32(shift)) & jnp.uint32(_BINS - 1)).astype(jnp.int32)
+    return jnp.zeros(_BINS, jnp.int32).at[idx].add(keep.astype(jnp.int32))
+
+
+def histogram_tau(hashes, budget: int):
+    """Two-level histogram τ-selection on one device (jnp).
+
+    Returns a uint32 upper bound of the bin containing the budget-th
+    smallest hash (exact to 2^8 = 256 hash values on a 32-bit space).
+    """
+    hashes = jnp.asarray(hashes, jnp.uint32)
+    h1 = _hist(hashes, 32 - _LEVEL_BITS, None, 0)
+    c1 = jnp.cumsum(h1)
+    b1 = jnp.argmax(c1 >= budget).astype(jnp.uint32)       # first crossing bin
+
+    h2 = _hist(hashes, 32 - 2 * _LEVEL_BITS, b1, _LEVEL_BITS)
+    below1 = jnp.where(b1 > 0, c1[jnp.maximum(b1, 1) - 1], 0)
+    c2 = below1 + jnp.cumsum(h2)
+    b2 = jnp.argmax(c2 >= budget).astype(jnp.uint32)
+
+    rem_bits = 32 - 2 * _LEVEL_BITS
+    tau = ((b1 << jnp.uint32(32 - _LEVEL_BITS))
+           | (b2 << jnp.uint32(rem_bits))
+           | jnp.uint32((1 << rem_bits) - 1))
+    return tau
+
+
+def distributed_tau(hashes_sharded, budget: int, mesh: Mesh, row_axes):
+    """τ over a mesh-sharded flat hash stream: local hist → psum → select.
+
+    ``hashes_sharded`` u32[N] sharded on ``row_axes``. Collective cost:
+    two psums of 4096×4B — independent of data size and node count.
+    """
+    axes = row_axes if isinstance(row_axes, tuple) else (row_axes,)
+
+    def local(h):
+        h1 = _hist(h, 32 - _LEVEL_BITS, None, 0)
+        h1 = jax.lax.psum(h1, axes)
+        c1 = jnp.cumsum(h1)
+        b1 = jnp.argmax(c1 >= budget).astype(jnp.uint32)
+
+        h2 = _hist(h, 32 - 2 * _LEVEL_BITS, b1, _LEVEL_BITS)
+        h2 = jax.lax.psum(h2, axes)
+        below1 = jnp.where(b1 > 0, c1[jnp.maximum(b1, 1) - 1], 0)
+        c2 = below1 + jnp.cumsum(h2)
+        b2 = jnp.argmax(c2 >= budget).astype(jnp.uint32)
+
+        rem_bits = 32 - 2 * _LEVEL_BITS
+        return ((b1 << jnp.uint32(32 - _LEVEL_BITS))
+                | (b2 << jnp.uint32(rem_bits))
+                | jnp.uint32((1 << rem_bits) - 1))
+
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(P(row_axes),),
+                       out_specs=P(), check_vma=False)
+    return fn(jnp.asarray(hashes_sharded, jnp.uint32))

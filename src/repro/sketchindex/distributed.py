@@ -1,0 +1,200 @@
+"""Device-resident, mesh-sharded GB-KMV index (the paper at cluster scale).
+
+Layout: the packed sketch matrices (core/sketches.py) with the *record*
+dim sharded over every mesh axis — P(("pod","data","model")) — because
+containment scoring is embarrassingly parallel over records. Queries are
+replicated (a query batch is KBs).
+
+Search = one sweep of the sharded matrix:
+    scores[M, Gq] = kernel/jnp scoring   (records stay put, zero collective)
+    then either
+      * threshold mask (Algorithm 2)     — zero-collective output, or
+      * global top-k: per-shard lax.top_k → all_gather of (devices × k × Gq)
+        candidates (tiny) → final top_k — the ONLY collective in the
+        query path, bytes = devices·k·8 per query.
+
+Query batching (beyond-paper): scoring Gq queries per sweep divides the
+HBM-bound roofline term by Gq — see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.estimators import buffer_intersection, gkmv_pair_estimate
+from repro.core.hashing import PAD
+from repro.core.sketches import PackedSketches
+from repro.parallel.sharding import logical_to_spec
+
+
+@dataclasses.dataclass
+class DeviceIndex:
+    """Sharded PackedSketches + the metadata needed to sketch queries."""
+
+    values: jax.Array    # u32[Mp, C]   rows sharded
+    lengths: jax.Array   # i32[Mp]
+    thresh: jax.Array    # u32[Mp]
+    buf: jax.Array       # u32[Mp, W]
+    sizes: jax.Array     # i32[Mp]
+    num_records: int     # true M (before padding)
+    tau: int             # hashable metadata (jit cache key)
+    top_elems: tuple
+    seed: int
+
+    @property
+    def padded_records(self) -> int:
+        return self.values.shape[0]
+
+
+def _pad_rows(a: np.ndarray, target: int, fill):
+    if a.shape[0] == target:
+        return a
+    pad = np.full((target - a.shape[0],) + a.shape[1:], fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def to_device_index(index, mesh: Mesh) -> DeviceIndex:
+    """Place a host GBKMVIndex onto the mesh, record-dim fully sharded.
+
+    Rows are padded to a multiple of the mesh size; padded rows get
+    thresh=0 (nothing live → score 0, never a false candidate).
+    """
+    s: PackedSketches = index.sketches
+    n_dev = mesh.devices.size
+    m = s.num_records
+    mp = -(-m // n_dev) * n_dev
+
+    row_spec = logical_to_spec(("records",), mesh)
+    rows2d = NamedSharding(mesh, P(row_spec[0], None))
+    rows1d = NamedSharding(mesh, P(row_spec[0]))
+
+    return DeviceIndex(
+        values=jax.device_put(_pad_rows(np.asarray(s.values), mp, PAD), rows2d),
+        lengths=jax.device_put(_pad_rows(np.asarray(s.lengths), mp, 0), rows1d),
+        thresh=jax.device_put(_pad_rows(np.asarray(s.thresh), mp, 0), rows1d),
+        buf=jax.device_put(
+            _pad_rows(np.asarray(s.buf if s.buf.shape[1] else
+                                 np.zeros((m, 1), np.uint32)), mp, 0), rows2d),
+        sizes=jax.device_put(_pad_rows(np.asarray(s.sizes), mp, 0), rows1d),
+        num_records=m,
+        tau=int(index.tau),
+        top_elems=tuple(int(e) for e in index.top_elems),
+        seed=index.seed,
+    )
+
+
+def batch_queries(index, queries) -> PackedSketches:
+    """Sketch a list of query id-arrays into one replicated query pack."""
+    from repro.core.gbkmv import sketch_query
+
+    packs = [sketch_query(index, np.asarray(q)) for q in queries]
+    cap = max(p.values.shape[1] for p in packs)
+    w = max(p.buf.shape[1] for p in packs)
+
+    def padcat(field, fill, width):
+        rows = []
+        for p in packs:
+            a = np.asarray(getattr(p, field))
+            if a.ndim == 2 and a.shape[1] < width:
+                a = np.pad(a, ((0, 0), (0, width - a.shape[1])),
+                           constant_values=fill)
+            rows.append(a)
+        return np.concatenate(rows, axis=0)
+
+    return PackedSketches(
+        values=padcat("values", PAD, cap),
+        lengths=padcat("lengths", 0, 0),
+        thresh=padcat("thresh", 0, 0),
+        buf=padcat("buf", 0, w),
+        sizes=padcat("sizes", 0, 0),
+    )
+
+
+def _scores_jnp(values, lengths, thresh, buf, q_values, q_thresh, q_buf, q_sizes):
+    """Pure-jnp scoring [Mshard, Gq] — the pjit/dry-run lowering path."""
+    def one_query(qv, qt, qb, qs):
+        d_hat, _, _ = gkmv_pair_estimate(qv, None, qt, values, lengths, thresh)
+        o1 = buffer_intersection(qb, buf)
+        return (o1.astype(jnp.float32) + d_hat) / jnp.maximum(
+            qs.astype(jnp.float32), 1.0)
+
+    return jax.vmap(one_query)(q_values, q_thresh, q_buf, q_sizes).T
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def score_batch(didx: DeviceIndex, q: PackedSketches, impl: str = "jnp"):
+    """Containment scores f32[Mp, Gq]; records sharded, queries replicated."""
+    qv = jnp.asarray(q.values, jnp.uint32)
+    qt = jnp.asarray(q.thresh, jnp.uint32)
+    qb = jnp.asarray(q.buf, jnp.uint32)
+    qs = jnp.asarray(q.sizes, jnp.int32)
+    if qb.shape[1] != didx.buf.shape[1]:
+        qb = jnp.pad(qb, ((0, 0), (0, didx.buf.shape[1] - qb.shape[1])))
+    if impl == "kernel":
+        from repro.kernels.ops import score_index
+        return score_index(didx.values, didx.thresh, didx.buf,
+                           qv, qt, qb, qs)
+    return _scores_jnp(didx.values, didx.lengths, didx.thresh, didx.buf,
+                       qv, qt, qb, qs)
+
+
+jax.tree_util.register_dataclass(
+    DeviceIndex,
+    data_fields=["values", "lengths", "thresh", "buf", "sizes"],
+    meta_fields=["num_records", "tau", "top_elems", "seed"],
+)
+
+
+def distributed_topk(scores, k: int, mesh: Mesh):
+    """Global top-k over the sharded record dim via shard_map.
+
+    scores f32[Mp, Gq] (rows sharded) -> (vals f32[Gq, k], ids i32[Gq, k]).
+    Per-shard top-k then one tiny all_gather of (n_dev · k) candidates.
+    """
+    row_axes = logical_to_spec(("records",), mesh)[0]
+    n_shards = int(np.prod([mesh.shape[a] for a in (
+        row_axes if isinstance(row_axes, tuple) else (row_axes,))]))
+    mp = scores.shape[0]
+    shard_rows = mp // n_shards
+
+    def local(scores_blk):                       # [mp/n, Gq]
+        v, i = jax.lax.top_k(scores_blk.T, min(k, shard_rows))  # [Gq, k]
+        # Shard-local row ids -> global ids.
+        if isinstance(row_axes, tuple):
+            pos = 0
+            stride = 1
+            for a in reversed(row_axes):
+                pos = pos + jax.lax.axis_index(a) * stride
+                stride = stride * mesh.shape[a]
+        else:
+            pos = jax.lax.axis_index(row_axes)
+        gid = i + pos * shard_rows
+        vg = jax.lax.all_gather(v, row_axes, axis=0, tiled=False)
+        ig = jax.lax.all_gather(gid, row_axes, axis=0, tiled=False)
+        vg = vg.reshape((-1,) + v.shape)          # [n, Gq, k]
+        ig = ig.reshape((-1,) + gid.shape)
+        vflat = jnp.moveaxis(vg, 0, 1).reshape(v.shape[0], -1)   # [Gq, n*k]
+        iflat = jnp.moveaxis(ig, 0, 1).reshape(v.shape[0], -1)
+        vtop, sel = jax.lax.top_k(vflat, k)
+        return vtop, jnp.take_along_axis(iflat, sel, axis=-1)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(row_axes, None),),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(scores)
+
+
+def distributed_search(didx: DeviceIndex, q: PackedSketches, threshold: float,
+                       impl: str = "jnp"):
+    """Algorithm 2 at cluster scale: boolean candidate mask [Mp, Gq]."""
+    scores = score_batch(didx, q, impl=impl)
+    return scores >= threshold, scores

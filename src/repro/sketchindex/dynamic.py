@@ -1,0 +1,126 @@
+"""Dynamic GB-KMV index maintenance (paper §IV-B, "Processing Dynamic
+Data"): insert records under a FIXED space budget by re-tightening the
+global threshold τ.
+
+Correctness argument (the paper sketches it; we make it exact): every
+record's sketch holds ALL hashes ≤ its effective threshold. For a new,
+lower τ' ≤ min(thresholds), each stored row filtered at τ' is again a
+complete τ'-sketch — so re-selecting τ' from the *kept* hash multiset
+(plus the new records' hashes) yields a valid G-KMV index without
+touching the raw data. Only τ-INCREASES would need raw records; under a
+fixed budget and growing data τ only ever decreases.
+
+The buffer's top-r element set is frozen between rebuilds (new elements
+hash into the G-KMV tail); a frequency drift counter triggers a full
+rebuild when the frozen set no longer covers the head mass — the same
+amortized-rebuild pattern production inverted indexes use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.gbkmv import GBKMVIndex
+from repro.core.hashing import PAD, hash_u32_np
+from repro.core.sketches import PackedSketches, make_bitmaps, pack_rows
+
+
+@dataclasses.dataclass
+class DynamicStats:
+    inserts: int = 0
+    tau_retightens: int = 0
+    drift: float = 0.0          # head-mass fraction hashing outside buffer
+
+
+def _kept_hash_rows(s: PackedSketches) -> list[np.ndarray]:
+    vals = np.asarray(s.values)
+    lens = np.asarray(s.lengths)
+    return [vals[i, : lens[i]] for i in range(s.num_records)]
+
+
+def insert_records(
+    index: GBKMVIndex,
+    new_records: list[np.ndarray],
+    budget: int,
+    stats: DynamicStats | None = None,
+) -> tuple[GBKMVIndex, DynamicStats]:
+    """Insert ``new_records`` keeping total slots ≤ ``budget``.
+
+    Steps (all on kept hashes only — no raw-data access for old rows):
+      1. hash + buffer-split the new records at the CURRENT τ / top-r;
+      2. if the total kept hashes exceed the tail budget, re-select
+         τ' = budget-th smallest kept hash and refilter every row;
+      3. repack. Rows keep per-row effective thresholds (min(τ', old)).
+    """
+    stats = stats or DynamicStats()
+    s = index.sketches
+    top = index.top_elems
+    top_set = set(int(e) for e in np.asarray(top))
+    r = index.buffer_bits
+    m_old = s.num_records
+
+    # 1. new rows: split buffer head / hashed tail, filter at current τ.
+    new_tails, new_kept, new_sizes = [], [], []
+    drift_hits = 0
+    drift_total = 0
+    for rec in new_records:
+        rec = np.asarray(rec)
+        if top_set:
+            mask = np.asarray([int(e) not in top_set for e in rec], bool)
+            tail = rec[mask]
+            drift_hits += int(mask.sum())
+            drift_total += len(rec)
+        else:
+            tail = rec
+            drift_total += len(rec)
+            drift_hits += len(rec)
+        h = np.sort(hash_u32_np(tail, seed=index.seed))
+        new_tails.append(tail)
+        new_kept.append(h[h <= index.tau])
+        new_sizes.append(len(rec))
+
+    old_rows = _kept_hash_rows(s)
+    all_rows = old_rows + new_kept
+    m = len(all_rows)
+
+    # 2. budget check on the tail (buffer words charged per record).
+    words = -(-r // 32) if r else 0
+    tail_budget = max(budget - m * words, m)
+    total_kept = sum(len(x) for x in all_rows)
+    old_thr = np.asarray(s.thresh)
+    new_thr = np.concatenate(
+        [old_thr, np.full(len(new_records), index.tau, np.uint32)])
+    tau = np.uint32(index.tau)
+    if total_kept > tail_budget:
+        allh = np.concatenate([r_ for r_ in all_rows if len(r_)]) \
+            if total_kept else np.zeros(0, np.uint32)
+        tau = np.uint32(np.partition(allh, tail_budget - 1)[tail_budget - 1])
+        all_rows = [r_[r_ <= tau] for r_ in all_rows]
+        new_thr = np.minimum(new_thr, tau)
+        stats.tau_retightens += 1
+
+    # 3. repack (buffer bitmaps: old rows copied, new rows computed).
+    sizes = np.concatenate(
+        [np.asarray(s.sizes), np.asarray(new_sizes, np.int32)])
+    if r and len(top):
+        new_maps = make_bitmaps(new_records, np.asarray(top))
+        bitmaps = np.concatenate([np.asarray(s.buf), new_maps], axis=0)
+    else:
+        bitmaps = np.zeros((m, s.buf.shape[1]), np.uint32)
+        if s.buf.shape[1]:
+            bitmaps[:m_old] = np.asarray(s.buf)
+    packed = pack_rows(all_rows, new_thr, sizes, bitmaps=bitmaps)
+
+    stats.inserts += len(new_records)
+    if drift_total:
+        stats.drift = drift_hits / drift_total
+    return GBKMVIndex(sketches=packed, tau=tau, top_elems=index.top_elems,
+                      seed=index.seed, buffer_bits=r), stats
+
+
+def needs_rebuild(stats: DynamicStats, drift_threshold: float = 0.98) -> bool:
+    """True when the frozen top-r buffer stopped covering the head mass
+    (new data's elements almost entirely bypass the buffer)."""
+    return stats.drift > drift_threshold and stats.inserts > 0

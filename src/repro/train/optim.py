@@ -1,0 +1,109 @@
+"""Pure-JAX AdamW with warmup-cosine schedule.
+
+Optimizer state is a pytree shaped like the params, so it inherits the
+params' NamedShardings (TP dims over "model", FSDP dim over "data") — the
+moments are fully sharded with zero extra code, which is the ZeRO-3-
+equivalent placement (strictly stronger than ZeRO-1's data-axis-only
+sharding). ``moment_dtype`` lets memory-tight giants (llama4-maverick
+train) drop the moments to bf16 — see DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def schedule(step, cfg: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.clip(prog, 0.0, 1.0)))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params, cfg: OptConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, cfg: OptConfig):
+    """(grads, state, params) -> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        step_dir = (mu32 / c1) / (jnp.sqrt(nu32 / c2) + cfg.eps)
+        # Decoupled weight decay on matrices only (ndim >= 2).
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step_dir + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    # Chain leaves through optimization_barrier: the f32 upcast temps of
+    # one leaf are dead before the next leaf starts, so peak optimizer
+    # memory is one leaf's working set, not the whole model's (matters at
+    # 400B params: each stacked-expert leaf is 2 GB/device in f32).
+    out = []
+    prev = None
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        if prev is not None:
+            # Tie this leaf's inputs to the previous leaf's outputs so XLA
+            # cannot overlap their lifetimes.
+            p, g, mu, nu, *_ = jax.lax.optimization_barrier(
+                (p, g, mu, nu) + prev)
+        res = upd(p, g, mu, nu)
+        prev = res
+        out.append(res)
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "nu": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_state_axes(params_axes: Any):
+    """Logical axes of the optimizer state (moments mirror the params)."""
+    return {"mu": params_axes, "nu": params_axes, "step": ()}

@@ -1,0 +1,83 @@
+"""Step builders: jit-able train / eval steps with microbatch accumulation.
+
+``make_train_step(loss_fn, opt_cfg, microbatches=k)`` returns
+``step(params, opt_state, batch) -> (params, opt_state, metrics)``:
+
+  * microbatches == 1 — single fused fwd/bwd.
+  * microbatches  > 1 — ``lax.scan`` over k microbatches accumulating f32
+    grads (keeps the transient activation + logits footprint at 1/k; the
+    XLA-inserted DP gradient all-reduce happens once, on the accumulated
+    tree, not per microbatch).
+
+Distribution is carried entirely by in/out shardings at the jit boundary
+plus the models' internal with_sharding_constraints; the step body itself
+is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.train import optim
+
+
+def _split_micro(batch, k: int):
+    def sp(x):
+        assert x.shape[0] % k == 0, (x.shape, k)
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: optim.OptConfig,
+    *,
+    microbatches: int = 1,
+    accum_dtype: str = "float32",
+    grad_transform: Callable | None = None,
+):
+    """loss_fn(params, batch) -> (loss, metrics_dict).
+
+    ``accum_dtype="bfloat16"`` halves the gradient-accumulator footprint —
+    needed to fit 400B-class training in 16 GB/chip (DESIGN.md §6); at
+    ≤8 microbatches the bf16 summation error is ~2⁻⁸ relative, well under
+    gradient noise.
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    acc_dt = jnp.dtype(accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, met), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, microbatches)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, x: a + x.astype(acc_dt), acc, g)
+                return acc, (l, m)
+
+            grads, (losses, mets) = lax.scan(body, acc0, micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            met = jax.tree.map(lambda x: x.mean(), mets)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, omet = optim.update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **met, **omet}
+
+    return train_step
+
+
+def make_eval_step(loss_fn: Callable):
+    def eval_step(params, batch):
+        loss, met = loss_fn(params, batch)
+        return {"loss": loss, **met}
+    return eval_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests see the single real CPU device (the 512-device override belongs to
+# launch/dryrun.py ONLY — never set it here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,59 @@
+import numpy as np
+
+from repro.core import exact, lshe, minhash, search
+from repro.data.synth import generate_dataset, make_query_workload
+
+
+def _data(seed=0, m=200):
+    return generate_dataset(m=m, n_elems=5000, alpha_freq=1.1, alpha_size=2.5,
+                            size_min=20, size_max=400, seed=seed)
+
+
+def test_exact_vs_prefix_agree():
+    records = _data(1)
+    idx = exact.build_inverted(records)
+    for q in make_query_workload(records, 10, seed=3):
+        for t in (0.3, 0.5, 0.8):
+            a = exact.exact_search(idx, q, t)
+            b = exact.prefix_filter_search(idx, q, t)
+            np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def test_exact_self_hit():
+    records = _data(2)
+    idx = exact.build_inverted(records)
+    hits = exact.exact_search(idx, records[3], 1.0)
+    assert 3 in hits
+
+
+def test_minhash_jaccard_estimate():
+    rng = np.random.default_rng(0)
+    a = rng.choice(10_000, size=400, replace=False)
+    b = np.concatenate([a[:200], rng.choice(np.arange(10_000, 20_000), 200, False)])
+    sigs = minhash.build_signatures([a, b], num_hashes=512)
+    s = minhash.jaccard_estimate(sigs[0], sigs[1:])[0]
+    true_j = 200 / 600
+    assert abs(s - true_j) < 0.08  # ~3σ of s(1-s)/k
+
+
+def test_lshe_query_recall_bias():
+    # LSH-E is recall-heavy (paper §III-B): on a self-query workload it
+    # should retrieve the query record itself nearly always.
+    records = _data(3, m=150)
+    idx = lshe.build_lshe(records, num_hashes=128, num_partitions=8, seed=0)
+    found_self = 0
+    queries = list(range(0, 150, 10))
+    for qi in queries:
+        cands = lshe.query_lshe(idx, records[qi], threshold=0.5, seed=0)
+        found_self += int(qi in cands)
+    assert found_self >= int(0.9 * len(queries))
+
+
+def test_lshe_vs_exact_eval_runs():
+    records = _data(4, m=120)
+    einv = exact.build_inverted(records)
+    idx = lshe.build_lshe(records, num_hashes=64, num_partitions=4, seed=0)
+    res = search.evaluate_engine("lshe", idx, einv,
+                                 make_query_workload(records, 6, seed=5), 0.5)
+    assert 0.0 <= res["f"] <= 1.0
+    assert res["recall"] >= res["precision"] * 0.5  # recall-leaning

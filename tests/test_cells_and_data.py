@@ -1,0 +1,130 @@
+"""Launch-layer and data-pipeline tests: cell construction for all 40
+(arch × shape) pairs on a host mesh, shape-aware sharding fallback,
+pipeline determinism, neighbor sampler, HLO parser units.
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.shapes import FAMILY_SHAPES
+from repro.data.pipeline import BatchCursor, dedup_corpus, shingle, token_batches
+from repro.data.sampler import CSRGraph, sample_batch
+from repro.launch.cells import all_cells, build_cell
+from repro.parallel.sharding import spec_for_shape
+
+
+def test_all_cells_enumerate_40():
+    cells = all_cells()
+    assert len(cells) == 40
+    assert len({a for a, _ in cells}) == 10
+
+
+def test_build_every_cell_host_mesh():
+    """Cell construction (fn, abstract args, shardings) for all 40 pairs.
+
+    Construction must not allocate any full-config tensors — only
+    ShapeDtypeStructs — so it runs instantly on the 1-CPU host mesh.
+    """
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch, shape_id in all_cells():
+        cell = build_cell(arch, shape_id, mesh)
+        n_args = len(jax.tree.leaves(cell.args))
+        n_sh = len(jax.tree.leaves(cell.in_shardings,
+                                   is_leaf=lambda x: hasattr(x, "spec")))
+        assert n_args == n_sh, (arch, shape_id)
+        for leaf in jax.tree.leaves(cell.args):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, shape_id)
+
+
+def test_spec_for_shape_divisibility_fallback():
+    # AbstractMesh: spec resolution needs only shape/axis names, so the
+    # 1-CPU container can reason about a 2×2 mesh.
+    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    # 8 % 2 == 0 → sharded; 7 % 2 != 0 → dropped.
+    assert spec_for_shape((8, 7), ("batch", "heads"), mesh) == P(("data",), None)
+    # multi-axis entries degrade from the right.
+    assert spec_for_shape((2,), ("records",), mesh) == P("data")
+    assert spec_for_shape((4,), ("records",), mesh) == P(("data", "model"))
+
+
+def test_token_batches_deterministic_resume():
+    docs = [np.arange(100) + i for i in range(5)]
+    c1 = BatchCursor(seed=7)
+    s1 = token_batches(docs, 4, 16, c1)
+    first = [next(s1) for _ in range(5)]
+    # resume from step 3
+    c2 = BatchCursor(seed=7, step=3)
+    s2 = token_batches(docs, 4, 16, c2)
+    resumed = next(s2)
+    np.testing.assert_array_equal(first[3]["tokens"], resumed["tokens"])
+
+
+def test_dedup_drops_planted_superset():
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 5000, size=200)
+    docs = [base,
+            rng.integers(0, 5000, size=150),
+            np.concatenate([base, rng.integers(0, 5000, size=10)])]  # superset
+    kept, stats = dedup_corpus(docs, threshold=0.8, budget_frac=0.5)
+    assert stats["dropped"] == 1
+    assert 0 in kept and 1 in kept and 2 not in kept
+
+
+def test_shingle_basic():
+    t = np.asarray([1, 2, 3, 4, 5])
+    s3 = shingle(t, q=3)
+    assert len(s3) == 3                       # 3 trigrams, all distinct
+    assert len(shingle(t[:2], q=3)) == 2      # shorter than q → unigrams
+
+
+def test_neighbor_sampler_shapes_and_membership():
+    rng = np.random.default_rng(0)
+    n, e = 50, 400
+    edges = rng.integers(0, n, (e, 2)).astype(np.int32)
+    g = CSRGraph.from_edges(edges, n)
+    feats = rng.normal(size=(n, 8)).astype(np.float32)
+    labels = rng.integers(0, 3, n)
+    batch = sample_batch(g, feats, labels, batch_nodes=6, fanout=(4, 3),
+                         rng=rng)
+    assert batch["h1"].shape == (6, 4, 8)
+    assert batch["h2"].shape == (6, 4, 3, 8)
+    # sampled hop-1 nodes must be true in-neighbors (or self for isolated)
+    seeds = np.argwhere((feats[:, None] == batch["seed_feats"][None])
+                        .all(-1))[:, 0]
+    del seeds  # membership asserted via CSR directly below
+    nodes = rng.integers(0, n, 10).astype(np.int32)
+    neigh = g.sample_neighbors(nodes, 5, rng)
+    for i, node in enumerate(nodes):
+        lo, hi = g.indptr[node], g.indptr[node + 1]
+        allowed = set(g.indices[lo:hi].tolist()) or {int(node)}
+        assert set(neigh[i].tolist()) <= allowed
+
+
+def test_hlo_parse_shape_bytes():
+    sys.path.insert(0, ".")
+    from benchmarks.hlo_parse import _shape_bytes
+
+    assert _shape_bytes("f32[2,3]{1,0}") == 24
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[2], s8[4])") == 12
+    assert _shape_bytes("pred[]") == 1
+
+
+@pytest.mark.parametrize("fam,count", [("lm", 4), ("gnn", 4), ("recsys", 4)])
+def test_family_shape_tables(fam, count):
+    assert len(FAMILY_SHAPES[fam]) == count
+
+
+def test_registry_full_configs_instantiate():
+    """Full (not reduced) configs build their dataclasses (no arrays)."""
+    for arch in registry.ARCH_IDS:
+        mod = registry.get_module(arch)
+        cfg = (mod.config(d_feat=100, n_classes=10)
+               if registry.family(arch) == "gnn" else mod.config())
+        assert cfg.name == arch

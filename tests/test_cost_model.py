@@ -1,0 +1,54 @@
+import numpy as np
+
+from repro.core import cost_model
+
+
+def test_pair_variance_eq11_hand_value():
+    # k=10, D∪=100, D∩=20: Var = 20*(10*100-100-100+10+20)/(10*8)
+    v = cost_model.pair_variance(20, 100, 10)
+    assert np.isclose(v, 20 * (1000 - 100 - 100 + 10 + 20) / 80.0)
+
+
+def test_pair_variance_k_too_small_is_bounded_worst_case():
+    # Eq. 11 is undefined at k <= 2; the model charges the squared-error
+    # worst case D∩² (missing the tail entirely) instead of +inf — see
+    # EXPERIMENTS.md §Claims C1.
+    assert float(cost_model.pair_variance(5, 50, 2)) == 25.0
+    assert np.isfinite(cost_model.pair_variance(5, 50, 1))
+
+
+def test_skewed_data_wants_buffer():
+    # Extremely skewed element frequency: a handful of elements dominate →
+    # the cost model should allocate a nonzero buffer.
+    freqs = np.asarray([10_000] * 32 + [1] * 5000)
+    sizes = np.full(500, 200)
+    r = cost_model.choose_buffer_size(freqs, sizes, budget=8000, m=500)
+    assert r > 0
+
+
+def test_uniform_data_wants_no_buffer():
+    freqs = np.full(5000, 3)
+    sizes = np.full(500, 60)
+    r = cost_model.choose_buffer_size(freqs, sizes, budget=8000, m=500)
+    assert r == 0
+
+
+def test_variance_decreases_with_budget():
+    freqs = np.asarray([1000] * 50 + [2] * 3000)
+    sizes = np.full(300, 100)
+    v_small = cost_model.gbkmv_variance(freqs, sizes, budget=2000, m=300, r=0)
+    v_big = cost_model.gbkmv_variance(freqs, sizes, budget=8000, m=300, r=0)
+    assert v_big < v_small
+
+
+def test_powerlaw_wrapper_finite():
+    v = cost_model.powerlaw_variance(r=64, alpha1=1.2, alpha2=2.5,
+                                     budget=50_000, n_elems=10_000, m=1000)
+    assert np.isfinite(v) and v >= 0
+
+
+def test_fit_power_law():
+    rng = np.random.default_rng(0)
+    x = rng.pareto(1.5, size=20_000) + 1.0  # tail exponent α = 2.5
+    a = cost_model.fit_power_law_exponent(x, x_min=1.0)
+    assert 2.2 < a < 2.8

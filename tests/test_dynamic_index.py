@@ -1,0 +1,83 @@
+"""Dynamic-index tests: insertion equivalence vs full rebuild, τ
+monotonicity under a fixed budget, budget enforcement."""
+
+import numpy as np
+
+from repro.core.exact import build_inverted, exact_search
+from repro.core.gbkmv import build_gbkmv, search
+from repro.core.search import f_score
+from repro.data.synth import generate_dataset
+from repro.sketchindex.dynamic import DynamicStats, insert_records, needs_rebuild
+
+
+def _data(m, seed):
+    return generate_dataset(m=m, n_elems=5000, alpha_freq=1.1,
+                            alpha_size=2.0, seed=seed)
+
+
+def test_insert_matches_rebuild_accuracy():
+    """Incrementally built index ≈ from-scratch index in search quality."""
+    recs = _data(300, 0)
+    budget = 6000
+    base = build_gbkmv(recs[:200], budget=budget, r=32)
+    dyn, _ = insert_records(base, recs[200:], budget=budget)
+    full = build_gbkmv(recs, budget=budget, r=32)
+    assert dyn.num_records == full.num_records == 300
+
+    exact_index = build_inverted(recs)
+    f_dyn, f_full = [], []
+    for q in recs[::40]:
+        truth = exact_search(exact_index, q, 0.5)
+        f_dyn.append(f_score(truth, search(dyn, q, 0.5)))
+        f_full.append(f_score(truth, search(full, q, 0.5)))
+    # Same budget, same data → comparable accuracy (τ may differ by the
+    # buffer's different frequency snapshot).
+    assert abs(np.mean(f_dyn) - np.mean(f_full)) < 0.15
+
+
+def test_tau_only_decreases_and_budget_holds():
+    recs = _data(400, 1)
+    budget = 3000
+    index = build_gbkmv(recs[:100], budget=budget, r=0)
+    taus = [int(index.tau)]
+    stats = DynamicStats()
+    for lo in range(100, 400, 100):
+        index, stats = insert_records(index, recs[lo:lo + 100],
+                                      budget=budget, stats=stats)
+        taus.append(int(index.tau))
+        kept = int(np.asarray(index.sketches.lengths).sum())
+        # τ is INCLUSIVE: every record containing the boundary element
+        # keeps its (identical) hash, so ties overshoot by ≤ the boundary
+        # element's frequency — bounded slack, never unbounded growth.
+        assert kept <= budget + 100
+    assert all(a >= b for a, b in zip(taus, taus[1:]))
+    assert stats.tau_retightens >= 1
+    assert stats.inserts == 300
+
+
+def test_rows_remain_valid_tau_sketches():
+    """Every row's kept hashes = ALL its hashes ≤ its threshold (Thm 2
+    invariant preserved through incremental re-tightening)."""
+    from repro.core.hashing import hash_u32_np
+
+    recs = _data(150, 2)
+    budget = 1500
+    index = build_gbkmv(recs[:100], budget=budget, r=0)
+    index, _ = insert_records(index, recs[100:], budget=budget)
+    s = index.sketches
+    for i, rec in enumerate(recs):
+        h = np.sort(hash_u32_np(np.asarray(rec), seed=index.seed))
+        thr = int(np.asarray(s.thresh)[i])
+        expect = h[h <= thr]
+        got = np.asarray(s.values)[i][: int(np.asarray(s.lengths)[i])]
+        np.testing.assert_array_equal(got, expect)
+
+
+def test_drift_triggers_rebuild_signal():
+    rng = np.random.default_rng(3)
+    recs = [np.unique(rng.integers(0, 100, 40)) for _ in range(50)]
+    index = build_gbkmv(recs, budget=800, r=32)
+    # New data from a disjoint element universe → buffer useless → drift.
+    new = [np.unique(rng.integers(10_000, 20_000, 40)) for _ in range(30)]
+    _, stats = insert_records(index, new, budget=800)
+    assert needs_rebuild(stats)

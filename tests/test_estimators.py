@@ -1,0 +1,93 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.estimators import (
+    gkmv_pair_estimate, gkmv_pair_oracle_np,
+    kmv_pair_estimate, kmv_pair_oracle_np,
+    buffer_intersection,
+)
+from repro.core.hashing import hash_u32_np, PAD
+
+
+def _pack(rows, cap):
+    m = len(rows)
+    v = np.full((m, cap), PAD, np.uint32)
+    n = np.zeros(m, np.int32)
+    for i, r in enumerate(rows):
+        v[i, : len(r)] = r
+        n[i] = len(r)
+    return jnp.asarray(v), jnp.asarray(n)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_gkmv_matches_set_oracle(seed):
+    rng = np.random.default_rng(seed)
+    tau = np.uint32(0.35 * 2**32)
+    q_ids = rng.choice(5000, size=300, replace=False)
+    qh = np.sort(hash_u32_np(q_ids))
+    qk = qh[qh <= tau]
+
+    rows, taus, oracle = [], [], []
+    for _ in range(50):
+        x_ids = rng.choice(5000, size=rng.integers(20, 400), replace=False)
+        xh = np.sort(hash_u32_np(x_ids))
+        t = np.uint32(rng.uniform(0.05, 0.35) * 2**32)  # per-record thresholds
+        rows.append(xh[xh <= t])
+        taus.append(t)
+        oracle.append(gkmv_pair_oracle_np(qk, tau, rows[-1], t))
+
+    cap = max(len(r) for r in rows + [qk]) + 3
+    xv, xn = _pack(rows, cap)
+    qv, qn = _pack([qk], cap)
+    d, k, kc = gkmv_pair_estimate(qv[0], qn[0], jnp.uint32(tau), xv, xn,
+                                  jnp.asarray(np.asarray(taus, np.uint32)))
+    for i, (od, ok, okc) in enumerate(oracle):
+        assert int(k[i]) == ok
+        assert int(kc[i]) == okc
+        np.testing.assert_allclose(float(d[i]), od, rtol=2e-5)
+
+
+def test_gkmv_pair_identical_records():
+    ids = np.arange(100)
+    h = np.sort(hash_u32_np(ids))
+    tau = np.uint32(PAD - 1)
+    cap = 104
+    xv, xn = _pack([h], cap)
+    d, k, kc = gkmv_pair_estimate(xv[0], xn[0], tau, xv, xn,
+                                  jnp.asarray([tau]))
+    assert int(kc[0]) == 100 and int(k[0]) == 100
+    # (k-1)/U estimates the distinct count of the union (=100) unbiasedly.
+    assert 40 < float(d[0]) < 300
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_kmv_matches_set_oracle(seed):
+    rng = np.random.default_rng(seed)
+    kq, kx = 40, 25
+    q_ids = rng.choice(3000, size=500, replace=False)
+    qh = np.sort(hash_u32_np(q_ids))[:kq]
+    rows, oracle = [], []
+    for _ in range(30):
+        x_ids = rng.choice(3000, size=rng.integers(30, 600), replace=False)
+        xh = np.sort(hash_u32_np(x_ids))[:kx]
+        rows.append(xh)
+        oracle.append(kmv_pair_oracle_np(qh, xh))
+    cap = kq
+    xv, xn = _pack(rows, cap)
+    qv, qn = _pack([qh], cap)
+    d, k, kc = kmv_pair_estimate(qv[0], qn[0], xv, xn)
+    for i, (od, ok, okc) in enumerate(oracle):
+        assert int(k[i]) == ok, i
+        assert int(kc[i]) == okc, i
+        np.testing.assert_allclose(float(d[i]), od, rtol=2e-5)
+
+
+def test_buffer_intersection_popcount():
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 2**32, size=4, dtype=np.uint32)
+    x = rng.integers(0, 2**32, size=(7, 4), dtype=np.uint32)
+    got = np.asarray(buffer_intersection(jnp.asarray(q), jnp.asarray(x)))
+    want = [bin(int(q[w]) & int(x[i, w])).count("1") for i in range(7) for w in range(4)]
+    want = np.asarray(want).reshape(7, 4).sum(1)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,47 @@
+"""Examples must stay runnable (subprocess smoke — the public-API
+contract of deliverable (b))."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, args=(), timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "examples", script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "GB-KMV F1" in out
+
+
+@pytest.mark.slow
+def test_lm_dedup_train_short():
+    out = _run("lm_dedup_train.py", ["--steps", "30"])
+    assert "near-dups removed" in out
+    assert "[train] loss" in out
+
+
+@pytest.mark.slow
+def test_recsys_retrieval():
+    out = _run("recsys_retrieval.py")
+    assert "ranks first" in out
+
+
+@pytest.mark.slow
+def test_containment_serve():
+    out = _run("containment_serve.py",
+               ["--scale", "0.08", "--batch", "4", "--rounds", "2"])
+    assert "[accuracy] F1 vs exact" in out

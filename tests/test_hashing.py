@@ -1,0 +1,38 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_u32, hash_u32_np, unit, unit_np, PAD
+
+
+def test_np_jnp_agree():
+    ids = np.arange(10_000, dtype=np.int64)
+    a = hash_u32_np(ids, seed=3)
+    b = np.asarray(hash_u32(jnp.asarray(ids), seed=3))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_bijective_on_sample():
+    # fmix32 is a bijection on uint32: no collisions over distinct ids.
+    ids = np.arange(200_000)
+    h = hash_u32_np(ids, seed=0)
+    assert len(np.unique(h)) == len(ids)
+
+
+def test_seed_changes_hash():
+    ids = np.arange(1000)
+    assert not np.array_equal(hash_u32_np(ids, 0), hash_u32_np(ids, 1))
+
+
+def test_unit_range():
+    v = np.asarray([0, 1, 2**31, 2**32 - 1], dtype=np.uint32)
+    u = unit_np(v)
+    assert (u > 0).all() and (u <= 1.0).all()
+    uj = np.asarray(unit(jnp.asarray(v)))
+    np.testing.assert_allclose(u, uj, rtol=1e-6)
+
+
+def test_uniformity_rough():
+    # Mean of hash/2^32 over many ids ≈ 0.5 (avalanche sanity).
+    h = unit_np(hash_u32_np(np.arange(100_000)))
+    assert abs(h.mean() - 0.5) < 0.01
+    assert PAD == np.uint32(0xFFFFFFFF)

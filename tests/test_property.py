@@ -1,0 +1,86 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gkmv
+from repro.core.estimators import (
+    gkmv_pair_estimate, gkmv_pair_oracle_np, buffer_intersection,
+)
+from repro.core.hashing import hash_u32_np, PAD
+from repro.core.search import f_score
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+id_sets = st.sets(st.integers(min_value=0, max_value=4000), min_size=2, max_size=120)
+
+
+def _sketch(ids, tau):
+    h = np.sort(hash_u32_np(np.asarray(sorted(ids))))
+    return h[h <= tau]
+
+
+@given(q=id_sets, x=id_sets,
+       tq=st.floats(0.05, 0.9), tx=st.floats(0.05, 0.9))
+def test_gkmv_pair_equals_oracle(q, x, tq, tx):
+    """The packed vectorized estimator == set-based oracle, ∀ inputs."""
+    tq32, tx32 = np.uint32(tq * 2**32), np.uint32(tx * 2**32)
+    lq, lx = _sketch(q, tq32), _sketch(x, tx32)
+    cap = max(len(lq), len(lx), 1)
+    qv = np.full(cap, PAD, np.uint32); qv[: len(lq)] = lq
+    xv = np.full((1, cap), PAD, np.uint32); xv[0, : len(lx)] = lx
+    d, k, kc = gkmv_pair_estimate(
+        jnp.asarray(qv), jnp.int32(len(lq)), jnp.uint32(tq32),
+        jnp.asarray(xv), jnp.asarray([len(lx)], np.int32),
+        jnp.asarray([tx32], np.uint32))
+    od, ok, okc = gkmv_pair_oracle_np(lq, tq32, lx, tx32)
+    assert int(k[0]) == ok
+    assert int(kc[0]) == okc
+    np.testing.assert_allclose(float(d[0]), od, rtol=3e-5, atol=1e-6)
+
+
+@given(q=id_sets, x=id_sets, t=st.floats(0.05, 0.95))
+def test_kcap_bounded_by_true_intersection(q, x, t):
+    """K∩ counts common hash values — never exceeds |Q∩X| (no collisions)."""
+    t32 = np.uint32(t * 2**32)
+    lq, lx = _sketch(q, t32), _sketch(x, t32)
+    _, _, okc = gkmv_pair_oracle_np(lq, t32, lx, t32)
+    assert okc <= len(q & x)
+
+
+@given(rows=st.lists(id_sets, min_size=2, max_size=10),
+       frac=st.floats(0.1, 0.9))
+def test_threshold_budget_never_exceeded(rows, frac):
+    hrows = [hash_u32_np(np.asarray(sorted(r))) for r in rows]
+    total = sum(len(r) for r in hrows)
+    budget = max(int(frac * total), 1)
+    tau = gkmv.select_global_threshold(hrows, budget)
+    kept = sum(int((r <= tau).sum()) for r in hrows)
+    # Identical elements in different records share one hash: τ cannot split
+    # ties, so the budget may be exceeded only by the tie multiplicity at τ.
+    ties = sum(int((r == tau).sum()) for r in hrows)
+    assert kept <= max(budget, 1) + max(ties - 1, 0) or tau == np.uint32(PAD - 1)
+
+
+@given(st.lists(st.integers(0, 63), min_size=0, max_size=40),
+       st.lists(st.integers(0, 63), min_size=0, max_size=40))
+def test_popcount_matches_set_intersection(a_bits, b_bits):
+    def bm(bits):
+        w = np.zeros(2, np.uint32)
+        for b in bits:
+            w[b // 32] |= np.uint32(1) << np.uint32(b % 32)
+        return w
+    got = int(buffer_intersection(jnp.asarray(bm(a_bits)),
+                                  jnp.asarray(bm(b_bits))[None, :])[0])
+    assert got == len(set(a_bits) & set(b_bits))
+
+
+@given(t=st.sets(st.integers(0, 50), max_size=20),
+       a=st.sets(st.integers(0, 50), max_size=20))
+def test_f_score_bounds_and_perfect(t, a):
+    f = f_score(np.asarray(sorted(t)), np.asarray(sorted(a)))
+    assert 0.0 <= f <= 1.0
+    if t == a:
+        assert f == 1.0

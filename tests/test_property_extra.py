@@ -1,0 +1,129 @@
+"""Extra hypothesis property tests: system invariants of the sketch
+index, EmbeddingBag substrate, and checkpoint layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gbkmv import build_gbkmv, sketch_query
+from repro.core.estimators import gbkmv_containment
+from repro.core.hashing import hash_u32_np
+from repro.models.embedding import embedding_bag
+
+SETS = st.lists(
+    st.lists(st.integers(0, 2000), min_size=3, max_size=60,
+             unique=True).map(lambda x: np.asarray(sorted(x), np.int64)),
+    min_size=3, max_size=15)
+
+
+@settings(max_examples=20, deadline=None)
+@given(SETS, st.integers(1, 8), st.integers(0, 64))
+def test_device_scores_match_set_oracle(records, budget_per_rec, r):
+    """The vectorized device estimator must agree with the paper-formula
+    set oracle on EVERY (query=record, record) pair — including the
+    degenerate tiny-sketch cases hypothesis loves (the estimator is
+    legitimately noisy there, but it must be *consistently* noisy)."""
+    from repro.core.estimators import gkmv_pair_oracle_np
+
+    budget = budget_per_rec * len(records)
+    index = build_gbkmv(records, budget=budget, r=r)
+    s = index.sketches
+    for i, rec in enumerate(records):
+        q = sketch_query(index, rec)
+        scores = np.asarray(gbkmv_containment(q, index.sketches))
+        qh = np.asarray(q.values[0][: int(q.lengths[0])])
+        for j in range(len(records)):
+            xh = np.asarray(s.values[j][: int(s.lengths[j])])
+            d_hat, _, _ = gkmv_pair_oracle_np(
+                qh, int(q.thresh[0]), xh, int(s.thresh[j]))
+            buf_inter = bin(int.from_bytes(
+                (np.asarray(q.buf[0]) & np.asarray(s.buf[j])).tobytes(),
+                "little")).count("1") if s.buf.shape[1] else 0
+            expect = (buf_inter + d_hat) / max(len(rec), 1)
+            np.testing.assert_allclose(scores[j], expect, rtol=1e-5,
+                                       atol=1e-5, err_msg=f"pair ({i},{j})")
+
+
+@settings(max_examples=20, deadline=None)
+@given(SETS)
+def test_budget_monotone_threshold(records):
+    """A larger budget never LOWERS the global threshold τ (more hashes
+    kept per record → strictly more information)."""
+    taus = []
+    for frac in (2, 4, 8):
+        budget = frac * len(records)
+        index = build_gbkmv(records, budget=budget, r=0)
+        taus.append(int(index.tau))
+    assert taus[0] <= taus[1] <= taus[2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 30), st.integers(1, 6),
+       st.sampled_from(["sum", "mean", "max"]))
+def test_embedding_bag_matches_loop(n_rows, nnz, n_bags, combiner):
+    """take+segment_sum EmbeddingBag == per-bag python loop oracle."""
+    rng = np.random.default_rng(n_rows * 31 + nnz)
+    table = jnp.asarray(rng.normal(size=(n_rows, 5)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n_rows, nnz), jnp.int32)
+    seg = jnp.asarray(np.sort(rng.integers(0, n_bags, nnz)), jnp.int32)
+    out = np.asarray(embedding_bag(table, idx, seg, n_bags, combiner))
+    t = np.asarray(table)
+    for b in range(n_bags):
+        rows = t[np.asarray(idx)[np.asarray(seg) == b]]
+        if len(rows) == 0:
+            expect = np.zeros(5) if combiner != "max" else out[b]
+        elif combiner == "sum":
+            expect = rows.sum(0)
+        elif combiner == "mean":
+            expect = rows.mean(0)
+        else:
+            expect = rows.max(0)
+        np.testing.assert_allclose(out[b], expect, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200))
+def test_hash_jnp_matches_np(seed, n):
+    ids = np.arange(n, dtype=np.int64) * 7 + seed % 1000
+    from repro.core.hashing import hash_u32
+    np.testing.assert_array_equal(
+        np.asarray(hash_u32(jnp.asarray(ids), seed=seed % 97)),
+        hash_u32_np(ids, seed=seed % 97))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=10, max_size=300,
+                unique=True))
+def test_gkmv_union_is_valid_kmv(elems):
+    """Theorem 2 property: every hash in the τ-filtered sketch is ≤ τ and
+    the sketch contains ALL element hashes below τ (no gaps)."""
+    rec = np.asarray(sorted(elems), np.int64)
+    index = build_gbkmv([rec, rec[: len(rec) // 2]], budget=20, r=0)
+    s = index.sketches
+    h = np.sort(hash_u32_np(rec))
+    kept = np.asarray(s.values[0][: int(s.lengths[0])])
+    tau_eff = int(s.thresh[0])
+    expected = h[h <= tau_eff]
+    np.testing.assert_array_equal(kept, expected)
+
+
+def test_checkpoint_property_roundtrip(tmp_path):
+    """Random pytrees of mixed dtypes survive save→restore bit-exactly."""
+    from repro.ft import checkpoint as ckpt
+
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        tree = {
+            "a": jnp.asarray(rng.normal(size=(3, 4)), jnp.bfloat16),
+            "b": {"c": jnp.asarray(rng.integers(0, 100, 7), jnp.int32),
+                  "d": [jnp.float32(rng.normal()),
+                        jnp.asarray(rng.random(2), jnp.float16)]},
+        }
+        d = str(tmp_path / f"ck{trial}")
+        ckpt.save_checkpoint(d, trial, tree)
+        restored, _ = ckpt.restore_checkpoint(d, target=tree)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(np.asarray(x, np.float64),
+                                          np.asarray(y, np.float64))

@@ -1,0 +1,63 @@
+"""Serving batcher tests: size/deadline flush semantics with a fake
+clock; end-to-end SketchServer results == direct index search."""
+
+import jax
+import numpy as np
+
+from repro.core.gbkmv import build_gbkmv, search
+from repro.data.synth import generate_dataset, make_query_workload
+from repro.serving import MicroBatcher, Request, SketchServer
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_batcher_flush_on_size():
+    clk = FakeClock()
+    b = MicroBatcher(max_batch=3, max_wait=1.0, clock=clk)
+    assert b.submit(Request(0, np.arange(3), clk())) is None
+    assert b.submit(Request(1, np.arange(3), clk())) is None
+    batch = b.submit(Request(2, np.arange(3), clk()))
+    assert batch is not None and len(batch) == 3
+    assert b.stats.flushes_full == 1 and not b.pending
+
+
+def test_batcher_flush_on_deadline():
+    clk = FakeClock()
+    b = MicroBatcher(max_batch=8, max_wait=0.5, clock=clk)
+    b.submit(Request(0, np.arange(3), clk()))
+    assert b.poll() is None            # not old enough
+    clk.t = 0.6
+    batch = b.poll()
+    assert batch is not None and len(batch) == 1
+    assert b.stats.flushes_deadline == 1
+    assert b.stats.mean_wait > 0.5
+
+
+def test_sketch_server_end_to_end():
+    recs = generate_dataset(m=120, n_elems=4000, alpha_freq=1.1,
+                            alpha_size=2.0, seed=0)
+    index = build_gbkmv(recs, budget=2500, r=32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    clk = FakeClock()
+    srv = SketchServer(index, mesh, max_batch=4, max_wait=0.1, topk=5,
+                       clock=clk)
+    queries = make_query_workload(recs, 6)
+    rids = [srv.submit(q, threshold=0.5) for q in queries]
+    srv.flush()                         # drain the 2 stragglers
+    assert set(rids) <= set(srv.results)
+    for rid, q in zip(rids, queries):
+        res = srv.results[rid]
+        direct = set(search(index, q, 0.5).tolist())
+        assert set(res["hits"].tolist()) == direct
+        assert res["topk_scores"].shape == (5,)
+        # top-k scores are sorted descending
+        assert all(a >= b for a, b in
+                   zip(res["topk_scores"], res["topk_scores"][1:]))
+    assert srv.batcher.stats.flushes_full == 1
+    assert srv.batcher.stats.flushes_deadline == 1

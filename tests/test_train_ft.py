@@ -1,0 +1,131 @@
+"""Training substrate + fault-tolerance tests: optimizer math, microbatch
+equivalence, checkpoint roundtrip/reshard, elastic planning, straggler
+detection, gradient compression.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.ft import checkpoint as ckpt
+from repro.ft.elastic import plan_remesh
+from repro.ft.straggler import StragglerMonitor
+from repro.parallel.compression import compressed_psum_mean, init_error_state
+from repro.train import optim, steps
+
+
+def _quad_loss(params, batch):
+    """Convex toy problem: params should converge toward batch targets."""
+    err = params["w"] - batch["target"]
+    return jnp.mean(jnp.square(err)), {}
+
+
+def test_adamw_converges():
+    params = {"w": jnp.zeros((4, 4))}
+    ocfg = optim.OptConfig(lr=0.05, warmup_steps=5, total_steps=200,
+                           weight_decay=0.0)
+    opt = optim.init(params, ocfg)
+    step = jax.jit(steps.make_train_step(_quad_loss, ocfg))
+    batch = {"target": jnp.full((4, 4), 3.0)}
+    for _ in range(200):
+        params, opt, met = step(params, opt, batch)
+    assert float(jnp.abs(params["w"] - 3.0).max()) < 0.1
+
+
+def test_microbatch_equivalence():
+    """k-microbatch accumulation == single batch for the first step."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    batch = {"target": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean(jnp.square(p["w"][None, :] - b["target"])), {}
+
+    ocfg = optim.OptConfig(lr=1e-2, warmup_steps=0, grad_clip=0.0,
+                           weight_decay=0.0)
+    p1, _, m1 = steps.make_train_step(loss, ocfg)(params, optim.init(params, ocfg), batch)
+    p4, _, m4 = steps.make_train_step(loss, ocfg, microbatches=4)(
+        params, optim.init(params, ocfg), batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+
+
+def test_schedule_warmup_cosine():
+    ocfg = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(optim.schedule(jnp.int32(s), ocfg)) for s in (0, 5, 10, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < 1e-6
+
+
+def test_checkpoint_roundtrip_and_reshard(tmp_path):
+    state = {"params": {"w": jnp.arange(16, dtype=jnp.bfloat16).reshape(4, 4)},
+             "step": jnp.int32(7)}
+    d = str(tmp_path / "ckpt")
+    ckpt.save_checkpoint(d, 7, state, extra={"data_seed": 123})
+    assert ckpt.latest_step(d) == 7
+
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = {"params": {"w": jax.NamedSharding(mesh, P("data", None))},
+                 "step": jax.NamedSharding(mesh, P())}
+    restored, manifest = ckpt.restore_checkpoint(
+        d, target=state, shardings=shardings)
+    assert manifest["extra"]["data_seed"] == 123
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.asarray(state["params"]["w"], np.float32))
+    assert restored["params"]["w"].sharding.spec == P("data", None)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A crashed (partial) save directory is never picked up."""
+    d = str(tmp_path / "ckpt")
+    ckpt.save_checkpoint(d, 1, {"x": jnp.zeros(2)})
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))  # simulated crash
+    assert ckpt.latest_step(d) == 1
+
+
+def test_elastic_plan_keeps_global_batch():
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = plan_remesh(mesh, global_batch=256, per_device_batch=8)
+    assert plan.dp_size * plan.per_device_batch * plan.microbatches == 256
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(warmup=5, sustain_steps=3)
+    for _ in range(20):
+        assert mon.record(1.0) == "ok"
+    assert mon.record(10.0) == "spike"
+    assert mon.record(10.0) == "spike"
+    status = mon.record(10.0)
+    assert status == "sustained"
+    assert mon.action(status) == "evict-and-remesh"
+    # Recovery resets the streak.
+    mon.record(1.0)
+    assert mon.consecutive == 0
+
+
+def test_compressed_psum_error_feedback():
+    """int8 EF-compression: the residual is carried, and repeated steps on a
+    constant gradient average out the quantization error."""
+    mesh = jax.make_mesh((1,), ("data",))
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                          jnp.float32) * 1e-3}
+    e = init_error_state(g)
+    fn = jax.jit(jax.shard_map(
+        lambda gg, ee: compressed_psum_mean(gg, ee, "data"),
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_vma=False))
+    total = jnp.zeros_like(g["w"])
+    for _ in range(32):
+        out, e = fn(g, e)
+        total = total + out["w"]
+    # Mean of compressed outputs ≈ true gradient (error feedback property).
+    np.testing.assert_allclose(np.asarray(total / 32), np.asarray(g["w"]),
+                               atol=5e-6)
