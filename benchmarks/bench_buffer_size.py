@@ -11,8 +11,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import evaluate, load_dataset, queries_for, write_csv
+from repro import api
 from repro.core import cost_model
-from repro.core.gbkmv import build_gbkmv, element_frequencies
+from repro.core.gbkmv import element_frequencies
 
 
 def run(quick: bool = True):
@@ -32,10 +33,8 @@ def run(quick: bool = True):
         r_grid = sorted({0, 16, 32, r_max // 2, 3 * r_max // 4, r_max})
         r_star = cost_model.choose_buffer_size(freqs, sizes, budget, m)
         for r in r_grid:
-            index = build_gbkmv(recs, budget=budget, r=r)
-            from repro.core.gbkmv import search as _s
-            res = evaluate(lambda q, t: _s(index, q, t),
-                           exact_index, queries, 0.5)
+            index = api.get_engine("gbkmv").build(recs, budget, r=r)
+            res = evaluate(index.query, exact_index, queries, 0.5)
             var = cost_model.gbkmv_variance(freqs, sizes, budget, m, r)
             rows.append({"dataset": ds, "r": r, "f1": round(res["f"], 4),
                          "precision": round(res["precision"], 4),

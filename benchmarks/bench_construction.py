@@ -6,8 +6,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import load_dataset, write_csv
-from repro.core.gbkmv import build_gbkmv
-from repro.core.lshe import build_lshe
+from repro import api
 
 DATASETS = ("NETFLIX", "DELIC", "COD", "ENRON", "REUTERS", "WEBSPAM", "WDC")
 
@@ -19,10 +18,10 @@ def run(quick: bool = True):
     for ds in DATASETS:
         recs, _, total = load_dataset(ds, scale)
         t0 = time.time()
-        gb = build_gbkmv(recs, budget=int(total * 0.1))
+        gb = api.get_engine("gbkmv").build(recs, int(total * 0.1))
         t_gb = time.time() - t0
         t0 = time.time()
-        le = build_lshe(recs, num_hashes=k)
+        le = api.get_engine("lshe").build(recs, num_hashes=k)
         t_le = time.time() - t0
         data_bytes = total * 4
         rows.append({

@@ -12,7 +12,7 @@ import time
 import numpy as np
 
 from benchmarks.common import write_csv
-from repro.core.gbkmv import build_gbkmv
+from repro import api
 from repro.data.synth import generate_dataset, make_query_workload
 from repro.kernels.ops import score_index
 from repro.kernels.ref import gbkmv_score_ref
@@ -25,7 +25,7 @@ def run(quick: bool = True):
     recs = generate_dataset(m=m, n_elems=20_000, alpha_freq=1.1,
                             alpha_size=2.0, seed=0)
     total = sum(len(r) for r in recs)
-    index = build_gbkmv(recs, budget=int(total * 0.1), r=64)
+    index = api.get_engine("gbkmv").build(recs, int(total * 0.1), r=64).core
     s = index.sketches
     for gq in (1, 4, 16):
         qp = batch_queries(index, make_query_workload(recs, gq))

@@ -11,7 +11,7 @@ import numpy as np
 
 from benchmarks.common import (
     evaluate, gbkmv_engine, lshe_engine, write_csv)
-from repro.core.exact import build_inverted, exact_search, prefix_filter_search
+from repro import api
 from repro.data.synth import generate_dataset, make_query_workload
 
 
@@ -22,7 +22,7 @@ def run(quick: bool = True):
     recs = generate_dataset(m, 20_000 if quick else 100_000,
                             alpha_freq=0.0, alpha_size=0.0,
                             size_min=10, size_max=400, seed=5)
-    exact_index = build_inverted(recs)
+    exact_index = api.get_engine("exact").build(recs)
     total = sum(len(r) for r in recs)
     queries = make_query_workload(recs, 20 if quick else 80)
     for name, (fn, _) in {
@@ -40,7 +40,7 @@ def run(quick: bool = True):
                                 alpha_freq=1.33, alpha_size=9.34,
                                 size_min=max(size_max // 5, 20),
                                 size_max=size_max, seed=6)
-        exact_index = build_inverted(recs)
+        exact_index = api.get_engine("exact").build(recs)
         total = sum(len(r) for r in recs)
         queries = make_query_workload(recs, 10 if quick else 40)
         fn, _ = gbkmv_engine(recs, int(total * 0.1))
@@ -48,11 +48,12 @@ def run(quick: bool = True):
         rows.append({"part": "b_vs_exact", "engine": "GB-KMV",
                      "size_group": size_max, "f1": round(res["f"], 4),
                      "query_ms": round(res["query_s"] * 1e3, 2)})
-        for name, engine in (("FreqSet", exact_search),
-                             ("PPjoin*", prefix_filter_search)):
+        for name, eng in (("FreqSet", "exact"), ("PPjoin*", "prefix")):
+            # Reuse the inverted index already built for ground truth.
+            fn_exact = api.get_engine(eng).wrap(exact_index.core).query
             t0 = time.time()
             for q in queries:
-                engine(exact_index, q, 0.5)
+                fn_exact(q, 0.5)
             dt = (time.time() - t0) / len(queries)
             rows.append({"part": "b_vs_exact", "engine": name,
                          "size_group": size_max, "f1": 1.0,

@@ -4,12 +4,12 @@ at record-size z 1.0; record-size z 0.8→1.4 at element z 0.8."""
 from __future__ import annotations
 
 from benchmarks.common import evaluate, gbkmv_engine, lshe_engine, write_csv
-from repro.core.exact import build_inverted
+from repro import api
 from repro.data.synth import generate_dataset, make_query_workload
 
 
 def _eval_pair(recs, nq, quick):
-    exact_index = build_inverted(recs)
+    exact_index = api.get_engine("exact").build(recs)
     total = sum(len(r) for r in recs)
     queries = make_query_workload(recs, nq)
     gb, _ = gbkmv_engine(recs, int(total * 0.1))

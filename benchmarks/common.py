@@ -12,12 +12,7 @@ import time
 
 import numpy as np
 
-from repro.core import estimators
-from repro.core.exact import build_inverted, exact_search
-from repro.core.gbkmv import build_gbkmv
-from repro.core.hashing import hash_u32_np
-from repro.core.kmv import build_kmv
-from repro.core.lshe import build_lshe, query_lshe
+from repro import api
 from repro.core.search import f_score, precision_recall
 from repro.data import datasets, synth
 
@@ -38,7 +33,7 @@ def write_csv(name: str, rows: list[dict]):
 
 def load_dataset(name: str, scale: float):
     recs = datasets.load(name, scale=scale)
-    return recs, build_inverted(recs), sum(len(r) for r in recs)
+    return recs, api.get_engine("exact").build(recs), sum(len(r) for r in recs)
 
 
 def queries_for(recs, n, seed=0):
@@ -46,45 +41,27 @@ def queries_for(recs, n, seed=0):
 
 
 # ---------------------------------------------------------------------------
-# engine adapters: search(q_ids, threshold) -> candidate id array
+# engine adapters over repro.api: search(q_ids, threshold) -> candidate ids
 # ---------------------------------------------------------------------------
 
-def gbkmv_engine(recs, budget, r="auto", seed=0):
-    index = build_gbkmv(recs, budget=budget, r=r, seed=seed)
+def make_engine(name, recs, budget=None, **cfg):
+    """Any registered engine → (search fn, nbytes) benchmark adapter."""
+    index = api.get_engine(name).build(recs, budget, **cfg)
+    return index.query, index.nbytes()
 
-    def search(q_ids, threshold):
-        from repro.core.gbkmv import search as _s
-        return _s(index, q_ids, threshold)
 
-    return search, index.nbytes()
+def gbkmv_engine(recs, budget, r="auto", seed=0, backend="jnp"):
+    return make_engine("gbkmv", recs, budget, r=r, seed=seed, backend=backend)
 
 
 def kmv_engine(recs, budget, seed=0):
     """Plain KMV (Theorem 1 equal allocation, Eq. 8-10 pair estimator)."""
-    sk = build_kmv(recs, budget=budget, seed=seed)
-    k = sk.capacity
-
-    def search(q_ids, threshold):
-        h = np.sort(hash_u32_np(np.asarray(q_ids), seed=seed))[:k]
-        import jax.numpy as jnp
-        qv = jnp.asarray(np.pad(h, (0, k - len(h)),
-                                constant_values=np.uint32(0xFFFFFFFF)))
-        d_hat, _, _ = estimators.kmv_pair_estimate(
-            qv, jnp.int32(len(h)), jnp.asarray(sk.values), jnp.asarray(sk.lengths))
-        scores = np.asarray(d_hat) / max(len(q_ids), 1)
-        return np.nonzero(scores >= threshold)[0]
-
-    return search, sk.nbytes()
+    return make_engine("kmv", recs, budget, seed=seed)
 
 
 def lshe_engine(recs, num_hashes=256, num_partitions=32, seed=0):
-    index = build_lshe(recs, num_hashes=num_hashes,
+    return make_engine("lshe", recs, num_hashes=num_hashes,
                        num_partitions=num_partitions, seed=seed)
-
-    def search(q_ids, threshold):
-        return query_lshe(index, q_ids, threshold, seed=seed)
-
-    return search, index.nbytes()
 
 
 def evaluate(search_fn, exact_index, queries, threshold, alpha=1.0):
@@ -92,7 +69,7 @@ def evaluate(search_fn, exact_index, queries, threshold, alpha=1.0):
     fs, ps, rs = [], [], []
     t0 = time.time()
     for q in queries:
-        truth = exact_search(exact_index, q, threshold)
+        truth = exact_index.query(q, threshold)
         got = search_fn(q, threshold)
         fs.append(f_score(truth, got, alpha=alpha))
         p, r = precision_recall(truth, got)

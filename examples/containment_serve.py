@@ -9,18 +9,14 @@ top-k — measuring latency and accuracy against exact ground truth.
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.core.exact import build_inverted, exact_search
-from repro.core.gbkmv import build_gbkmv
+from repro import api
 from repro.core.search import f_score
 from repro.data import datasets
 from repro.data.synth import make_query_workload
 from repro.launch.mesh import host_mesh
-from repro.sketchindex import (
-    batch_queries, distributed_search, distributed_topk, score_batch,
-    to_device_index)
+from repro.sketchindex import ShardedIndex
 
 
 def main():
@@ -30,34 +26,31 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--backend", default="jnp",
+                    choices=("numpy", "jnp", "pallas"))
     args = ap.parse_args()
 
-    # --- offline: build + place the index ---
+    # --- offline: build, then place on the mesh (same api protocol) ---
     recs = datasets.load(args.dataset, scale=args.scale)
     total = sum(len(r) for r in recs)
     t0 = time.time()
-    index = build_gbkmv(recs, budget=int(total * 0.1), r="auto")
+    index = api.get_engine("gbkmv").build(recs, int(total * 0.1), r="auto")
     print(f"[build] {args.dataset}: m={len(recs)} → {index.nbytes()/1e6:.2f} MB "
-          f"GB-KMV (r={index.buffer_bits}) in {time.time()-t0:.2f}s")
-    mesh = host_mesh()
-    didx = to_device_index(index, mesh)
-    exact_index = build_inverted(recs)
+          f"GB-KMV (r={index.core.buffer_bits}) in {time.time()-t0:.2f}s")
+    sharded = ShardedIndex(index, host_mesh(), backend=args.backend)
+    exact = api.get_engine("exact").build(recs)
 
     # --- online: batched query rounds ---
     queries = make_query_workload(recs, args.batch * args.rounds, seed=1)
     lat, f1s = [], []
     for r in range(args.rounds):
         qs = queries[r * args.batch:(r + 1) * args.batch]
-        qp = batch_queries(index, qs)
         t0 = time.time()
-        mask, scores = distributed_search(didx, qp, args.threshold)
-        vals, ids = distributed_topk(scores, 10, mesh)
-        jax.block_until_ready((mask, vals))
+        results = sharded.serve_batch(qs, args.threshold, 10)
         lat.append(time.time() - t0)
-        for j, q in enumerate(qs):
-            truth = exact_search(exact_index, q, args.threshold)
-            got = np.nonzero(np.asarray(mask)[: index.num_records, j])[0]
-            f1s.append(f_score(truth, got))
+        for q, res in zip(qs, results):
+            truth = exact.query(q, args.threshold)
+            f1s.append(f_score(truth, res["hits"]))
     lat_ms = np.asarray(lat) * 1e3
     print(f"[serve] {args.rounds} rounds × {args.batch} queries: "
           f"p50={np.percentile(lat_ms, 50):.1f}ms "
@@ -66,7 +59,7 @@ def main():
     print(f"[accuracy] F1 vs exact: mean={np.mean(f1s):.3f} "
           f"p10={np.percentile(f1s, 10):.3f}")
     print(f"[topk] sample top-3 containment scores: "
-          f"{np.asarray(vals[0, :3]).round(3).tolist()}")
+          f"{results[0]['topk_scores'][:3].round(3).tolist()}")
 
 
 if __name__ == "__main__":

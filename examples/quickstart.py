@@ -1,15 +1,12 @@
-"""Quickstart: build a GB-KMV index, run a containment search, compare
-the three sketches (KMV / G-KMV / GB-KMV) against exact ground truth.
+"""Quickstart for the unified ``repro.api``: build any registered engine
+through one protocol, search, rank, insert, and persist.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core.exact import build_inverted, exact_search
-from repro.core.gbkmv import build_gbkmv, search
-from repro.core.gkmv import build_gkmv
-from repro.core.kmv import build_kmv
+from repro import api
 from repro.core.search import f_score
 from repro.data.synth import generate_dataset, make_query_workload
 
@@ -23,30 +20,37 @@ def main():
     total = sum(len(r) for r in records)
     budget = int(total * 0.1)           # 10% space budget, paper default
     print(f"dataset: {len(records)} records, {total} elements; "
-          f"budget {budget} slots (10%)")
+          f"budget {budget} slots (10%); engines: {api.list_engines()}")
 
-    # Build the three sketches at the same budget.
-    gb = build_gbkmv(records, budget=budget, r="auto")
-    print(f"GB-KMV: buffer r={gb.buffer_bits} bits (cost-model pick), "
-          f"τ=0x{int(gb.tau):08x}, {gb.nbytes()/1e6:.2f} MB")
-    build_gkmv(records, budget=budget)   # G-KMV == GB-KMV with r=0
-    build_kmv(records, budget=budget)    # plain KMV (Theorem 1 allocation)
+    # One door for every engine: Engine.build(records, budget) -> Index.
+    gb = api.get_engine("gbkmv").build(records, budget, r="auto")
+    print(f"GB-KMV: buffer r={gb.core.buffer_bits} bits (cost-model pick), "
+          f"τ=0x{int(gb.core.tau):08x}, {gb.nbytes()/1e6:.2f} MB")
+    api.get_engine("gkmv").build(records, budget)   # G-KMV == r=0
+    api.get_engine("kmv").build(records, budget)    # plain KMV (Theorem 1)
 
-    # Containment search, threshold 0.5 (Definition 3 / Algorithm 2).
-    exact_index = build_inverted(records)
+    # Containment search, threshold 0.5 (Definition 3 / Algorithm 2),
+    # scored against exact ground truth through the same protocol.
+    exact = api.get_engine("exact").build(records)
     queries = make_query_workload(records, 20)
-    f1s = []
-    for q in queries:
-        truth = exact_search(exact_index, q, 0.5)
-        approx = search(gb, q, 0.5)
-        f1s.append(f_score(truth, approx))
+    f1s = [f_score(exact.query(q, 0.5), gb.query(q, 0.5)) for q in queries]
     print(f"GB-KMV F1 over 20 queries @ t*=0.5: mean={np.mean(f1s):.3f} "
           f"min={np.min(f1s):.3f}")
 
+    # Top-k ranking and batched search ride the same index.
     q = queries[0]
-    got = search(gb, q, 0.5)
+    ids, scores = gb.topk(q, k=8)
+    got = gb.query(q, 0.5)
     print(f"example query |Q|={len(q)}: {len(got)} records with "
-          f"Ĉ(Q→X) ≥ 0.5 → ids {got[:8].tolist()}...")
+          f"Ĉ(Q→X) ≥ 0.5; top-3 = {list(zip(ids[:3].tolist(), scores[:3].round(3).tolist()))}")
+
+    # Dynamic inserts (GB-KMV: §IV-B τ-retightening, no raw-data access)
+    # and npz persistence round-trip.
+    gb.insert(records[:10])
+    gb.save("/tmp/quickstart_gbkmv.npz")
+    gb2 = api.load_index("/tmp/quickstart_gbkmv.npz")
+    assert np.array_equal(gb.query(q, 0.5), gb2.query(q, 0.5))
+    print(f"after insert: m={gb.num_records}; save/load round-trip ok")
 
 
 if __name__ == "__main__":

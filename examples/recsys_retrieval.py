@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import registry
-from repro.core.gbkmv import build_gbkmv, containment_scores, sketch_query
 from repro.models import recsys as recsys_mod
 
 
@@ -45,10 +45,9 @@ def main():
     user_hist = np.unique(np.concatenate(
         [item_sets[0][:30], rng.integers(0, 20_000, size=40)]))
     total = sum(len(s) for s in item_sets)
-    index = build_gbkmv(item_sets, budget=int(total * 0.2), r="auto")
+    index = api.get_engine("gbkmv").build(item_sets, int(total * 0.2), r="auto")
     t0 = time.time()
-    q = sketch_query(index, user_hist)
-    cscores = containment_scores(index, q)
+    cscores = index.scores(user_hist)
     t_ms = (time.time() - t0) * 1e3
     order = np.argsort(np.asarray(cscores))[::-1]
     print(f"[stage2] GB-KMV containment rescoring of 256 items: {t_ms:.1f} ms")

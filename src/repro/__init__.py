@@ -4,11 +4,27 @@ Paper: "GB-KMV: An Augmented KMV Sketch for Approximate Containment
 Similarity Search" (Yang, Zhang, Zhang, Huang, 2018).
 
 Public API surface:
-    repro.core        — KMV / G-KMV / GB-KMV sketches, estimators, search
-    repro.sketchindex — packed, distributed sketch index
+    repro.api         — THE door: ``ContainmentEngine`` registry.
+                        ``get_engine(name).build(records, budget)`` returns
+                        an index with ``query`` / ``batch_query`` / ``topk``
+                        / ``insert`` / ``save`` / ``nbytes``; engines:
+                        gbkmv, gkmv, kmv, lshe, exact, prefix; sketch
+                        scoring via ``backend=`` numpy | jnp | pallas;
+                        ``load_index(path)`` restores any saved index.
+    repro.core        — sketch/estimator internals the engines are built on
+    repro.sketchindex — packed + ``ShardedIndex`` (mesh-sharded, same protocol)
+    repro.serving     — deadline-aware micro-batching ``SketchServer``
     repro.models      — assigned architecture model zoo
     repro.configs     — architecture registry (``get_config(arch_id)``)
     repro.launch      — mesh / dryrun / train / serve entry points
+
+Quickstart::
+
+    from repro import api
+    index = api.get_engine("gbkmv").build(records, budget=total // 10)
+    hits  = index.query(q_ids, threshold=0.5)
+
+See docs/API.md for the legacy-call → new-call migration table.
 """
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"

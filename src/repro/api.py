@@ -1,0 +1,569 @@
+"""``repro.api`` — the unified public API for containment similarity search.
+
+One protocol for every sketch engine, every backend, every deployment
+tier (paper §V runs all its experiments through exactly this kind of
+single evaluation door):
+
+    engine = repro.api.get_engine("gbkmv")          # registry lookup
+    index  = engine.build(records, budget)          # -> ContainmentIndex
+    ids    = index.query(q_ids, threshold=0.5)      # Algorithm 2
+    hits   = index.batch_query(queries, 0.5)        # one id array per query
+    top    = index.topk(q_ids, k=10)                # (ids, scores)
+    index.insert(new_records)                       # dynamic maintenance
+    index.save(path); repro.api.load_index(path)    # npz round-trip
+    index.nbytes()                                  # space accounting
+
+Registered engines: ``gbkmv``, ``gkmv``, ``kmv`` (the paper's sketches),
+``lshe`` (LSH Ensemble baseline), ``exact`` and ``prefix`` (ground-truth
+inverted-index engines). Sketch engines accept ``backend=`` ∈ {"numpy",
+"jnp", "pallas"} to pick the scoring implementation; engines without a
+device path (lshe/exact/prefix) ignore it.
+
+``insert`` is wired to :mod:`repro.sketchindex.dynamic` for GB-KMV
+(τ-retightening under the fixed budget, no raw-data access); every other
+engine falls back to a full rebuild from the retained records.
+
+For cluster-scale serving, :class:`repro.sketchindex.ShardedIndex` wraps
+a built GB-KMV index and implements this same protocol with the record
+dim sharded over a device mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import exact as exact_mod
+from repro.core import gbkmv as gbkmv_mod
+from repro.core import gkmv as gkmv_mod
+from repro.core import kmv as kmv_mod
+from repro.core import lshe as lshe_mod
+from repro.core import minhash as minhash_mod
+from repro.core.estimators import containment_matrix, normalize_backend
+from repro.core.hashing import PAD, hash_u32_np
+from repro.core.sketches import PackedSketches
+
+
+@runtime_checkable
+class ContainmentIndex(Protocol):
+    """What every engine's index exposes (structural protocol)."""
+
+    def query(self, q_ids, threshold: float) -> np.ndarray: ...
+    def batch_query(self, queries, threshold: float) -> list[np.ndarray]: ...
+    def topk(self, q_ids, k: int) -> tuple[np.ndarray, np.ndarray]: ...
+    def insert(self, new_records) -> "ContainmentIndex": ...
+    def save(self, path: str) -> None: ...
+    def nbytes(self) -> int: ...
+
+
+# ---------------------------------------------------------------------------
+# Engine registry
+# ---------------------------------------------------------------------------
+
+_ENGINES: dict[str, type] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: make an engine reachable as ``get_engine(name)``."""
+
+    def deco(cls):
+        cls.name = name
+        _ENGINES[name] = cls
+        return cls
+
+    return deco
+
+
+def get_engine(name: str):
+    """Engine class for ``name`` (``.build(records, budget, **cfg)``)."""
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(_ENGINES)}"
+        ) from None
+
+
+def list_engines() -> list[str]:
+    return sorted(_ENGINES)
+
+
+def build(name: str, records, budget: int | None = None, **cfg):
+    """Convenience: ``get_engine(name).build(records, budget, **cfg)``."""
+    return get_engine(name).build(records, budget, **cfg)
+
+
+def load_index(path: str):
+    """Load any index saved via ``Index.save`` (dispatches on the stored
+    engine name)."""
+    with np.load(path, allow_pickle=False) as data:
+        d = {k: data[k] for k in data.files}
+    if "engine" not in d:
+        raise ValueError(f"{path} is not a repro.api index (no 'engine' key)")
+    engine = str(d.pop("engine"))
+    cls = get_engine(engine)
+    if not hasattr(cls, "_load"):
+        raise ValueError(f"engine {engine!r} does not support load")
+    return cls._load(d)
+
+
+# ---------------------------------------------------------------------------
+# Shared index behavior
+# ---------------------------------------------------------------------------
+
+
+class _IndexBase:
+    """Default protocol plumbing: score-based query/topk, rebuild-insert.
+
+    Subclasses implement ``_scores(q_ids) -> f32[m]`` (estimated
+    containment of the query in every record) and, where a cheaper path
+    exists, override ``query``/``insert``.
+    """
+
+    engine: str = "?"
+    backend: str = "jnp"
+    _records: list | None = None        # retained for rebuild-fallback insert
+    _build_cfg: dict
+
+    # -- abstract-ish --
+    def _scores(self, q_ids) -> np.ndarray:
+        raise NotImplementedError
+
+    def nbytes(self) -> int:
+        raise NotImplementedError
+
+    # -- protocol --
+    def scores(self, q_ids) -> np.ndarray:
+        """Estimated containment Ĉ(Q→X) for every record (f32[m])."""
+        return np.asarray(self._scores(q_ids))
+
+    def query(self, q_ids, threshold: float) -> np.ndarray:
+        return np.nonzero(np.asarray(self._scores(q_ids)) >= threshold)[0]
+
+    def batch_query(self, queries, threshold: float) -> list[np.ndarray]:
+        return [self.query(q, threshold) for q in queries]
+
+    def topk(self, q_ids, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """(record ids, scores) of the k highest estimated containments."""
+        s = np.asarray(self._scores(q_ids))
+        k = min(int(k), len(s))
+        ids = np.argpartition(-s, kth=max(k - 1, 0))[:k]
+        ids = ids[np.argsort(-s[ids], kind="stable")]
+        return ids.astype(np.int64), s[ids].astype(np.float32)
+
+    def insert(self, new_records):
+        """Full-rebuild fallback (engines without dynamic maintenance)."""
+        if self._records is None:
+            raise ValueError(
+                f"{self.engine}: insert after load needs the original "
+                "records (rebuild fallback); rebuild via Engine.build")
+        records = list(self._records) + [np.asarray(r) for r in new_records]
+        rebuilt = get_engine(self.engine).build(records, **self._build_cfg)
+        self.__dict__.update(rebuilt.__dict__)
+        return self
+
+    def save(self, path: str) -> None:
+        raise NotImplementedError(
+            f"{self.engine}: save is supported for sketch-backed indexes "
+            "(gbkmv/gkmv/kmv/lshe) only")
+
+
+def _pack_to_npz(s: PackedSketches) -> dict:
+    return {
+        "values": np.asarray(s.values), "lengths": np.asarray(s.lengths),
+        "thresh": np.asarray(s.thresh), "buf": np.asarray(s.buf),
+        "sizes": np.asarray(s.sizes),
+    }
+
+
+def _pack_from_npz(d: dict) -> PackedSketches:
+    return PackedSketches(
+        values=d["values"], lengths=d["lengths"], thresh=d["thresh"],
+        buf=d["buf"], sizes=d["sizes"])
+
+
+# ---------------------------------------------------------------------------
+# GB-KMV (the paper's contribution) — dynamic inserts via sketchindex.dynamic
+# ---------------------------------------------------------------------------
+
+
+@register_engine("gbkmv")
+class GBKMVEngine:
+    """GB-KMV: G-KMV tail + top-r frequent-element bitmap buffer."""
+
+    @classmethod
+    def build(cls, records, budget, r="auto", seed=0, capacity=None,
+              backend="jnp", **_):
+        core = gbkmv_mod.build_gbkmv(records, budget=budget, r=r, seed=seed,
+                                     capacity=capacity)
+        return GBKMVApiIndex(core, budget=int(budget), backend=backend)
+
+    @staticmethod
+    def wrap(core: gbkmv_mod.GBKMVIndex, budget: int | None = None,
+             backend: str = "jnp") -> "GBKMVApiIndex":
+        """Adopt an already-built core GBKMVIndex (legacy door)."""
+        return GBKMVApiIndex(core, budget=budget, backend=backend)
+
+    @classmethod
+    def _load(cls, d: dict) -> "GBKMVApiIndex":
+        core = gbkmv_mod.GBKMVIndex(
+            sketches=_pack_from_npz(d), tau=np.uint32(d["tau"]),
+            top_elems=d["top_elems"], seed=int(d["seed"]),
+            buffer_bits=int(d["buffer_bits"]))
+        budget = int(d["budget"]) if "budget" in d else -1
+        return GBKMVApiIndex(core, budget=budget if budget >= 0 else None,
+                             backend=str(d.get("backend", "jnp")))
+
+
+class GBKMVApiIndex(_IndexBase):
+    engine = "gbkmv"
+
+    def __init__(self, core: gbkmv_mod.GBKMVIndex, budget: int | None,
+                 backend: str = "jnp"):
+        self.core = core
+        self.budget = budget
+        self.backend = normalize_backend(backend)
+        self._records = None            # dynamic path needs no raw records
+        self._build_cfg = {}
+
+    @property
+    def num_records(self) -> int:
+        return self.core.num_records
+
+    def _scores(self, q_ids) -> np.ndarray:
+        q = gbkmv_mod.sketch_query(self.core, np.asarray(q_ids))
+        return gbkmv_mod.containment_scores(self.core, q, backend=self.backend)
+
+    def batch_query(self, queries, threshold: float) -> list[np.ndarray]:
+        s = self.batch_scores(queries)                       # [m, Gq]
+        return [np.nonzero(s[:, j] >= threshold)[0] for j in range(s.shape[1])]
+
+    def batch_scores(self, queries) -> np.ndarray:
+        """f32[m, Gq] — one index sweep for a whole query batch."""
+        from repro.sketchindex.distributed import batch_queries
+
+        qp = batch_queries(self.core, [np.asarray(q) for q in queries])
+        return containment_matrix(qp, self.core.sketches, backend=self.backend)
+
+    def insert(self, new_records, budget: int | None = None):
+        """Paper §IV-B dynamic maintenance: τ-retighten, never re-hash old
+        rows (``sketchindex.dynamic``)."""
+        from repro.sketchindex import dynamic
+
+        budget = budget if budget is not None else self.budget
+        if budget is None:
+            budget = self.core.sketches.lengths.sum() + \
+                self.core.num_records * self.core.sketches.buf_words
+        self.core, self.stats = dynamic.insert_records(
+            self.core, [np.asarray(r) for r in new_records], int(budget))
+        return self
+
+    def save(self, path: str) -> None:
+        d = _pack_to_npz(self.core.sketches)
+        np.savez_compressed(
+            path, engine="gbkmv", tau=np.uint32(self.core.tau),
+            top_elems=np.asarray(self.core.top_elems, np.int64),
+            seed=np.int64(self.core.seed),
+            buffer_bits=np.int64(self.core.buffer_bits),
+            budget=np.int64(self.budget if self.budget is not None else -1),
+            **d)
+
+    def nbytes(self) -> int:
+        return self.core.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# G-KMV (global threshold, no buffer) and plain KMV (Theorem 1 allocation)
+# ---------------------------------------------------------------------------
+
+
+@register_engine("gkmv")
+class GKMVEngine:
+    """G-KMV: global hash threshold τ, no frequent-element buffer."""
+
+    @classmethod
+    def build(cls, records, budget, seed=0, capacity=None, backend="jnp", **_):
+        sk = gkmv_mod.build_gkmv(records, budget=budget, seed=seed,
+                                 capacity=capacity)
+        tau = int(np.asarray(sk.thresh).max()) if sk.num_records else int(PAD - 1)
+        idx = GKMVApiIndex(sk, tau=tau, seed=seed, backend=backend)
+        idx._records = [np.asarray(r) for r in records]
+        idx._build_cfg = {"budget": budget, "seed": seed, "capacity": capacity,
+                          "backend": backend}
+        return idx
+
+    @staticmethod
+    def wrap(sk: PackedSketches, seed: int = 0, backend: str = "jnp"):
+        tau = int(np.asarray(sk.thresh).max()) if sk.num_records else int(PAD - 1)
+        return GKMVApiIndex(sk, tau=tau, seed=seed, backend=backend)
+
+    @classmethod
+    def _load(cls, d: dict) -> "GKMVApiIndex":
+        return GKMVApiIndex(_pack_from_npz(d), tau=int(d["tau"]),
+                            seed=int(d["seed"]),
+                            backend=str(d.get("backend", "jnp")))
+
+
+class GKMVApiIndex(_IndexBase):
+    engine = "gkmv"
+
+    def __init__(self, sketches: PackedSketches, tau: int, seed: int,
+                 backend: str = "jnp"):
+        self.sketches = sketches
+        self.tau = np.uint32(tau)
+        self.seed = seed
+        self.backend = normalize_backend(backend)
+        self._records = None
+        self._build_cfg = {}
+
+    @property
+    def num_records(self) -> int:
+        return self.sketches.num_records
+
+    def _scores(self, q_ids) -> np.ndarray:
+        q = gkmv_mod.sketch_query(np.asarray(q_ids), self.tau, seed=self.seed,
+                                  capacity=self.sketches.capacity)
+        return containment_matrix(q, self.sketches, backend=self.backend)[:, 0]
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(path, engine="gkmv", tau=np.uint32(self.tau),
+                            seed=np.int64(self.seed),
+                            **_pack_to_npz(self.sketches))
+
+    def nbytes(self) -> int:
+        return self.sketches.nbytes()
+
+
+@register_engine("kmv")
+class KMVEngine:
+    """Plain KMV, uniform k = floor(budget/m) per record (Theorem 1)."""
+
+    @classmethod
+    def build(cls, records, budget, seed=0, backend="jnp", **_):
+        sk = kmv_mod.build_kmv(records, budget=budget, seed=seed)
+        idx = KMVApiIndex(sk, seed=seed, backend=backend)
+        idx._records = [np.asarray(r) for r in records]
+        idx._build_cfg = {"budget": budget, "seed": seed, "backend": backend}
+        return idx
+
+    @staticmethod
+    def wrap(sk: PackedSketches, seed: int = 0, backend: str = "jnp"):
+        return KMVApiIndex(sk, seed=seed, backend=backend)
+
+    @classmethod
+    def _load(cls, d: dict) -> "KMVApiIndex":
+        return KMVApiIndex(_pack_from_npz(d), seed=int(d["seed"]),
+                           backend=str(d.get("backend", "jnp")))
+
+
+class KMVApiIndex(_IndexBase):
+    engine = "kmv"
+
+    def __init__(self, sketches: PackedSketches, seed: int,
+                 backend: str = "jnp"):
+        self.sketches = sketches
+        self.seed = seed
+        self.backend = normalize_backend(backend)
+        self._records = None
+        self._build_cfg = {}
+
+    @property
+    def num_records(self) -> int:
+        return self.sketches.num_records
+
+    def _scores(self, q_ids) -> np.ndarray:
+        """Ĉ = D̂∩ / |Q| with the Eq. 8-10 pair estimator (k = min rule)."""
+        from repro.core.estimators import kmv_pair_estimate
+        import jax.numpy as jnp
+
+        q_ids = np.asarray(q_ids)
+        k = self.sketches.capacity
+        h = np.sort(hash_u32_np(q_ids, seed=self.seed))[:k]
+        qv = np.pad(h, (0, k - len(h)), constant_values=PAD)
+        d_hat, _, _ = kmv_pair_estimate(
+            jnp.asarray(qv), jnp.int32(len(h)),
+            jnp.asarray(self.sketches.values),
+            jnp.asarray(self.sketches.lengths))
+        return np.asarray(d_hat) / max(len(q_ids), 1)
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(path, engine="kmv", seed=np.int64(self.seed),
+                            **_pack_to_npz(self.sketches))
+
+    def nbytes(self) -> int:
+        return self.sketches.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# LSH Ensemble baseline
+# ---------------------------------------------------------------------------
+
+
+@register_engine("lshe")
+class LSHEEngine:
+    """LSH Ensemble (Zhu et al.): size-partitioned MinHash banding.
+
+    ``budget`` (slots, 32-bit words) maps onto the MinHash count:
+    k ≈ budget/m, the same space accounting the sketch engines use.
+    """
+
+    @classmethod
+    def build(cls, records, budget=None, num_hashes=None, num_partitions=32,
+              seed=0, **_):
+        if num_hashes is None:
+            num_hashes = (max(8, int(budget) // max(len(records), 1))
+                          if budget is not None else 256)
+        core = lshe_mod.build_lshe(records, num_hashes=num_hashes,
+                                   num_partitions=num_partitions, seed=seed)
+        idx = LSHEApiIndex(core, seed=seed)
+        idx._records = [np.asarray(r) for r in records]
+        idx._build_cfg = {"num_hashes": num_hashes,
+                          "num_partitions": num_partitions, "seed": seed}
+        return idx
+
+    @staticmethod
+    def wrap(core: lshe_mod.LSHEnsemble, seed: int = 0):
+        return LSHEApiIndex(core, seed=seed)
+
+    @classmethod
+    def _load(cls, d: dict) -> "LSHEApiIndex":
+        core = lshe_mod.LSHEnsemble(
+            signatures=d["signatures"], sizes=d["sizes"], order=d["order"],
+            boundaries=d["boundaries"], upper_bounds=d["upper_bounds"],
+            num_hashes=int(d["num_hashes"]))
+        return LSHEApiIndex(core, seed=int(d["seed"]))
+
+
+class LSHEApiIndex(_IndexBase):
+    engine = "lshe"
+
+    def __init__(self, core: lshe_mod.LSHEnsemble, seed: int = 0):
+        self.core = core
+        self.seed = seed
+        self._records = None
+        self._build_cfg = {}
+
+    @property
+    def num_records(self) -> int:
+        return len(self.core.sizes)
+
+    def query(self, q_ids, threshold: float) -> np.ndarray:
+        return lshe_mod.query_lshe(self.core, np.asarray(q_ids), threshold,
+                                   seed=self.seed)
+
+    def _scores(self, q_ids) -> np.ndarray:
+        """Signature-level containment t̂ (Eq. 14) — the topk ranking."""
+        q_ids = np.asarray(q_ids)
+        q_sig = minhash_mod.build_signatures([q_ids], self.core.num_hashes,
+                                             seed=self.seed)[0]
+        s_hat = minhash_mod.jaccard_estimate(q_sig, self.core.signatures)
+        return minhash_mod.containment_from_jaccard(
+            s_hat, self.core.sizes, len(q_ids)).astype(np.float32)
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path, engine="lshe", signatures=self.core.signatures,
+            sizes=self.core.sizes, order=self.core.order,
+            boundaries=self.core.boundaries,
+            upper_bounds=self.core.upper_bounds,
+            num_hashes=np.int64(self.core.num_hashes),
+            seed=np.int64(self.seed))
+
+    def nbytes(self) -> int:
+        return self.core.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Exact engines (ground truth / strong baselines)
+# ---------------------------------------------------------------------------
+
+
+class _ExactBase(_IndexBase):
+    def __init__(self, core: exact_mod.InvertedIndex, records=None):
+        self.core = core
+        self._records = records
+        self._build_cfg = {"budget": None}
+
+    @property
+    def num_records(self) -> int:
+        return len(self.core.sizes)
+
+    def _scores(self, q_ids) -> np.ndarray:
+        counts = exact_mod.intersection_counts(self.core, np.asarray(q_ids))
+        return counts.astype(np.float32) / max(len(q_ids), 1)
+
+    def nbytes(self) -> int:
+        return int(self.core.sizes.nbytes + sum(
+            p.nbytes for p in self.core.postings.values()))
+
+
+@register_engine("exact")
+class ExactEngine:
+    """Posting-list counting: exact |Q∩X| in one pass (FrequentSet-style)."""
+
+    @classmethod
+    def build(cls, records, budget=None, **_):
+        return ExactApiIndex(exact_mod.build_inverted(records),
+                             records=[np.asarray(r) for r in records])
+
+    @staticmethod
+    def wrap(core: exact_mod.InvertedIndex):
+        return ExactApiIndex(core)
+
+
+class ExactApiIndex(_ExactBase):
+    engine = "exact"
+
+    def query(self, q_ids, threshold: float) -> np.ndarray:
+        return exact_mod.exact_search(self.core, np.asarray(q_ids), threshold)
+
+
+@register_engine("prefix")
+class PrefixEngine:
+    """PPjoin*-adapted prefix filter + exact verification."""
+
+    @classmethod
+    def build(cls, records, budget=None, **_):
+        return PrefixApiIndex(exact_mod.build_inverted(records),
+                              records=[np.asarray(r) for r in records])
+
+    @staticmethod
+    def wrap(core: exact_mod.InvertedIndex):
+        return PrefixApiIndex(core)
+
+
+class PrefixApiIndex(_ExactBase):
+    engine = "prefix"
+
+    def query(self, q_ids, threshold: float) -> np.ndarray:
+        return exact_mod.prefix_filter_search(self.core, np.asarray(q_ids),
+                                              threshold)
+
+
+# ---------------------------------------------------------------------------
+# Legacy adoption: wrap pre-API index objects without rebuilding
+# ---------------------------------------------------------------------------
+
+
+def as_index(engine: str, index, seed: int = 0, backend: str = "jnp"):
+    """Wrap a legacy core index object (GBKMVIndex, PackedSketches,
+    LSHEnsemble, InvertedIndex — or an api index, returned as-is) so the
+    old ``run_search(engine, index, ...)`` door keeps working."""
+    if isinstance(index, (_IndexBase,)):
+        return index
+    if hasattr(index, "query") and hasattr(index, "topk"):
+        return index                                  # already protocol-shaped
+    if engine == "gbkmv":
+        return GBKMVEngine.wrap(index, backend=backend)
+    if engine == "gkmv":
+        return GKMVEngine.wrap(index, seed=seed, backend=backend)
+    if engine == "kmv":
+        return KMVEngine.wrap(index, seed=seed, backend=backend)
+    if engine == "lshe":
+        return LSHEEngine.wrap(index, seed=seed)
+    if engine == "exact":
+        return ExactEngine.wrap(index)
+    if engine == "prefix":
+        return PrefixEngine.wrap(index)
+    raise ValueError(f"unknown engine {engine!r}")

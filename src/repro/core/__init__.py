@@ -1,6 +1,7 @@
 # The paper's primary contribution: KMV / G-KMV / GB-KMV sketches,
-# estimators, cost model, baselines (MinHash, LSH-E), exact engines,
-# and the unified search front end.
+# estimators, cost model, baselines (MinHash, LSH-E), exact engines.
+# The unified front end lives in repro.api (engine registry); the
+# re-exports below are the legacy spellings kept for compatibility.
 
 from repro.core.gbkmv import GBKMVIndex, build_gbkmv, sketch_query, search  # noqa: F401
 from repro.core.gkmv import build_gkmv, select_global_threshold  # noqa: F401

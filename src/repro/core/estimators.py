@@ -117,6 +117,136 @@ def gbkmv_containment(
 
 
 # ---------------------------------------------------------------------------
+# Backend dispatch: one scoring door for numpy / jnp / pallas.
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("numpy", "jnp", "pallas")
+
+
+def normalize_backend(backend: str | None, impl: str | None = None) -> str:
+    """Resolve the public ``backend=`` option (``impl=`` is the deprecated
+    spelling used by older callers: "kernel" → "pallas")."""
+    if backend is None:
+        backend = {"kernel": "pallas", None: "jnp"}.get(impl, impl)
+    if backend == "kernel":
+        backend = "pallas"
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    return backend
+
+
+def _popcount_np(words: np.ndarray) -> np.ndarray:
+    """Per-row popcount of uint32[..., W] (host path)."""
+    if words.shape[-1] == 0:
+        return np.zeros(words.shape[:-1], dtype=np.int32)
+    bytes_ = np.ascontiguousarray(words).view(np.uint8)
+    return np.unpackbits(bytes_, axis=-1).sum(axis=-1).astype(np.int32)
+
+
+def gbkmv_containment_np(q_values, q_thresh, q_buf, q_size, x) -> np.ndarray:
+    """NumPy twin of :func:`gbkmv_containment` for one query row.
+
+    Float32 arithmetic mirrors the jnp/pallas paths bit-for-bit in the
+    regimes the tests exercise. ``x`` is a PackedSketches.
+    """
+    qv = np.asarray(q_values, dtype=np.uint32)
+    xv = np.asarray(x.values, dtype=np.uint32)
+    xt = np.asarray(x.thresh, dtype=np.uint32)
+    tau_pair = np.minimum(xt, np.uint32(q_thresh))               # [m]
+
+    nq = (qv[None, :] <= tau_pair[:, None]).sum(-1).astype(np.int32)
+    nx = (xv <= tau_pair[:, None]).sum(-1).astype(np.int32)
+    live = xv <= tau_pair[:, None]
+    member = np.isin(xv, qv)
+    k_cap = (live & member).sum(-1).astype(np.int32)
+    k = nq + nx - k_cap
+
+    m = xv.shape[0]
+    uq = np.where(nq > 0, qv[np.maximum(nq - 1, 0)], np.uint32(0))
+    ux = xv[np.arange(m), np.maximum(nx - 1, 0)]
+    ux = np.where(nx > 0, ux, np.uint32(0))
+    u = np.maximum(uq, ux)
+    u_unit = (u.astype(np.float32) + np.float32(1.0)) / np.float32(TWO32)
+
+    kf = k.astype(np.float32)
+    cf = k_cap.astype(np.float32)
+    valid = (k >= 2) & (k_cap >= 1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        d_hat = np.where(
+            valid,
+            (cf / np.maximum(kf, np.float32(1.0)))
+            * ((kf - np.float32(1.0)) / np.maximum(u_unit, np.float32(1e-30))),
+            np.where(k_cap >= 1, cf, np.float32(0.0)),
+        ).astype(np.float32)
+
+    x_buf = np.asarray(x.buf)
+    if x_buf.shape[-1]:
+        o1 = _popcount_np(x_buf & np.asarray(q_buf, np.uint32)[None, :])
+    else:
+        o1 = np.zeros(m, dtype=np.int32)
+    qs = np.float32(max(int(q_size), 1))
+    return ((o1.astype(np.float32) + d_hat) / qs).astype(np.float32)
+
+
+def _align_buf_widths(q, x):
+    """Zero-pad the narrower bitmap so both packs share a buffer width."""
+    import dataclasses
+
+    wq, wx = q.buf.shape[1], x.buf.shape[1]
+    if wq == wx:
+        return q, x
+    w = max(wq, wx)
+
+    def widen(p):
+        buf = np.zeros((p.buf.shape[0], w), dtype=np.uint32)
+        if p.buf.shape[1]:
+            buf[:, : p.buf.shape[1]] = np.asarray(p.buf)
+        return dataclasses.replace(p, buf=buf)
+
+    return (widen(q) if wq < w else q), (widen(x) if wx < w else x)
+
+
+def containment_matrix(q, x, backend: str = "jnp") -> np.ndarray:
+    """Ĉ(Q→X) scores f32[m, Gq]: every query row of ``q`` against every
+    record row of ``x`` — the single scoring door all layers share.
+
+    ``backend``: "numpy" (host, dependency-free), "jnp" (XLA), or
+    "pallas" (fused TPU kernel; interpret mode off-TPU).
+    """
+    backend = normalize_backend(backend)
+    q, x = _align_buf_widths(q, x)
+    if backend == "numpy":
+        cols = [
+            gbkmv_containment_np(
+                np.asarray(q.values)[g], np.asarray(q.thresh)[g],
+                np.asarray(q.buf)[g], np.asarray(q.sizes)[g], x)
+            for g in range(q.num_records)
+        ]
+        return np.stack(cols, axis=-1) if cols else \
+            np.zeros((x.num_records, 0), np.float32)
+    if backend == "pallas":
+        from repro.kernels.ops import score_index
+
+        return np.asarray(score_index(
+            x.values, x.thresh, x.buf,
+            q.values, q.thresh, q.buf, q.sizes))
+
+    def one_query(qv, qt, qb, qs):
+        d_hat, _, _ = gkmv_pair_estimate(
+            qv, None, qt, x.values, x.lengths, x.thresh)
+        o1 = buffer_intersection(qb, x.buf)
+        return (o1.astype(jnp.float32) + d_hat) / jnp.maximum(
+            jnp.asarray(qs, jnp.float32), 1.0)
+
+    import jax
+
+    out = jax.vmap(one_query)(
+        jnp.asarray(q.values, jnp.uint32), jnp.asarray(q.thresh, jnp.uint32),
+        jnp.asarray(q.buf, jnp.uint32), jnp.asarray(q.sizes, jnp.int32))
+    return np.asarray(out.T)
+
+
+# ---------------------------------------------------------------------------
 # Plain KMV baseline (Eq. 8-11): k = min(k_Q, k_X), merge k smallest.
 # ---------------------------------------------------------------------------
 

@@ -123,18 +123,22 @@ def sketch_query(index: GBKMVIndex, q_ids: np.ndarray) -> PackedSketches:
 
 
 def containment_scores(index: GBKMVIndex, q: PackedSketches, backend: str = "jnp"):
-    """Ĉ(Q→X) for every record (Eq. 27): buffer popcount + G-KMV tail."""
-    from repro.core.estimators import gbkmv_containment
+    """Ĉ(Q→X) for every record (Eq. 27): buffer popcount + G-KMV tail.
 
-    return np.asarray(gbkmv_containment(q, index.sketches))
+    ``backend`` ∈ {"numpy", "jnp", "pallas"} — estimators.containment_matrix.
+    """
+    from repro.core.estimators import containment_matrix
+
+    return containment_matrix(q, index.sketches, backend=backend)[:, 0]
 
 
 def search(
     index: GBKMVIndex,
     q_ids: np.ndarray,
     threshold: float,
+    backend: str = "jnp",
 ) -> np.ndarray:
     """Algorithm 2: record ids with estimated containment ≥ t*."""
     q = sketch_query(index, q_ids)
-    scores = containment_scores(index, q)
+    scores = containment_scores(index, q, backend=backend)
     return np.nonzero(scores >= threshold)[0]

@@ -1,7 +1,9 @@
-"""Unified containment-search front end + evaluation metrics (paper §V-A).
+"""Legacy containment-search front end + evaluation metrics (paper §V-A).
 
-``run_search`` dispatches to any of the implemented engines so benchmarks
-compare methods through one door. ``f_score`` implements Eq. 35.
+``run_search``/``evaluate_engine`` are now thin shims over the
+:mod:`repro.api` engine registry — ``repro.api.get_engine(name)`` is the
+canonical door; these stay so existing callers and benchmarks keep
+working unchanged. ``f_score`` implements Eq. 35.
 """
 
 from __future__ import annotations
@@ -9,10 +11,6 @@ from __future__ import annotations
 from typing import Sequence
 
 import numpy as np
-
-from repro.core import exact as exact_mod
-from repro.core import gbkmv as gbkmv_mod
-from repro.core import lshe as lshe_mod
 
 
 def f_score(truth: np.ndarray, returned: np.ndarray, alpha: float = 1.0) -> float:
@@ -39,16 +37,15 @@ def precision_recall(truth: np.ndarray, returned: np.ndarray) -> tuple[float, fl
 
 
 def run_search(engine, index, q_ids: np.ndarray, threshold: float, seed: int = 0):
-    """engine ∈ {gbkmv, lshe, exact, prefix} → candidate id array."""
-    if engine == "gbkmv":
-        return gbkmv_mod.search(index, q_ids, threshold)
-    if engine == "lshe":
-        return lshe_mod.query_lshe(index, q_ids, threshold, seed=seed)
-    if engine == "exact":
-        return exact_mod.exact_search(index, q_ids, threshold)
-    if engine == "prefix":
-        return exact_mod.prefix_filter_search(index, q_ids, threshold)
-    raise ValueError(f"unknown engine {engine!r}")
+    """Any registered engine → candidate id array (registry shim).
+
+    ``index`` may be a legacy core object (GBKMVIndex, PackedSketches,
+    LSHEnsemble, InvertedIndex) or a ``repro.api`` index.
+    """
+    from repro import api
+
+    return api.as_index(engine, index, seed=seed).query(np.asarray(q_ids),
+                                                        threshold)
 
 
 def evaluate_engine(
@@ -61,10 +58,14 @@ def evaluate_engine(
     seed: int = 0,
 ) -> dict:
     """Mean F_α / precision / recall of an engine over a query workload."""
+    from repro import api
+
+    truth_idx = api.as_index("exact", exact_index)
+    idx = api.as_index(engine, index, seed=seed)
     fs, ps, rs = [], [], []
     for q in queries:
-        truth = exact_mod.exact_search(exact_index, q, threshold)
-        got = run_search(engine, index, q, threshold, seed=seed)
+        truth = truth_idx.query(q, threshold)
+        got = idx.query(q, threshold)
         fs.append(f_score(truth, got, alpha=alpha))
         p, r = precision_recall(truth, got)
         ps.append(p)

@@ -14,7 +14,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.gbkmv import build_gbkmv, search as gbkmv_search
+from repro import api
 
 
 def shingle(tokens: np.ndarray, q: int = 3) -> np.ndarray:
@@ -46,15 +46,15 @@ def dedup_corpus(
     """
     shingles = [shingle(d, q=q) for d in docs]
     total = sum(len(s) for s in shingles)
-    index = build_gbkmv(shingles, budget=max(int(total * budget_frac), 64),
-                        seed=seed)
+    index = api.get_engine("gbkmv").build(
+        shingles, max(int(total * budget_frac), 64), seed=seed)
     kept: list[int] = []
     kept_mask = np.zeros(len(docs), dtype=bool)
     dropped = 0
     for i, s in enumerate(shingles):
         if len(s) == 0:
             continue
-        cands = gbkmv_search(index, s, threshold)
+        cands = index.query(s, threshold)
         # Containment of doc i in any EARLIER kept doc → near-dup.
         hit = any(kept_mask[c] for c in cands if c != i)
         if hit:

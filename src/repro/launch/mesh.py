@@ -13,7 +13,9 @@ import math
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -31,8 +33,7 @@ def make_mesh(shape, axes) -> Mesh:
             f"mesh {shape} needs {n} devices, have {len(devs)} — the dry-run "
             "launcher must set XLA_FLAGS=--xla_force_host_platform_device_count "
             "before any jax import (launch/dryrun.py does)")
-    return jax.make_mesh(shape, axes, devices=np.array(devs[:n]),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=np.array(devs[:n]))
 
 
 def host_mesh(model: int = 1) -> Mesh:

@@ -14,13 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import registry
-from repro.core.gbkmv import build_gbkmv
 from repro.data import datasets, synth
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as tfm
-from repro.sketchindex import (
-    batch_queries, distributed_topk, score_batch, to_device_index)
+from repro.sketchindex import ShardedIndex
 
 
 def serve_sketch(args):
@@ -28,24 +27,22 @@ def serve_sketch(args):
                      ("data", "model"))
     recs = datasets.load(args.dataset, scale=args.scale)
     total = sum(len(r) for r in recs)
-    index = build_gbkmv(recs, budget=int(total * 0.1), seed=0)
-    didx = to_device_index(index, mesh)
+    index = api.get_engine("gbkmv").build(recs, int(total * 0.1), seed=0,
+                                          backend=args.backend)
+    sharded = ShardedIndex(index, mesh, backend=args.backend)
     queries = synth.make_query_workload(recs, args.batch * args.rounds)
     print(f"[serve] {args.dataset}: m={len(recs)} index={index.nbytes()/1e6:.1f}MB "
-          f"buffer_bits={index.buffer_bits}")
+          f"buffer_bits={index.core.buffer_bits}")
 
     lat = []
     for r in range(args.rounds):
         qs = queries[r * args.batch:(r + 1) * args.batch]
-        qp = batch_queries(index, qs)
         t0 = time.time()
-        scores = score_batch(didx, qp)
-        v, i = distributed_topk(scores, args.topk, mesh)
-        jax.block_until_ready((v, i))
+        results = sharded.serve_batch(qs, 0.5, args.topk)
         lat.append(time.time() - t0)
         if r == 0:
             print(f"[serve] round0 top1 scores: "
-                  f"{np.asarray(v[:4, 0]).round(3).tolist()}")
+                  f"{[round(float(x['topk_scores'][0]), 3) for x in results[:4]]}")
     lat = np.asarray(lat) * 1e3
     print(f"[serve] batched {args.batch} queries/round: "
           f"p50={np.percentile(lat, 50):.1f}ms p99={np.percentile(lat, 99):.1f}ms "
@@ -87,6 +84,8 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--backend", default="jnp",
+                    choices=("numpy", "jnp", "pallas"))
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--seq", type=int, default=32)

@@ -14,7 +14,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gbkmv import build_gbkmv
+from repro import api
 from repro.core.hashing import hash_u32_np
 from repro.data import datasets
 from repro.launch.mesh import make_mesh
@@ -53,20 +53,16 @@ def main():
 
     r = args.buffer if args.buffer == "auto" else int(args.buffer)
     t0 = time.time()
-    index = build_gbkmv(recs, budget=budget, r=r)
+    index = api.get_engine("gbkmv").build(recs, budget, r=r)
     build_s = time.time() - t0
-    s = index.sketches
+    s = index.core.sketches
     print(f"[build] m={len(recs)} elements={total} → sketch "
           f"{index.nbytes()/1e6:.2f}MB (cap={s.capacity}, buffer r="
-          f"{index.buffer_bits}) in {build_s:.2f}s")
+          f"{index.core.buffer_bits}) in {build_s:.2f}s")
 
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, f"{args.dataset}.npz")
-    np.savez_compressed(
-        path, values=s.values, lengths=s.lengths, thresh=s.thresh,
-        buf=s.buf, sizes=s.sizes, tau=np.uint32(index.tau),
-        top_elems=index.top_elems, seed=index.seed,
-        buffer_bits=index.buffer_bits)
+    index.save(path)                      # api npz round-trip (load_index)
     print(f"[build] saved → {path}")
 
 

@@ -61,7 +61,7 @@ class MicroBatcher:
         """Enqueue; returns a batch to execute when the size bound hits."""
         self.pending.append(req)
         if len(self.pending) >= self.max_batch:
-            return self._flush(full=True)
+            return self.flush(full=True)
         return None
 
     def poll(self) -> list[Request] | None:
@@ -69,10 +69,12 @@ class MicroBatcher:
         if not self.pending:
             return None
         if self.clock() - self.pending[0].arrival >= self.max_wait:
-            return self._flush(full=False)
+            return self.flush(full=False)
         return None
 
-    def _flush(self, full: bool) -> list[Request]:
+    def flush(self, full: bool = False) -> list[Request]:
+        """Drain and return the pending batch (public — drivers drain
+        stragglers through this, not through a private hook)."""
         batch, self.pending = self.pending, []
         if full:
             self.stats.flushes_full += 1
@@ -86,16 +88,26 @@ class MicroBatcher:
 
 
 class SketchServer:
-    """Batcher + distributed GB-KMV index + global top-k, end to end."""
+    """Batcher + sharded GB-KMV index + global top-k, end to end.
 
-    def __init__(self, index, mesh, max_batch: int = 16,
+    ``index`` may be a host GBKMVIndex, a ``repro.api`` GB-KMV index, or
+    an already-placed :class:`repro.sketchindex.ShardedIndex` — device
+    placement is the ShardedIndex's job, not the server's.
+    """
+
+    def __init__(self, index, mesh=None, max_batch: int = 16,
                  max_wait: float = 0.01, topk: int = 10,
-                 clock: Callable[[], float] = time.monotonic):
-        from repro.sketchindex import to_device_index
+                 clock: Callable[[], float] = time.monotonic,
+                 backend: str = "jnp"):
+        from repro.sketchindex import ShardedIndex
 
-        self.index = index
-        self.mesh = mesh
-        self.didx = to_device_index(index, mesh)
+        if isinstance(index, ShardedIndex):
+            self.index = index
+        else:
+            if mesh is None:
+                raise ValueError("mesh is required unless index is already "
+                                 "a ShardedIndex")
+            self.index = ShardedIndex(index, mesh, backend=backend)
         self.topk = topk
         self.batcher = MicroBatcher(max_batch, max_wait, clock)
         self._next_rid = 0
@@ -117,23 +129,11 @@ class SketchServer:
 
     def flush(self):
         if self.batcher.pending:
-            self._execute(self.batcher._flush(full=False))
+            self._execute(self.batcher.flush(full=False))
 
     def _execute(self, batch: list[Request]):
-        import jax
-
-        from repro.sketchindex import batch_queries, distributed_topk, score_batch
-
-        qp = batch_queries(self.index, [r.q_ids for r in batch])
-        scores = score_batch(self.didx, qp)
-        vals, ids = distributed_topk(scores, self.topk, self.mesh)
-        jax.block_until_ready(vals)
-        m = self.index.num_records
-        sc = np.asarray(scores)[:m]
-        for j, req in enumerate(batch):
-            hits = np.nonzero(sc[:, j] >= req.threshold)[0]
-            self.results[req.rid] = {
-                "hits": hits,
-                "topk_ids": np.asarray(ids)[j],
-                "topk_scores": np.asarray(vals)[j],
-            }
+        results = self.index.serve_batch(
+            [r.q_ids for r in batch],
+            np.asarray([r.threshold for r in batch]), self.topk)
+        for req, res in zip(batch, results):
+            self.results[req.rid] = res

@@ -1,5 +1,6 @@
 from repro.sketchindex.distributed import (  # noqa: F401
     DeviceIndex,
+    ShardedIndex,
     batch_queries,
     distributed_search,
     distributed_topk,

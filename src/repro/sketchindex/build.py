@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 _LEVEL_BITS = 12
 _BINS = 1 << _LEVEL_BITS
 
@@ -90,6 +92,6 @@ def distributed_tau(hashes_sharded, budget: int, mesh: Mesh, row_axes):
                 | (b2 << jnp.uint32(rem_bits))
                 | jnp.uint32((1 << rem_bits) - 1))
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(P(row_axes),),
-                       out_specs=P(), check_vma=False)
+    fn = compat.shard_map(local, mesh=mesh, in_specs=(P(row_axes),),
+                          out_specs=P())
     return fn(jnp.asarray(hashes_sharded, jnp.uint32))

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.estimators import buffer_intersection, gkmv_pair_estimate
 from repro.core.hashing import PAD
 from repro.core.sketches import PackedSketches
@@ -127,21 +128,45 @@ def _scores_jnp(values, lengths, thresh, buf, q_values, q_thresh, q_buf, q_sizes
     return jax.vmap(one_query)(q_values, q_thresh, q_buf, q_sizes).T
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def score_batch(didx: DeviceIndex, q: PackedSketches, impl: str = "jnp"):
-    """Containment scores f32[Mp, Gq]; records sharded, queries replicated."""
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _score_batch_jit(didx: DeviceIndex, q: PackedSketches, backend: str):
     qv = jnp.asarray(q.values, jnp.uint32)
     qt = jnp.asarray(q.thresh, jnp.uint32)
     qb = jnp.asarray(q.buf, jnp.uint32)
     qs = jnp.asarray(q.sizes, jnp.int32)
     if qb.shape[1] != didx.buf.shape[1]:
         qb = jnp.pad(qb, ((0, 0), (0, didx.buf.shape[1] - qb.shape[1])))
-    if impl == "kernel":
+    if backend == "pallas":
         from repro.kernels.ops import score_index
         return score_index(didx.values, didx.thresh, didx.buf,
                            qv, qt, qb, qs)
     return _scores_jnp(didx.values, didx.lengths, didx.thresh, didx.buf,
                        qv, qt, qb, qs)
+
+
+def score_batch(didx: DeviceIndex, q: PackedSketches,
+                backend: str | None = None, impl: str | None = None):
+    """Containment scores f32[Mp, Gq]; records sharded, queries replicated.
+
+    ``backend`` ∈ {"numpy", "jnp", "pallas"} — the one option threaded
+    through every scoring layer (``impl=`` is the deprecated spelling;
+    "kernel" → "pallas"). "numpy" computes on host from fetched shards —
+    a debug/parity path, not a serving path.
+    """
+    from repro.core.estimators import containment_matrix, normalize_backend
+
+    backend = normalize_backend(backend, impl)
+    if backend == "numpy":
+        x = PackedSketches(
+            values=np.asarray(didx.values), lengths=np.asarray(didx.lengths),
+            thresh=np.asarray(didx.thresh), buf=np.asarray(didx.buf),
+            sizes=np.asarray(didx.sizes))
+        qh = PackedSketches(
+            values=np.asarray(q.values), lengths=np.asarray(q.lengths),
+            thresh=np.asarray(q.thresh), buf=np.asarray(q.buf),
+            sizes=np.asarray(q.sizes))
+        return containment_matrix(qh, x, backend="numpy")
+    return _score_batch_jit(didx, q, backend)
 
 
 jax.tree_util.register_dataclass(
@@ -184,17 +209,105 @@ def distributed_topk(scores, k: int, mesh: Mesh):
         vtop, sel = jax.lax.top_k(vflat, k)
         return vtop, jnp.take_along_axis(iflat, sel, axis=-1)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(row_axes, None),),
         out_specs=(P(), P()),
-        check_vma=False,
     )
     return fn(scores)
 
 
 def distributed_search(didx: DeviceIndex, q: PackedSketches, threshold: float,
-                       impl: str = "jnp"):
+                       backend: str | None = None, impl: str | None = None):
     """Algorithm 2 at cluster scale: boolean candidate mask [Mp, Gq]."""
-    scores = score_batch(didx, q, impl=impl)
+    scores = score_batch(didx, q, backend=backend, impl=impl)
     return scores >= threshold, scores
+
+
+class ShardedIndex:
+    """Device-sharded GB-KMV index implementing the ``repro.api`` protocol.
+
+    Wraps a host :class:`GBKMVIndex` placed on a mesh (``to_device_index``)
+    so serving, benchmarks, and the api registry talk to sharded and host
+    indexes through the same surface — ``SketchServer`` no longer
+    special-cases device placement.
+    """
+
+    engine = "gbkmv"
+
+    def __init__(self, index, mesh: Mesh, backend: str = "jnp",
+                 budget: int | None = None):
+        core = getattr(index, "core", index)       # api wrapper or core index
+        self.host = core
+        self.mesh = mesh
+        self.backend = backend
+        self.budget = budget if budget is not None else getattr(
+            index, "budget", None)
+        self.didx = to_device_index(core, mesh)
+
+    @property
+    def num_records(self) -> int:
+        return self.host.num_records
+
+    # -- scoring --
+    def batch_scores(self, queries) -> np.ndarray:
+        """f32[m, Gq] (padding rows trimmed) — one sharded index sweep."""
+        qp = batch_queries(self.host, [np.asarray(q) for q in queries])
+        s = score_batch(self.didx, qp, backend=self.backend)
+        return np.asarray(s)[: self.num_records]
+
+    def serve_batch(self, queries, thresholds, k: int):
+        """One device sweep answering threshold + top-k for a whole batch.
+
+        ``thresholds`` is scalar or per-query. Returns one dict per query:
+        {"hits", "topk_ids", "topk_scores"}.
+        """
+        qp = batch_queries(self.host, [np.asarray(q) for q in queries])
+        scores = score_batch(self.didx, qp, backend=self.backend)
+        vals, ids = distributed_topk(scores, k, self.mesh)
+        jax.block_until_ready(vals)
+        sc = np.asarray(scores)[: self.num_records]
+        thr = np.broadcast_to(np.asarray(thresholds, np.float64),
+                              (len(queries),))
+        return [
+            {"hits": np.nonzero(sc[:, j] >= thr[j])[0],
+             "topk_ids": np.asarray(ids)[j],
+             "topk_scores": np.asarray(vals)[j]}
+            for j in range(len(queries))
+        ]
+
+    # -- repro.api protocol --
+    def query(self, q_ids, threshold: float) -> np.ndarray:
+        return self.batch_query([q_ids], threshold)[0]
+
+    def batch_query(self, queries, threshold: float) -> list[np.ndarray]:
+        s = self.batch_scores(queries)
+        return [np.nonzero(s[:, j] >= threshold)[0] for j in range(s.shape[1])]
+
+    def topk(self, q_ids, k: int):
+        qp = batch_queries(self.host, [np.asarray(q_ids)])
+        scores = score_batch(self.didx, qp, backend=self.backend)
+        vals, ids = distributed_topk(scores, k, self.mesh)
+        return (np.asarray(ids)[0].astype(np.int64),
+                np.asarray(vals)[0].astype(np.float32))
+
+    def insert(self, new_records, budget: int | None = None):
+        """Dynamic insert on the host sketch (delegated to the api index so
+        budget semantics live in one place), then re-place on the mesh."""
+        from repro import api
+
+        wrapper = api.GBKMVEngine.wrap(
+            self.host, budget=budget if budget is not None else self.budget)
+        wrapper.insert(new_records)
+        self.host = wrapper.core
+        self.stats = wrapper.stats
+        self.didx = to_device_index(self.host, self.mesh)
+        return self
+
+    def save(self, path: str) -> None:
+        from repro import api
+
+        api.GBKMVEngine.wrap(self.host, budget=self.budget).save(path)
+
+    def nbytes(self) -> int:
+        return self.host.nbytes()

@@ -1,0 +1,213 @@
+"""Unified-API tests: registry completeness, cross-engine parity with the
+legacy doors, backend agreement, serialization round-trips, inserts, and
+the ShardedIndex protocol implementation."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import exact as exact_mod
+from repro.core import gbkmv as gbkmv_mod
+from repro.core import lshe as lshe_mod
+from repro.core.search import run_search
+from repro.data.synth import generate_dataset, make_query_workload
+
+ENGINES = ("gbkmv", "gkmv", "kmv", "lshe", "exact", "prefix")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    recs = generate_dataset(m=120, n_elems=4000, alpha_freq=1.1,
+                            alpha_size=2.0, seed=0)
+    total = sum(len(r) for r in recs)
+    queries = make_query_workload(recs, 6, seed=1)
+    return recs, total, queries
+
+
+def test_registry_lists_all_engines():
+    assert set(ENGINES) <= set(api.list_engines())
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_every_engine_constructible_and_queryable(corpus, engine):
+    recs, total, queries = corpus
+    idx = api.get_engine(engine).build(recs, int(total * 0.1))
+    assert isinstance(idx, api.ContainmentIndex)
+    hits = idx.query(queries[0], 0.5)
+    assert hits.ndim == 1
+    batched = idx.batch_query(queries[:3], 0.5)
+    assert len(batched) == 3
+    np.testing.assert_array_equal(batched[0], hits)
+    ids, scores = idx.topk(queries[0], 5)
+    assert len(ids) == 5 and len(scores) == 5
+    assert all(a >= b for a, b in zip(scores, scores[1:]))
+    assert idx.nbytes() > 0
+
+
+@pytest.mark.parametrize("engine,legacy", [
+    ("gbkmv", lambda recs, b, q, t: gbkmv_mod.search(
+        gbkmv_mod.build_gbkmv(recs, budget=b), q, t)),
+    ("lshe", lambda recs, b, q, t: lshe_mod.query_lshe(
+        lshe_mod.build_lshe(recs, num_hashes=max(8, b // len(recs))), q, t)),
+    ("exact", lambda recs, b, q, t: exact_mod.exact_search(
+        exact_mod.build_inverted(recs), q, t)),
+    ("prefix", lambda recs, b, q, t: exact_mod.prefix_filter_search(
+        exact_mod.build_inverted(recs), q, t)),
+])
+def test_new_api_matches_legacy_door(corpus, engine, legacy):
+    """repro.api results == the pre-registry per-engine entry points."""
+    recs, total, queries = corpus
+    budget = int(total * 0.1)
+    idx = api.get_engine(engine).build(recs, budget)
+    for q in queries:
+        got = idx.query(q, 0.5)
+        want = legacy(recs, budget, q, 0.5)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_run_search_shim_matches_api(corpus, engine):
+    """The legacy run_search front door now covers ALL engines and agrees
+    with the api path, including the previously unreachable kmv/gkmv."""
+    recs, total, queries = corpus
+    budget = int(total * 0.1)
+    idx = api.get_engine(engine).build(recs, budget)
+    for q in queries[:3]:
+        np.testing.assert_array_equal(
+            run_search(engine, idx, q, 0.5), idx.query(q, 0.5))
+
+
+def test_backends_agree_on_gbkmv_scores(corpus):
+    recs, total, queries = corpus
+    for r in ("auto", 0):          # with and without the bitmap buffer
+        idx = api.get_engine("gbkmv").build(recs, int(total * 0.1), r=r)
+        for q in queries[:3]:
+            ref = None
+            for backend in ("numpy", "jnp", "pallas"):
+                idx.backend = backend
+                s = idx.scores(q)
+                if ref is None:
+                    ref = s
+                else:
+                    np.testing.assert_allclose(s, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_scores(idx, tmp_path, queries, name):
+    path = os.path.join(tmp_path, f"{name}.npz")
+    idx.save(path)
+    idx2 = api.load_index(path)
+    assert idx2.engine == idx.engine
+    assert idx2.nbytes() == idx.nbytes()
+    for q in queries:
+        np.testing.assert_array_equal(np.asarray(idx.scores(q)),
+                                      np.asarray(idx2.scores(q)))
+        np.testing.assert_array_equal(idx.query(q, 0.5), idx2.query(q, 0.5))
+
+
+@pytest.mark.parametrize("engine", ("gbkmv", "gkmv", "kmv", "lshe"))
+def test_save_load_roundtrip_bit_exact(corpus, tmp_path, engine):
+    recs, total, queries = corpus
+    idx = api.get_engine(engine).build(recs, int(total * 0.1))
+    _roundtrip_scores(idx, str(tmp_path), queries[:4], engine)
+
+
+def test_save_load_roundtrip_r0_and_capacity(corpus, tmp_path):
+    """GB-KMV edge cases: r=0 (no buffer words) and capacity truncation
+    (per-row effective thresholds below the global τ)."""
+    recs, total, queries = corpus
+    r0 = api.get_engine("gbkmv").build(recs, int(total * 0.1), r=0)
+    assert r0.core.sketches.buf_words == 0
+    _roundtrip_scores(r0, str(tmp_path), queries[:3], "gbkmv_r0")
+
+    capped = api.get_engine("gbkmv").build(recs, int(total * 0.2), r=32,
+                                           capacity=8)
+    thr = np.asarray(capped.core.sketches.thresh)
+    assert (thr < np.asarray(capped.core.tau)).any(), "no truncated rows"
+    _roundtrip_scores(capped, str(tmp_path), queries[:3], "gbkmv_cap")
+
+
+def test_exact_engine_save_raises(corpus, tmp_path):
+    recs, _, _ = corpus
+    idx = api.get_engine("exact").build(recs)
+    with pytest.raises(NotImplementedError):
+        idx.save(os.path.join(str(tmp_path), "x.npz"))
+
+
+# ---------------------------------------------------------------------------
+# inserts
+# ---------------------------------------------------------------------------
+
+
+def test_insert_after_load_keeps_sketch_intact(corpus, tmp_path):
+    """Regression: an index saved with no recorded budget (budget=-1
+    sentinel in the npz) must derive the budget from its current size on
+    insert — not run dynamic maintenance with budget=-1, which would
+    retighten τ to ~1 hash/record and silently destroy the sketch."""
+    recs, total, _ = corpus
+    idx = api.GBKMVEngine.wrap(          # wrap() records no budget
+        api.get_engine("gbkmv").build(recs, int(total * 0.1)).core)
+    path = os.path.join(str(tmp_path), "nobudget.npz")
+    idx.save(path)
+    loaded = api.load_index(path)
+    assert loaded.budget is None
+    kept_before = int(np.asarray(loaded.core.sketches.lengths).sum())
+    loaded.insert(recs[:2])
+    kept_after = int(np.asarray(loaded.core.sketches.lengths).sum())
+    assert kept_after >= kept_before * 0.9, (kept_before, kept_after)
+
+
+def test_gbkmv_insert_is_dynamic(corpus):
+    """GB-KMV inserts ride sketchindex.dynamic (τ only ever tightens)."""
+    recs, total, queries = corpus
+    idx = api.get_engine("gbkmv").build(recs, int(total * 0.1))
+    tau0 = int(idx.core.tau)
+    m0 = idx.num_records
+    idx.insert(recs[:10])
+    assert idx.num_records == m0 + 10
+    assert int(idx.core.tau) <= tau0
+    # new rows answer queries
+    assert idx.query(recs[0], 0.99).size >= 0
+
+
+@pytest.mark.parametrize("engine", ("gkmv", "kmv", "lshe", "exact"))
+def test_rebuild_insert_fallback(corpus, engine):
+    recs, total, _ = corpus
+    idx = api.get_engine(engine).build(recs, int(total * 0.1))
+    m0 = idx.num_records
+    idx.insert(recs[:5])
+    assert idx.num_records == m0 + 5
+
+
+# ---------------------------------------------------------------------------
+# ShardedIndex implements the same protocol
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_index_protocol(corpus):
+    import jax
+
+    from repro.sketchindex import ShardedIndex
+
+    recs, total, queries = corpus
+    idx = api.get_engine("gbkmv").build(recs, int(total * 0.1))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sharded = ShardedIndex(idx, mesh)
+    assert isinstance(sharded, api.ContainmentIndex)
+    for q in queries[:3]:
+        np.testing.assert_array_equal(sharded.query(q, 0.5),
+                                      idx.query(q, 0.5))
+    ids, scores = sharded.topk(queries[0], 5)
+    host_scores = idx.scores(queries[0])
+    np.testing.assert_allclose(scores, np.sort(host_scores)[::-1][:5],
+                               rtol=1e-5, atol=1e-5)
+    m0 = sharded.num_records
+    sharded.insert(recs[:4])
+    assert sharded.num_records == m0 + 4
+    assert sharded.batch_scores(queries[:2]).shape == (m0 + 4, 2)

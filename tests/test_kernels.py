@@ -4,7 +4,9 @@ shape/dtype sweep, plus a hypothesis fuzz over sketch contents."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property fuzzing needs hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.hashing import hash_u32_np, PAD
 from repro.kernels import ops

@@ -4,7 +4,10 @@ index, EmbeddingBag substrate, and checkpoint layer."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.gbkmv import build_gbkmv, sketch_query
 from repro.core.estimators import gbkmv_containment

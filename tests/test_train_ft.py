@@ -118,10 +118,10 @@ def test_compressed_psum_error_feedback():
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
                           jnp.float32) * 1e-3}
     e = init_error_state(g)
-    fn = jax.jit(jax.shard_map(
+    from repro import compat
+    fn = jax.jit(compat.shard_map(
         lambda gg, ee: compressed_psum_mean(gg, ee, "data"),
-        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P())))
     total = jnp.zeros_like(g["w"])
     for _ in range(32):
         out, e = fn(g, e)
