@@ -1,0 +1,97 @@
+"""Planner bench: dense index sweep vs postings-pruned filter-and-verify.
+
+QPS and candidate-set sizes at thresholds {0.5, 0.7, 0.9} on the Zipf
+workload (the Fig. 16 generator) — the start of the perf trajectory for
+the candidate-pruning query planner. Parity between the two paths is
+asserted on every batch: a mismatch raises (and fails the CI smoke
+step), because the planner's whole contract is bit-identical results.
+
+``run(quick, json_out=...)`` additionally writes a machine-readable
+summary (BENCH_PLANNER.json at the repo root via ``benchmarks.run
+--suite planner --json``).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro import api
+from repro.data.synth import generate_dataset, make_query_workload
+
+THRESHOLDS = (0.5, 0.7, 0.9)
+BATCH = 16
+
+
+def _batches(queries):
+    return [queries[i : i + BATCH] for i in range(0, len(queries), BATCH)]
+
+
+def _time_path(index, batches, threshold, plan) -> float:
+    """Seconds for one pass over the workload (after a warmup pass)."""
+    for b in batches:                      # warmup: jit caches, postings
+        index.batch_query(b, threshold, plan=plan)
+    t0 = time.perf_counter()
+    for b in batches:
+        index.batch_query(b, threshold, plan=plan)
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = True, json_out: str | None = None):
+    m = 4000 if quick else 20_000
+    n_elems = 20_000 if quick else 100_000
+    nq = 64 if quick else 256
+    recs = generate_dataset(m, n_elems, alpha_freq=0.8, alpha_size=1.0,
+                            size_min=10, size_max=400, seed=5)
+    total = sum(len(r) for r in recs)
+    budget = int(total * 0.1)
+    index = api.get_engine("gbkmv").build(recs, budget, backend="jnp")
+    queries = make_query_workload(recs, nq, seed=2)
+    batches = _batches(queries)
+
+    rows = []
+    for t in THRESHOLDS:
+        dense = index.batch_query(queries, t, plan="dense")
+        pruned = index.batch_query(queries, t, plan="pruned")
+        for j, (d, p) in enumerate(zip(dense, pruned)):
+            if not np.array_equal(d, p):
+                raise RuntimeError(
+                    f"planner parity broken at t={t}, query {j}: "
+                    f"dense={d.tolist()} pruned={p.tolist()}")
+        cand_sizes = []
+        for b in batches:
+            index.batch_query(b, t, plan="pruned")
+            cand_sizes.extend(index.last_candidate_sizes or [])
+        dt_dense = _time_path(index, batches, t, "dense")
+        dt_pruned = _time_path(index, batches, t, "pruned")
+        rows.append({
+            "threshold": t,
+            "qps_dense": round(nq / dt_dense, 2),
+            "qps_pruned": round(nq / dt_pruned, 2),
+            "speedup": round(dt_dense / dt_pruned, 3),
+            "mean_candidates": round(float(np.mean(cand_sizes)), 2),
+            "candidate_frac": round(float(np.mean(cand_sizes)) / m, 5),
+            "mean_hits": float(np.mean([len(d) for d in dense])),
+            "parity": True,
+        })
+
+    write_csv("planner.csv", rows)
+    if json_out:
+        payload = {
+            "suite": "planner",
+            "profile": "quick" if quick else "full",
+            "workload": {
+                "generator": "zipf", "m": m, "n_elems": n_elems,
+                "alpha_freq": 0.8, "alpha_size": 1.0, "budget": budget,
+                "n_queries": nq, "batch": BATCH, "engine": "gbkmv",
+                "backend": "jnp",
+            },
+            "rows": rows,
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows

@@ -8,6 +8,7 @@ One module per paper table/figure (DESIGN.md §7) + the kernel microbench
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -17,6 +18,7 @@ from benchmarks import (
     bench_buffer_size,
     bench_construction,
     bench_kernels,
+    bench_planner,
     bench_sketch_ablation,
     bench_space_accuracy,
     bench_threshold,
@@ -36,7 +38,13 @@ SUITES = [
     ("fig18_t3_construction", bench_construction),
     ("fig19_uniform_exact", bench_uniform_exact),
     ("kernel_microbench", bench_kernels),
+    ("planner", bench_planner),
 ]
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# suite name -> repo-root JSON artifact written under --json.
+JSON_ARTIFACTS = {"planner": os.path.join(REPO_ROOT, "BENCH_PLANNER.json")}
 
 
 def _print_rows(rows, limit=100):
@@ -52,23 +60,46 @@ def _print_rows(rows, limit=100):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="substring filter over suite names")
+    ap.add_argument("--suite", default="",
+                    help="run exactly one suite by name (e.g. planner)")
+    ap.add_argument("--json", action="store_true",
+                    help="also write machine-readable artifacts at the "
+                         "repo root (e.g. BENCH_PLANNER.json)")
     args = ap.parse_args()
+
+    if args.suite and args.suite not in {n for n, _ in SUITES}:
+        # A typo here must not green-light CI with zero suites run.
+        ap.error(f"unknown suite {args.suite!r}; "
+                 f"available: {[n for n, _ in SUITES]}")
 
     failures = 0
     for name, mod in SUITES:
+        if args.suite and name != args.suite:
+            continue
         if args.only and args.only not in name:
             continue
         t0 = time.time()
         print(f"\n=== {name} ===")
         try:
-            rows = mod.run(quick=not args.full)
+            kwargs = {}
+            if args.json and name in JSON_ARTIFACTS:
+                kwargs["json_out"] = JSON_ARTIFACTS[name]
+            rows = mod.run(quick=not args.full, **kwargs)
             _print_rows(rows)
             print(f"  [{time.time()-t0:.1f}s] → reports/bench/{name}.csv")
+            if "json_out" in kwargs:
+                print(f"  → {kwargs['json_out']}")
         except Exception:
             failures += 1
             print(f"  FAILED after {time.time()-t0:.1f}s")
             traceback.print_exc()
+
+    if args.suite:
+        # Targeted smoke run (CI): skip the roofline epilogue.
+        print(f"\n{'SUITE OK' if not failures else f'{failures} FAILURES'}")
+        sys.exit(1 if failures else 0)
 
     print("\n=== roofline (from dry-run artifacts) ===")
     try:

@@ -13,6 +13,13 @@ single evaluation door):
     index.save(path); repro.api.load_index(path)    # npz round-trip
     index.nbytes()                                  # space accounting
 
+Sketch engines (gbkmv/gkmv/kmv) route ``query``/``batch_query`` through
+the candidate-pruning planner (:mod:`repro.planner`): ``plan="auto"``
+(default) lets a cost model pick between the dense index sweep and the
+inverted-postings filter-and-verify path per batch; ``plan="dense"`` /
+``plan="pruned"`` force a path. Both return identical candidate sets —
+pruning is exact under the estimator's containment bound.
+
 Registered engines: ``gbkmv``, ``gkmv``, ``kmv`` (the paper's sketches),
 ``lshe`` (LSH Ensemble baseline), ``exact`` and ``prefix`` (ground-truth
 inverted-index engines). Sketch engines accept ``backend=`` ∈ {"numpy",
@@ -161,6 +168,9 @@ class _IndexBase:
         records = list(self._records) + [np.asarray(r) for r in new_records]
         rebuilt = get_engine(self.engine).build(records, **self._build_cfg)
         self.__dict__.update(rebuilt.__dict__)
+        # Planner postings describe the pre-rebuild sketches; drop them
+        # (the fresh build may not have touched the cache key).
+        self._post = None
         return self
 
     def save(self, path: str) -> None:
@@ -181,6 +191,89 @@ def _pack_from_npz(d: dict) -> PackedSketches:
     return PackedSketches(
         values=d["values"], lengths=d["lengths"], thresh=d["thresh"],
         buf=d["buf"], sizes=d["sizes"])
+
+
+def _concat_packs(packs: list[PackedSketches]) -> PackedSketches:
+    """Stack equal-width single-query packs into one query-batch pack."""
+    return PackedSketches(
+        values=np.concatenate([np.asarray(p.values) for p in packs]),
+        lengths=np.concatenate([np.asarray(p.lengths) for p in packs]),
+        thresh=np.concatenate([np.asarray(p.thresh) for p in packs]),
+        buf=np.concatenate([np.asarray(p.buf) for p in packs]),
+        sizes=np.concatenate([np.asarray(p.sizes) for p in packs]),
+    )
+
+
+class _PlannedIndexMixin:
+    """Planner routing for sketch-backed indexes (gbkmv/gkmv/kmv).
+
+    ``query``/``batch_query`` accept ``plan`` ∈ {"auto", "dense",
+    "pruned"}: "auto" (default) asks :mod:`repro.planner` to pick the
+    cheaper path per batch from posting selectivity; forced modes pin
+    it. Both paths return identical candidate id sets. ``topk`` always
+    runs the dense sweep (it needs the full ranking). Postings are built
+    lazily on first planned query and maintained across ``insert``.
+
+    Subclasses provide ``_sketch_pack`` (the packed record sketches),
+    ``_plan_queries`` (per-query retained hashes / buffer bits / sizes
+    + the scoring pack), and ``_pair_score_fn`` (ragged verify scorer).
+    """
+
+    last_plan = None            # QueryPlan of the most recent planned batch
+    last_candidate_sizes: list | None = None
+
+    def _sketch_pack(self) -> PackedSketches:
+        raise NotImplementedError
+
+    def _plan_queries(self, queries):
+        raise NotImplementedError
+
+    def _pair_score_fn(self, qp):
+        raise NotImplementedError
+
+    def _dense_batch_query(self, queries, threshold,
+                           qp=None) -> list[np.ndarray]:
+        """``qp``: query pack already built by _plan_queries (auto-routed
+        dense batches must not pay the sketching twice)."""
+        raise NotImplementedError
+
+    def _postings(self):
+        from repro import planner
+
+        s = self._sketch_pack()
+        if self._post is None or self._post.num_records != s.num_records:
+            self._post = planner.build_postings(s)
+        return self._post
+
+    def query(self, q_ids, threshold: float, *, plan: str = "auto") -> np.ndarray:
+        return self.batch_query([q_ids], threshold, plan=plan)[0]
+
+    def batch_query(self, queries, threshold: float, *,
+                    plan: str = "auto") -> list[np.ndarray]:
+        from repro import planner
+
+        plan = planner.normalize_plan(plan)
+        queries = [np.asarray(q) for q in queries]
+        if not queries:
+            return []
+        if plan == "dense" or float(threshold) <= 0.0:
+            self.last_plan = planner.QueryPlan(
+                "dense", np.nan, np.nan, 0,
+                "forced" if plan == "dense" else "threshold <= 0")
+            return self._dense_batch_query(queries, threshold)
+        qp, hash_rows, bit_rows, sizes = self._plan_queries(queries)
+        s = self._sketch_pack()
+        decision = planner.choose_plan(
+            self._postings(), hash_rows, bit_rows, threshold,
+            s.num_records, s.capacity, plan=plan)
+        self.last_plan = decision
+        if decision.path == "dense":
+            return self._dense_batch_query(queries, threshold, qp=qp)
+        ids, cands = planner.pruned_batch(
+            self._post, hash_rows, bit_rows, sizes, threshold,
+            self._pair_score_fn(qp))
+        self.last_candidate_sizes = [len(c.rec_ids) for c in cands]
+        return ids
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +309,7 @@ class GBKMVEngine:
                              backend=str(d.get("backend", "jnp")))
 
 
-class GBKMVApiIndex(_IndexBase):
+class GBKMVApiIndex(_PlannedIndexMixin, _IndexBase):
     engine = "gbkmv"
 
     def __init__(self, core: gbkmv_mod.GBKMVIndex, budget: int | None,
@@ -226,6 +319,7 @@ class GBKMVApiIndex(_IndexBase):
         self.backend = normalize_backend(backend)
         self._records = None            # dynamic path needs no raw records
         self._build_cfg = {}
+        self._post = None               # planner postings, built lazily
 
     @property
     def num_records(self) -> int:
@@ -235,20 +329,45 @@ class GBKMVApiIndex(_IndexBase):
         q = gbkmv_mod.sketch_query(self.core, np.asarray(q_ids))
         return gbkmv_mod.containment_scores(self.core, q, backend=self.backend)
 
-    def batch_query(self, queries, threshold: float) -> list[np.ndarray]:
-        s = self.batch_scores(queries)                       # [m, Gq]
-        return [np.nonzero(s[:, j] >= threshold)[0] for j in range(s.shape[1])]
+    # -- planner plumbing --
+    def _sketch_pack(self) -> PackedSketches:
+        return self.core.sketches
+
+    def _query_pack(self, queries) -> PackedSketches:
+        from repro.sketchindex.distributed import batch_queries
+
+        return batch_queries(self.core, queries)
+
+    def _plan_queries(self, queries):
+        from repro.planner.plan import gbkmv_plan_queries
+
+        return gbkmv_plan_queries(self.core, queries)
+
+    def _pair_score_fn(self, qp):
+        from repro.kernels import gather_score
+
+        return lambda cand_rec, cand_q: gather_score.score_pairs(
+            self._sketch_pack(), qp, cand_rec, cand_q, backend=self.backend)
+
+    def _dense_batch_query(self, queries, threshold,
+                           qp=None) -> list[np.ndarray]:
+        from repro.planner.prune import threshold_hits_packed
+
+        if qp is None:
+            qp = self._query_pack(queries)
+        s = containment_matrix(qp, self.core.sketches, backend=self.backend,
+                               as_numpy=False)     # device-resident for jnp/pallas
+        return threshold_hits_packed(s, threshold)
 
     def batch_scores(self, queries) -> np.ndarray:
         """f32[m, Gq] — one index sweep for a whole query batch."""
-        from repro.sketchindex.distributed import batch_queries
-
-        qp = batch_queries(self.core, [np.asarray(q) for q in queries])
+        qp = self._query_pack([np.asarray(q) for q in queries])
         return containment_matrix(qp, self.core.sketches, backend=self.backend)
 
     def insert(self, new_records, budget: int | None = None):
         """Paper §IV-B dynamic maintenance: τ-retighten, never re-hash old
-        rows (``sketchindex.dynamic``)."""
+        rows (``sketchindex.dynamic``); postings follow incrementally
+        (posting deletion + append, ``planner.update_postings``)."""
         from repro.sketchindex import dynamic
 
         budget = budget if budget is not None else self.budget
@@ -257,6 +376,11 @@ class GBKMVApiIndex(_IndexBase):
                 self.core.num_records * self.core.sketches.buf_words
         self.core, self.stats = dynamic.insert_records(
             self.core, [np.asarray(r) for r in new_records], int(budget))
+        if self._post is not None:
+            from repro import planner
+
+            self._post = planner.update_postings(
+                self._post, self.core.sketches, self.core.tau)
         return self
 
     def save(self, path: str) -> None:
@@ -305,7 +429,7 @@ class GKMVEngine:
                             backend=str(d.get("backend", "jnp")))
 
 
-class GKMVApiIndex(_IndexBase):
+class GKMVApiIndex(_PlannedIndexMixin, _IndexBase):
     engine = "gkmv"
 
     def __init__(self, sketches: PackedSketches, tau: int, seed: int,
@@ -316,6 +440,7 @@ class GKMVApiIndex(_IndexBase):
         self.backend = normalize_backend(backend)
         self._records = None
         self._build_cfg = {}
+        self._post = None
 
     @property
     def num_records(self) -> int:
@@ -325,6 +450,39 @@ class GKMVApiIndex(_IndexBase):
         q = gkmv_mod.sketch_query(np.asarray(q_ids), self.tau, seed=self.seed,
                                   capacity=self.sketches.capacity)
         return containment_matrix(q, self.sketches, backend=self.backend)[:, 0]
+
+    # -- planner plumbing --
+    def _sketch_pack(self) -> PackedSketches:
+        return self.sketches
+
+    def _query_pack(self, queries) -> PackedSketches:
+        return _concat_packs([
+            gkmv_mod.sketch_query(q, self.tau, seed=self.seed,
+                                  capacity=self.sketches.capacity)
+            for q in queries])
+
+    def _plan_queries(self, queries):
+        qp = self._query_pack(queries)
+        vals, lens = np.asarray(qp.values), np.asarray(qp.lengths)
+        hash_rows = [vals[g, : lens[g]] for g in range(len(queries))]
+        bit_rows = [np.zeros(0, np.int64)] * len(queries)   # no buffer
+        return qp, hash_rows, bit_rows, np.asarray(qp.sizes)
+
+    def _pair_score_fn(self, qp):
+        from repro.kernels import gather_score
+
+        return lambda cand_rec, cand_q: gather_score.score_pairs(
+            self.sketches, qp, cand_rec, cand_q, backend=self.backend)
+
+    def _dense_batch_query(self, queries, threshold,
+                           qp=None) -> list[np.ndarray]:
+        from repro.planner.prune import threshold_hits_packed
+
+        if qp is None:
+            qp = self._query_pack(queries)
+        s = containment_matrix(qp, self.sketches, backend=self.backend,
+                               as_numpy=False)
+        return threshold_hits_packed(s, threshold)
 
     def save(self, path: str) -> None:
         np.savez_compressed(path, engine="gkmv", tau=np.uint32(self.tau),
@@ -357,7 +515,7 @@ class KMVEngine:
                            backend=str(d.get("backend", "jnp")))
 
 
-class KMVApiIndex(_IndexBase):
+class KMVApiIndex(_PlannedIndexMixin, _IndexBase):
     engine = "kmv"
 
     def __init__(self, sketches: PackedSketches, seed: int,
@@ -367,25 +525,76 @@ class KMVApiIndex(_IndexBase):
         self.backend = normalize_backend(backend)
         self._records = None
         self._build_cfg = {}
+        self._post = None
 
     @property
     def num_records(self) -> int:
         return self.sketches.num_records
 
+    def _query_sketch(self, q_ids) -> np.ndarray:
+        """The query's own KMV synopsis: its k smallest hashes, sorted."""
+        k = self.sketches.capacity
+        return np.sort(hash_u32_np(np.asarray(q_ids), seed=self.seed))[:k]
+
     def _scores(self, q_ids) -> np.ndarray:
         """Ĉ = D̂∩ / |Q| with the Eq. 8-10 pair estimator (k = min rule)."""
+        q_ids = np.asarray(q_ids)
+        h = self._query_sketch(q_ids)
+        return self._scores_rows(h, len(q_ids), rows=None)
+
+    def _scores_rows(self, q_hashes, q_len: int, rows) -> np.ndarray:
+        """Pair estimator against all record rows (rows=None) or a
+        gathered candidate subset — identical math either way."""
         from repro.core.estimators import kmv_pair_estimate
         import jax.numpy as jnp
 
-        q_ids = np.asarray(q_ids)
         k = self.sketches.capacity
-        h = np.sort(hash_u32_np(q_ids, seed=self.seed))[:k]
-        qv = np.pad(h, (0, k - len(h)), constant_values=PAD)
+        qv = np.pad(q_hashes, (0, k - len(q_hashes)), constant_values=PAD)
+        xv = np.asarray(self.sketches.values)
+        xl = np.asarray(self.sketches.lengths)
+        if rows is not None:
+            xv, xl = xv[rows], xl[rows]
         d_hat, _, _ = kmv_pair_estimate(
-            jnp.asarray(qv), jnp.int32(len(h)),
-            jnp.asarray(self.sketches.values),
-            jnp.asarray(self.sketches.lengths))
-        return np.asarray(d_hat) / max(len(q_ids), 1)
+            jnp.asarray(qv), jnp.int32(len(q_hashes)),
+            jnp.asarray(xv), jnp.asarray(xl))
+        return np.asarray(d_hat) / max(q_len, 1)
+
+    # -- planner plumbing --
+    def _sketch_pack(self) -> PackedSketches:
+        return self.sketches
+
+    def _plan_queries(self, queries):
+        hash_rows = [self._query_sketch(q) for q in queries]
+        bit_rows = [np.zeros(0, np.int64)] * len(queries)
+        sizes = np.asarray([len(q) for q in queries], np.int64)
+        return (hash_rows, sizes), hash_rows, bit_rows, sizes
+
+    def _pair_score_fn(self, qp):
+        hash_rows, sizes = qp
+
+        def score(cand_rec, cand_q):
+            out = np.zeros(len(cand_rec), np.float32)
+            for g in np.unique(cand_q):
+                sel = np.nonzero(cand_q == g)[0]
+                out[sel] = self._scores_rows(
+                    hash_rows[g], int(sizes[g]), rows=cand_rec[sel])
+            return out
+
+        return score
+
+    def _dense_batch_query(self, queries, threshold,
+                           qp=None) -> list[np.ndarray]:
+        from repro.planner.prune import threshold_hits_packed
+
+        if qp is not None:                    # query sketches already hashed
+            hash_rows, sizes = qp
+            cols = [self._scores_rows(h, int(n), rows=None)
+                    for h, n in zip(hash_rows, sizes)]
+        else:
+            cols = [self._scores(q) for q in queries]
+        s = np.stack(cols, axis=-1) if cols else \
+            np.zeros((self.num_records, 0), np.float32)
+        return threshold_hits_packed(s, threshold)
 
     def save(self, path: str) -> None:
         np.savez_compressed(path, engine="kmv", seed=np.int64(self.seed),

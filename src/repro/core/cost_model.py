@@ -121,6 +121,36 @@ def choose_buffer_size(
 
 
 # ---------------------------------------------------------------------------
+# Query-path cost model (planner): dense sweep vs postings-pruned verify.
+#
+# Relative units — one unit ≈ scoring one (record-slot × query) pair in
+# the vectorized sweep. Host-side posting merges touch scattered memory
+# and the ragged verify pays gather overhead, so their per-item weights
+# are calibrated above 1; each path also carries a fixed dispatch cost
+# per query batch. The constants only need to rank the two paths, not
+# predict wall-clock.
+# ---------------------------------------------------------------------------
+
+DENSE_COST_PER_SLOT = 1.0     # one record-slot scored for one query
+PRUNE_COST_PER_HIT = 6.0      # one posting entry merged on host
+PRUNE_COST_PER_CAND_SLOT = 3.0  # one gather-scored candidate slot
+PRUNE_FIXED_PER_QUERY = 2048.0  # postings probe + ragged dispatch
+
+
+def dense_sweep_cost(m: int, capacity: int, gq: int) -> float:
+    """Cost of scoring the full [m, Gq] matrix (one index sweep)."""
+    return DENSE_COST_PER_SLOT * float(m) * float(max(capacity, 1)) * max(gq, 1)
+
+
+def pruned_path_cost(hits: int, capacity: int, gq: int) -> float:
+    """Cost of merge + ragged verify; ``hits`` = posting entries touched
+    by the batch's query hashes/bits (upper-bounds the candidate count)."""
+    return (PRUNE_FIXED_PER_QUERY * max(gq, 1)
+            + PRUNE_COST_PER_HIT * float(hits)
+            + PRUNE_COST_PER_CAND_SLOT * float(hits) * float(max(capacity, 1)))
+
+
+# ---------------------------------------------------------------------------
 # Power-law-parameterized wrapper: f(r, α1, α2, b)   (Fig. 5 / §IV-C6)
 # ---------------------------------------------------------------------------
 

@@ -206,12 +206,15 @@ def _align_buf_widths(q, x):
     return (widen(q) if wq < w else q), (widen(x) if wx < w else x)
 
 
-def containment_matrix(q, x, backend: str = "jnp") -> np.ndarray:
+def containment_matrix(q, x, backend: str = "jnp", *, as_numpy: bool = True):
     """Ĉ(Q→X) scores f32[m, Gq]: every query row of ``q`` against every
     record row of ``x`` — the single scoring door all layers share.
 
     ``backend``: "numpy" (host, dependency-free), "jnp" (XLA), or
     "pallas" (fused TPU kernel; interpret mode off-TPU).
+    ``as_numpy=False`` keeps device backends' output on device so
+    consumers (e.g. batch_query's packed thresholding) can compare
+    there instead of fetching the full float matrix.
     """
     backend = normalize_backend(backend)
     q, x = _align_buf_widths(q, x)
@@ -227,9 +230,10 @@ def containment_matrix(q, x, backend: str = "jnp") -> np.ndarray:
     if backend == "pallas":
         from repro.kernels.ops import score_index
 
-        return np.asarray(score_index(
+        out = score_index(
             x.values, x.thresh, x.buf,
-            q.values, q.thresh, q.buf, q.sizes))
+            q.values, q.thresh, q.buf, q.sizes)
+        return np.asarray(out) if as_numpy else out
 
     def one_query(qv, qt, qb, qs):
         d_hat, _, _ = gkmv_pair_estimate(
@@ -243,7 +247,7 @@ def containment_matrix(q, x, backend: str = "jnp") -> np.ndarray:
     out = jax.vmap(one_query)(
         jnp.asarray(q.values, jnp.uint32), jnp.asarray(q.thresh, jnp.uint32),
         jnp.asarray(q.buf, jnp.uint32), jnp.asarray(q.sizes, jnp.int32))
-    return np.asarray(out.T)
+    return np.asarray(out.T) if as_numpy else out.T
 
 
 # ---------------------------------------------------------------------------

@@ -57,15 +57,21 @@ def evaluate_engine(
     alpha: float = 1.0,
     seed: int = 0,
 ) -> dict:
-    """Mean F_α / precision / recall of an engine over a query workload."""
+    """Mean F_α / precision / recall of an engine over a query workload.
+
+    One ``batch_query`` call per side — sketch engines answer the whole
+    workload in a single planned sweep instead of paying per-query
+    dispatch (sketching, device round-trips) ``len(queries)`` times.
+    """
     from repro import api
 
     truth_idx = api.as_index("exact", exact_index)
     idx = api.as_index(engine, index, seed=seed)
+    queries = [np.asarray(q) for q in queries]
+    truths = truth_idx.batch_query(queries, threshold)
+    gots = idx.batch_query(queries, threshold)
     fs, ps, rs = [], [], []
-    for q in queries:
-        truth = truth_idx.query(q, threshold)
-        got = idx.query(q, threshold)
+    for truth, got in zip(truths, gots):
         fs.append(f_score(truth, got, alpha=alpha))
         p, r = precision_recall(truth, got)
         ps.append(p)

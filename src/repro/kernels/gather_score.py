@@ -1,0 +1,306 @@
+"""Pallas TPU kernel: ragged candidate gather-scoring (planner verify step).
+
+The dense kernel (gbkmv_score.py) sweeps every record row for every
+query. After postings pruning the surviving work is a *ragged* list of
+(record, query) pairs — a few hits per query at selective thresholds —
+so the verify step is a gather problem, not a sweep problem:
+
+    cand_rec i32[P]   record row to score           (scalar-prefetched)
+    cand_q   i32[P]   query row it belongs to       (scalar-prefetched)
+    out      f32[P]   Ĉ(Q_{cand_q[p]} → X_{cand_rec[p]})
+
+Both gathers happen *in the kernel* via scalar-prefetch BlockSpec index
+maps — the sketch matrices stay in HBM and only the addressed rows are
+DMA'd to VMEM, so the pruned path never materializes a gathered copy of
+the index. Per grid step the kernel scores one pair with exactly the
+dense kernel's math (buffer popcount + τ_pair counts + Eq. 25 tail
+estimator), reduced along the row (the segment here is one sketch row).
+
+``score_pairs`` is the public door with the repo-standard ``backend=``
+switch: "pallas" (this kernel, interpret mode off-TPU), "jnp" (XLA
+gather + vectorized pair math), "numpy" (host oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hashing import PAD, TWO32
+
+# Lane-aligned membership chunk (matches gbkmv_score.QCHUNK).
+QCHUNK = 128
+
+
+def _pair_kernel(
+    cand_rec_ref,   # i32[P]   (scalar prefetch)
+    cand_q_ref,     # i32[P]   (scalar prefetch)
+    x_values_ref,   # u32[1, C]   gathered record row
+    x_thresh_ref,   # u32[1, 1]
+    x_buf_ref,      # u32[1, W]
+    q_values_ref,   # u32[1, Cq]  gathered query row
+    q_thresh_ref,   # u32[1, 1]
+    q_buf_ref,      # u32[1, W]
+    q_sizes_ref,    # i32[1, 1]
+    out_ref,        # f32[1, 1]
+):
+    xv = x_values_ref[...]                    # [1, C]
+    xt = x_thresh_ref[...][:, 0]              # [1]
+    qv = q_values_ref[0, :]                   # [Cq]
+    qt = q_thresh_ref[0, 0]
+    qs = q_sizes_ref[0, 0]
+    _, c = xv.shape
+    cq = qv.shape[0]
+
+    tau = jnp.minimum(xt, qt)                 # [1]
+    live_x = xv <= tau[:, None]               # [1, C]
+    nx = jnp.sum(live_x.astype(jnp.int32), axis=-1)
+    live_q = qv[None, :] <= tau[:, None]      # [1, Cq]
+    nq = jnp.sum(live_q.astype(jnp.int32), axis=-1)
+
+    def mem_body(i, member):
+        chunk = lax.dynamic_slice(qv, (i * QCHUNK,), (QCHUNK,))
+        hit = jnp.any(xv[:, :, None] == chunk[None, None, :], axis=-1)
+        return member | hit
+
+    member = lax.fori_loop(
+        0, cq // QCHUNK, mem_body, jnp.zeros((1, c), jnp.bool_)
+    )
+    kcap = jnp.sum((member & live_x).astype(jnp.int32), axis=-1)
+    k = nx + nq - kcap
+
+    ux = jnp.max(jnp.where(live_x, xv, jnp.uint32(0)), axis=-1)
+    uq = jnp.max(jnp.where(live_q, qv[None, :], jnp.uint32(0)), axis=-1)
+    u = jnp.maximum(ux, uq)
+    u_unit = (u.astype(jnp.float32) + 1.0) / TWO32
+
+    kf = k.astype(jnp.float32)
+    d_hat = (kcap.astype(jnp.float32) / jnp.maximum(kf, 1.0)) * (
+        (kf - 1.0) / jnp.maximum(u_unit, 1e-30)
+    )
+    d_hat = jnp.where((k >= 2) & (kcap >= 1), d_hat,
+                      jnp.where(kcap >= 1, kcap.astype(jnp.float32), 0.0))
+
+    o1 = jnp.sum(lax.population_count(x_buf_ref[...] & q_buf_ref[...]),
+                 axis=-1)
+    out_ref[0, 0] = ((o1.astype(jnp.float32) + d_hat) / jnp.maximum(
+        qs.astype(jnp.float32), 1.0))[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_score_pallas(
+    x_values, x_thresh, x_buf,
+    q_values, q_thresh, q_buf, q_sizes,
+    cand_rec, cand_q,
+    *, interpret: bool = False,
+):
+    """One grid step per candidate pair; rows addressed via prefetch."""
+    _, c = x_values.shape
+    _, cq = q_values.shape
+    w = x_buf.shape[1]
+    p = cand_rec.shape[0]
+    assert cq % QCHUNK == 0 and w >= 1 and w == q_buf.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, rec, q: (rec[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, rec, q: (rec[i], 0)),
+            pl.BlockSpec((1, w), lambda i, rec, q: (rec[i], 0)),
+            pl.BlockSpec((1, cq), lambda i, rec, q: (q[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, rec, q: (q[i], 0)),
+            pl.BlockSpec((1, w), lambda i, rec, q: (q[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, rec, q: (q[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, rec, q: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _pair_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        interpret=interpret,
+    )(cand_rec, cand_q,
+      x_values, x_thresh[:, None], x_buf,
+      q_values, q_thresh[:, None], q_buf, q_sizes[:, None])
+    return out[:, 0]
+
+
+@jax.jit
+def _gather_score_jnp(
+    x_values, x_thresh, x_buf,
+    q_values, q_thresh, q_buf, q_sizes,
+    cand_rec, cand_q,
+):
+    """XLA path: gather both sides, then vectorized per-pair math.
+
+    Same op sequence per row as estimators.gkmv_pair_estimate +
+    buffer_intersection, broadcast per-pair instead of one-query-vs-all.
+    """
+    xv = x_values[cand_rec]                   # [P, C]
+    xt = x_thresh[cand_rec]                   # [P]
+    xb = x_buf[cand_rec]                      # [P, W]
+    qv = q_values[cand_q]                     # [P, Cq]
+    qt = q_thresh[cand_q]
+    qb = q_buf[cand_q]
+    qs = q_sizes[cand_q]
+
+    tau = jnp.minimum(xt, qt)                               # [P]
+    nq = jnp.sum(qv <= tau[:, None], axis=-1).astype(jnp.int32)
+    nx = jnp.sum(xv <= tau[:, None], axis=-1).astype(jnp.int32)
+    live = xv <= tau[:, None]
+    member = jnp.any(xv[:, :, None] == qv[:, None, :], axis=-1)
+    kcap = jnp.sum(live & member, axis=-1).astype(jnp.int32)
+    k = nq + nx - kcap
+
+    def last_live(vals, n):
+        idx = jnp.maximum(n - 1, 0)
+        v = jnp.take_along_axis(vals, idx[:, None].astype(jnp.int32),
+                                axis=-1)[:, 0]
+        return jnp.where(n > 0, v, jnp.uint32(0))
+
+    u = jnp.maximum(last_live(qv, nq), last_live(xv, nx))
+    u_unit = (u.astype(jnp.float32) + 1.0) / TWO32
+
+    valid = (k >= 2) & (kcap >= 1)
+    d_hat = jnp.where(
+        valid,
+        (kcap.astype(jnp.float32) / jnp.maximum(k, 1).astype(jnp.float32))
+        * ((k.astype(jnp.float32) - 1.0) / jnp.maximum(u_unit, 1e-30)),
+        jnp.where(kcap >= 1, kcap.astype(jnp.float32), 0.0),
+    )
+    if xb.shape[-1]:
+        o1 = jnp.sum(lax.population_count(xb & qb), axis=-1).astype(jnp.int32)
+    else:
+        o1 = jnp.zeros(xv.shape[0], dtype=jnp.int32)
+    return (o1.astype(jnp.float32) + d_hat) / jnp.maximum(
+        qs.astype(jnp.float32), 1.0)
+
+
+def _gather_score_np(
+    x_values, x_thresh, x_buf,
+    q_values, q_thresh, q_buf, q_sizes,
+    cand_rec, cand_q,
+):
+    """Host twin of the jnp path (float32 arithmetic, estimators.py idiom)."""
+    from repro.core.estimators import _popcount_np
+
+    xv = x_values[cand_rec].astype(np.uint32)
+    xt = x_thresh[cand_rec].astype(np.uint32)
+    xb = x_buf[cand_rec]
+    qv = q_values[cand_q].astype(np.uint32)
+    qt = q_thresh[cand_q].astype(np.uint32)
+    qb = q_buf[cand_q]
+    qs = q_sizes[cand_q]
+
+    tau = np.minimum(xt, qt)
+    nq = (qv <= tau[:, None]).sum(-1).astype(np.int32)
+    nx = (xv <= tau[:, None]).sum(-1).astype(np.int32)
+    live = xv <= tau[:, None]
+    member = (xv[:, :, None] == qv[:, None, :]).any(-1)
+    kcap = (live & member).sum(-1).astype(np.int32)
+    k = nq + nx - kcap
+
+    p = xv.shape[0]
+    uq = qv[np.arange(p), np.maximum(nq - 1, 0)]
+    uq = np.where(nq > 0, uq, np.uint32(0))
+    ux = xv[np.arange(p), np.maximum(nx - 1, 0)]
+    ux = np.where(nx > 0, ux, np.uint32(0))
+    u = np.maximum(uq, ux)
+    u_unit = (u.astype(np.float32) + np.float32(1.0)) / np.float32(TWO32)
+
+    kf = k.astype(np.float32)
+    cf = kcap.astype(np.float32)
+    valid = (k >= 2) & (kcap >= 1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        d_hat = np.where(
+            valid,
+            (cf / np.maximum(kf, np.float32(1.0)))
+            * ((kf - np.float32(1.0)) / np.maximum(u_unit, np.float32(1e-30))),
+            np.where(kcap >= 1, cf, np.float32(0.0)),
+        ).astype(np.float32)
+
+    if xb.shape[-1]:
+        o1 = _popcount_np(xb & qb)
+    else:
+        o1 = np.zeros(p, dtype=np.int32)
+    qsf = np.maximum(qs.astype(np.float32), np.float32(1.0))
+    return ((o1.astype(np.float32) + d_hat) / qsf).astype(np.float32)
+
+
+def _pad_pow2(n: int, lo: int = 8) -> int:
+    """Bucket P so jit caches a handful of shapes, not one per batch."""
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def score_pairs(
+    x, q, cand_rec, cand_q, *, backend: str = "jnp",
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """f32[P] pair scores for a ragged candidate list.
+
+    ``x`` / ``q`` are PackedSketches (record index / query batch pack,
+    buffer widths already aligned). ``cand_rec[p]`` indexes x rows,
+    ``cand_q[p]`` indexes q rows. Device paths pad P to a power-of-two
+    bucket (extra pairs repeat pair 0 and are sliced off) so steady-state
+    serving reuses a handful of compiled shapes.
+    """
+    from repro.core.estimators import normalize_backend
+
+    backend = normalize_backend(backend)
+    p = len(cand_rec)
+    if p == 0:
+        return np.zeros(0, dtype=np.float32)
+    cand_rec = np.asarray(cand_rec, dtype=np.int32)
+    cand_q = np.asarray(cand_q, dtype=np.int32)
+
+    if backend == "numpy":
+        return _gather_score_np(
+            np.asarray(x.values), np.asarray(x.thresh), np.asarray(x.buf),
+            np.asarray(q.values), np.asarray(q.thresh), np.asarray(q.buf),
+            np.asarray(q.sizes), cand_rec, cand_q)
+
+    pp = _pad_pow2(p)
+    if pp != p:
+        cand_rec = np.concatenate(
+            [cand_rec, np.zeros(pp - p, np.int32) + cand_rec[0]])
+        cand_q = np.concatenate(
+            [cand_q, np.zeros(pp - p, np.int32) + cand_q[0]])
+
+    xv = jnp.asarray(x.values, jnp.uint32)
+    xt = jnp.asarray(x.thresh, jnp.uint32)
+    xb = jnp.asarray(x.buf, jnp.uint32)
+    qv = jnp.asarray(q.values, jnp.uint32)
+    qt = jnp.asarray(q.thresh, jnp.uint32)
+    qb = jnp.asarray(q.buf, jnp.uint32)
+    qs = jnp.asarray(q.sizes, jnp.int32)
+
+    if backend == "pallas":
+        from repro.kernels.ops import _on_tpu, _pad_axis
+
+        if interpret is None:
+            interpret = not _on_tpu()
+        qv = _pad_axis(qv, 1, QCHUNK, PAD)
+        w = max(xb.shape[1], qb.shape[1], 1)
+        xb = _pad_axis(xb if xb.shape[1] else
+                       jnp.zeros((xb.shape[0], 1), jnp.uint32), 1, w, 0)
+        qb = _pad_axis(qb if qb.shape[1] else
+                       jnp.zeros((qb.shape[0], 1), jnp.uint32), 1, w, 0)
+        out = _gather_score_pallas(
+            xv, xt, xb, qv, qt, qb, qs,
+            jnp.asarray(cand_rec), jnp.asarray(cand_q),
+            interpret=interpret)
+    else:
+        out = _gather_score_jnp(
+            xv, xt, xb, qv, qt, qb, qs,
+            jnp.asarray(cand_rec), jnp.asarray(cand_q))
+    return np.asarray(out[:p])

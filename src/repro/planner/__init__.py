@@ -1,0 +1,48 @@
+"""Candidate-pruning query planner: filter-and-verify over inverted
+postings so selective queries stop sweeping the whole index.
+
+    postings.py  CSR hash/buffer-bit postings, incremental under insert
+    prune.py     threshold-aware candidate generation + packed hits
+    plan.py      per-batch dense-vs-pruned cost decision + executor
+
+The ragged verify kernel lives with the other Pallas kernels in
+:mod:`repro.kernels.gather_score`. ``repro.api`` threads ``plan=``
+("auto" | "dense" | "pruned") through every sketch engine's
+``query``/``batch_query``.
+"""
+
+from repro.planner.plan import (
+    PLAN_MODES,
+    QueryPlan,
+    choose_plan,
+    normalize_plan,
+    pruned_batch,
+)
+from repro.planner.postings import (
+    PostingsIndex,
+    build_postings,
+    postings_equal,
+    update_postings,
+)
+from repro.planner.prune import (
+    CandidateSet,
+    candidates_for,
+    f32_threshold,
+    threshold_hits_packed,
+)
+
+__all__ = [
+    "PLAN_MODES",
+    "QueryPlan",
+    "choose_plan",
+    "normalize_plan",
+    "pruned_batch",
+    "PostingsIndex",
+    "build_postings",
+    "postings_equal",
+    "update_postings",
+    "CandidateSet",
+    "candidates_for",
+    "f32_threshold",
+    "threshold_hits_packed",
+]

@@ -1,0 +1,188 @@
+"""Per-batch query planning: dense sweep vs postings-pruned verify.
+
+``choose_plan`` probes the postings (searchsorted only — no merge) for
+the batch's query hashes, feeds the touched-entry count into the
+core/cost_model.py query-path costs, and picks the cheaper path.
+``plan="dense"``/``"pruned"`` force a path; ``"auto"`` is the default
+everywhere. Two hard guards keep forced/auto pruning sound:
+
+* thresholds ≤ 0 always run dense — every record trivially clears t, so
+  a filter built on "shares at least one hash/bit" would drop records
+  the dense sweep returns;
+* ``topk`` always runs dense — it needs the full ranking, not a
+  threshold cut (the cost model never routes it through the planner).
+
+``pruned_batch`` is the shared execution skeleton: generate candidates
+per query, score the ragged union in ONE backend call (the engines pass
+a closure over kernels/gather_score.py or their estimator), and cut at
+the float32-exact threshold so results match the dense sweep bit for
+bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.planner import prune
+from repro.planner.postings import PostingsIndex
+
+PLAN_MODES = ("auto", "dense", "pruned")
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """One batch's routing decision (attached to indexes as .last_plan)."""
+
+    path: str              # "dense" | "pruned"
+    est_dense: float       # cost-model units
+    est_pruned: float
+    hits: int              # posting entries the batch's hashes/bits touch
+    reason: str
+
+
+def normalize_plan(plan: str | None) -> str:
+    plan = "auto" if plan is None else plan
+    if plan not in PLAN_MODES:
+        raise ValueError(f"plan must be one of {PLAN_MODES}, got {plan!r}")
+    return plan
+
+
+def gbkmv_plan_queries(core, queries):
+    """Sketch a query batch and unpack the planner's per-query inputs.
+
+    Shared by the host GB-KMV index and ShardedIndex (one definition, so
+    the two planners can't drift). Returns (query pack, retained-hash
+    rows, buffer-bit rows, query sizes).
+    """
+    from repro.sketchindex.distributed import batch_queries
+
+    qp = batch_queries(core, queries)
+    vals, lens = np.asarray(qp.values), np.asarray(qp.lengths)
+    bufs = np.asarray(qp.buf)
+    hash_rows = [vals[g, : lens[g]] for g in range(len(queries))]
+    bit_rows = [prune.query_bits(bufs[g]) for g in range(len(queries))]
+    return qp, hash_rows, bit_rows, np.asarray(qp.sizes)
+
+
+def probe_hits(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    q_hash_rows: Sequence[np.ndarray],
+    q_bit_rows: Sequence[np.ndarray],
+) -> int:
+    """Posting entries a merge would touch — searchsorted, no merge.
+
+    ``posts`` may be a list (one per shard); hits sum over the mesh.
+    """
+    if isinstance(posts, PostingsIndex):
+        posts = [posts]
+    hits = 0
+    for post in posts:
+        bl = np.diff(post.buf_offsets)
+        for qh, qb in zip(q_hash_rows, q_bit_rows):
+            hits += int(post.posting_lengths(qh).sum())
+            qb = np.asarray(qb, dtype=np.int64)
+            hits += int(bl[qb[qb < len(bl)]].sum())
+    return hits
+
+
+def choose_plan(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    q_hash_rows: Sequence[np.ndarray],
+    q_bit_rows: Sequence[np.ndarray],
+    threshold: float,
+    m: int,
+    capacity: int,
+    plan: str = "auto",
+) -> QueryPlan:
+    gq = len(q_hash_rows)
+    plan = normalize_plan(plan)
+    if float(threshold) <= 0.0:
+        # Every record passes t ≤ 0; postings can't see zero-overlap pairs.
+        return QueryPlan("dense", 0.0, np.inf, 0,
+                         "threshold <= 0: pruning unsound, forced dense")
+    hits = probe_hits(posts, q_hash_rows, q_bit_rows)
+    est_dense = cost_model.dense_sweep_cost(m, capacity, gq)
+    est_pruned = cost_model.pruned_path_cost(hits, capacity, gq)
+    if plan == "dense":
+        return QueryPlan("dense", est_dense, est_pruned, hits, "forced")
+    if plan == "pruned":
+        return QueryPlan("pruned", est_dense, est_pruned, hits, "forced")
+    path = "pruned" if est_pruned < est_dense else "dense"
+    return QueryPlan(path, est_dense, est_pruned, hits,
+                     f"auto: dense≈{est_dense:.3g} vs pruned≈{est_pruned:.3g}")
+
+
+def merged_candidates(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    row_offsets: Sequence[int] | None = None,
+) -> Callable[..., prune.CandidateSet]:
+    """Candidate generator over one postings index or a sharded list.
+
+    ``row_offsets[s]`` maps shard-local record ids to global ids; shard
+    ranges partition the records, so the cross-mesh union is a
+    concatenation that stays sorted.
+    """
+    if isinstance(posts, PostingsIndex):
+        posts = [posts]
+    if row_offsets is None:
+        row_offsets = [0] * len(posts)
+
+    def gen(qh, qb, t, qs) -> prune.CandidateSet:
+        parts = [prune.candidates_for(p, qh, qb, t, qs) for p in posts]
+        return prune.CandidateSet(
+            rec_ids=np.concatenate(
+                [c.rec_ids + off for c, off in zip(parts, row_offsets)]),
+            counts=np.concatenate([c.counts for c in parts]),
+            o1=np.concatenate([c.o1 for c in parts]),
+            hits=sum(c.hits for c in parts),
+            pruned=sum(c.pruned for c in parts),
+        )
+
+    return gen
+
+
+def pruned_batch(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    q_hash_rows: Sequence[np.ndarray],
+    q_bit_rows: Sequence[np.ndarray],
+    q_sizes: Sequence[int],
+    thresholds,
+    score_fn: Callable[[np.ndarray, np.ndarray], np.ndarray],
+    row_offsets: Sequence[int] | None = None,
+) -> tuple[list[np.ndarray], list[prune.CandidateSet]]:
+    """Filter-and-verify for one query batch.
+
+    ``score_fn(cand_rec i32[P], cand_q i32[P]) -> f32[P]`` scores the
+    flattened ragged candidate list with the engine's own estimator (one
+    backend dispatch for the whole batch). Returns (per-query hit ids,
+    per-query candidate sets) — ids are bit-identical to the dense
+    sweep's ``np.nonzero(scores >= t)`` for each query.
+    """
+    gq = len(q_hash_rows)
+    thr = np.broadcast_to(np.asarray(thresholds, np.float64), (gq,))
+    gen = merged_candidates(posts, row_offsets)
+    cands = [
+        gen(qh, qb, float(t), int(qs))
+        for qh, qb, t, qs in zip(q_hash_rows, q_bit_rows, thr, q_sizes)
+    ]
+    lens = [len(c.rec_ids) for c in cands]
+    if sum(lens) == 0:
+        return [np.zeros(0, dtype=np.int64) for _ in range(gq)], cands
+
+    cand_rec = np.concatenate(
+        [c.rec_ids for c in cands]).astype(np.int32)
+    cand_q = np.repeat(np.arange(gq, dtype=np.int32), lens)
+    scores = np.asarray(score_fn(cand_rec, cand_q), dtype=np.float32)
+
+    out = []
+    pos = 0
+    thr32 = prune.f32_threshold(thr)
+    for g, c in enumerate(cands):
+        s = scores[pos : pos + lens[g]]
+        pos += lens[g]
+        out.append(c.rec_ids[s >= thr32[g]].astype(np.int64))
+    return out, cands

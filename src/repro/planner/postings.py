@@ -1,0 +1,196 @@
+"""CSR-packed inverted index over retained sketch hashes + buffer bits.
+
+The filter half of the planner's filter-and-verify pipeline: a record X
+can share tail mass with Q only through hash values *both* sketches
+retained, and buffer mass only through frozen top-r bits both have set —
+so postings over exactly those two keyspaces enumerate every record with
+a non-zero estimated intersection (prune.py turns the match counts into
+a sound containment upper bound).
+
+Layout (all host numpy, built once from a :class:`PackedSketches`):
+
+    keys       uint32[U]    distinct retained hash values, ascending
+    offsets    int64[U+1]   CSR row pointers into rec_ids
+    rec_ids    int32[nnz]   record ids per key, ascending within a key
+    buf_offsets int64[R+1]  one row per frozen buffer bit (R = W·32)
+    buf_rec_ids int32[bnnz] record ids with that bit set, ascending
+
+Incremental maintenance under ``insert`` (sketchindex/dynamic.py): the
+fixed budget only ever *lowers* τ, and after an insert every stored row
+holds exactly its old hashes ≤ τ' — so maintenance is
+
+    deletion:  drop every posting with key > τ'. Keys are sorted by hash
+               value, so this is a prefix truncation, O(1) + one slice.
+    append:    merge the new rows' (hash, record) pairs into the CSR
+               (one np.insert pass — new record ids exceed all old ids,
+               so within-key ascending order is preserved for free); the
+               frozen top-r buffer never deletes, new rows append at
+               each bit's segment end.
+
+No raw-data access and no re-hashing of old rows, mirroring the dynamic
+index's own τ-retightening contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.sketches import PackedSketches
+
+
+@dataclasses.dataclass
+class PostingsIndex:
+    """Inverted postings over one engine's packed sketches."""
+
+    keys: np.ndarray          # uint32[U]
+    offsets: np.ndarray       # int64[U+1]
+    rec_ids: np.ndarray       # int32[nnz]
+    buf_offsets: np.ndarray   # int64[R+1]
+    buf_rec_ids: np.ndarray   # int32[bnnz]
+    num_records: int
+    tau: np.uint32            # max retained key at build/update time
+
+    @property
+    def nnz(self) -> int:
+        return len(self.rec_ids)
+
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in (
+            self.keys, self.offsets, self.rec_ids,
+            self.buf_offsets, self.buf_rec_ids))
+
+    def posting_lengths(self, hashes: np.ndarray) -> np.ndarray:
+        """int64[n] — posting-list length per query hash (0 when absent).
+
+        One searchsorted probe; used by the plan cost model to estimate
+        merge work *without* materializing the merge.
+        """
+        h = np.asarray(hashes, dtype=np.uint32)
+        pos = np.searchsorted(self.keys, h)
+        ok = pos < len(self.keys)
+        hit = np.zeros(len(h), dtype=bool)
+        hit[ok] = self.keys[pos[ok]] == h[ok]
+        out = np.zeros(len(h), dtype=np.int64)
+        p = pos[hit]
+        out[hit] = self.offsets[p + 1] - self.offsets[p]
+        return out
+
+
+def _bit_matrix(buf: np.ndarray) -> np.ndarray:
+    """bool[m, W*32] — bit j of word j//32 at position j%32 (sketches.py)."""
+    buf = np.asarray(buf, dtype=np.uint32)
+    m, w = buf.shape
+    if w == 0:
+        return np.zeros((m, 0), dtype=bool)
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (buf[:, :, None] >> shifts[None, None, :]) & np.uint32(1)
+    return bits.reshape(m, w * 32).astype(bool)
+
+
+def _row_pairs(s: PackedSketches, rows: slice) -> tuple[np.ndarray, np.ndarray]:
+    """Flat (hash, record) pairs over ``rows`` of the packed values."""
+    vals = np.asarray(s.values)[rows]
+    lens = np.asarray(s.lengths)[rows]
+    n, c = vals.shape
+    live = np.arange(c)[None, :] < lens[:, None]
+    h = vals[live]
+    start = rows.start or 0
+    rec = np.broadcast_to(np.arange(start, start + n, dtype=np.int32)[:, None],
+                          (n, c))[live]
+    return h.astype(np.uint32), rec
+
+
+def _csr_from_pairs(h: np.ndarray, rec: np.ndarray):
+    """Sort pairs by (hash, record) and group into (keys, offsets, rec_ids)."""
+    order = np.lexsort((rec, h))
+    h, rec = h[order], rec[order]
+    keys, starts = np.unique(h, return_index=True)
+    offsets = np.concatenate([starts, [len(h)]]).astype(np.int64)
+    return keys, offsets, rec.astype(np.int32)
+
+
+def _buf_csr(buf: np.ndarray, row_offset: int = 0):
+    """(offsets int64[R+1], rec_ids int32) from a bitmap block."""
+    bits = _bit_matrix(buf)
+    m, r = bits.shape
+    if r == 0:
+        return np.zeros(1, dtype=np.int64), np.zeros(0, dtype=np.int32)
+    bit_idx, recs = np.nonzero(bits.T)       # sorted by bit, then record
+    counts = np.bincount(bit_idx, minlength=r)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return offsets, (recs + row_offset).astype(np.int32)
+
+
+def build_postings(sketches: PackedSketches) -> PostingsIndex:
+    """Build hash + buffer postings from a packed index in one pass."""
+    m = sketches.num_records
+    h, rec = _row_pairs(sketches, slice(0, m))
+    keys, offsets, rec_ids = _csr_from_pairs(h, rec)
+    buf_offsets, buf_rec_ids = _buf_csr(np.asarray(sketches.buf))
+    tau = keys[-1] if len(keys) else np.uint32(0)
+    return PostingsIndex(
+        keys=keys, offsets=offsets, rec_ids=rec_ids,
+        buf_offsets=buf_offsets, buf_rec_ids=buf_rec_ids,
+        num_records=m, tau=np.uint32(tau))
+
+
+def update_postings(
+    post: PostingsIndex, sketches: PackedSketches, tau: np.uint32
+) -> PostingsIndex:
+    """Maintain postings across one ``insert`` (deletion + append only).
+
+    ``sketches`` is the repacked index AFTER the insert: rows
+    ``[0, post.num_records)`` are the old records refiltered at the new
+    global threshold ``tau`` (τ only decreases), rows beyond are new.
+    """
+    m_new = sketches.num_records
+    m_old = post.num_records
+
+    # -- deletion: τ-retighten = prefix truncation of the sorted keyspace.
+    cut = int(np.searchsorted(post.keys, np.uint32(tau), side="right"))
+    keys = post.keys[:cut]
+    offsets = post.offsets[: cut + 1]
+    rec_ids = post.rec_ids[: offsets[-1]]
+
+    # -- append: merge the new rows' pairs into the truncated CSR.
+    h_new, rec_new = _row_pairs(sketches, slice(m_old, m_new))
+    if len(h_new):
+        order = np.lexsort((rec_new, h_new))
+        h_new, rec_new = h_new[order], rec_new[order]
+        flat_h = np.repeat(keys, np.diff(offsets))
+        # side="right": new pairs land after equal old keys; new record
+        # ids all exceed old ids, so within-key order stays ascending.
+        at = np.searchsorted(flat_h, h_new, side="right")
+        flat_h = np.insert(flat_h, at, h_new)
+        rec_ids = np.insert(rec_ids, at, rec_new)
+        keys, starts = np.unique(flat_h, return_index=True)
+        offsets = np.concatenate([starts, [len(flat_h)]]).astype(np.int64)
+
+    # -- buffer: frozen top-r set, new rows append at each segment end.
+    buf_offsets, buf_rec_ids = post.buf_offsets, post.buf_rec_ids
+    w = np.asarray(sketches.buf).shape[1]
+    if w:
+        new_off, new_recs = _buf_csr(np.asarray(sketches.buf)[m_old:],
+                                     row_offset=m_old)
+        counts = np.diff(new_off)
+        at = np.repeat(buf_offsets[1:], counts)
+        buf_rec_ids = np.insert(buf_rec_ids, at, new_recs)
+        buf_offsets = buf_offsets + np.concatenate(
+            [[0], np.cumsum(counts)]).astype(np.int64)
+
+    return PostingsIndex(
+        keys=keys, offsets=offsets, rec_ids=rec_ids.astype(np.int32),
+        buf_offsets=buf_offsets, buf_rec_ids=buf_rec_ids,
+        num_records=m_new, tau=np.uint32(tau))
+
+
+def postings_equal(a: PostingsIndex, b: PostingsIndex) -> bool:
+    """Structural equality (tests: incremental update == fresh rebuild)."""
+    return (a.num_records == b.num_records
+            and np.array_equal(a.keys, b.keys)
+            and np.array_equal(a.offsets, b.offsets)
+            and np.array_equal(a.rec_ids, b.rec_ids)
+            and np.array_equal(a.buf_offsets, b.buf_offsets)
+            and np.array_equal(a.buf_rec_ids, b.buf_rec_ids))

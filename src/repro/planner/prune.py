@@ -1,0 +1,189 @@
+"""Threshold-aware candidate generation (the planner's filter step).
+
+The paper's set-intersection advantage, made operational: a record X can
+have estimated containment Ĉ(Q→X) = (o1 + D̂∩)/|Q| ≥ t only if the pair
+shares buffer bits (o1 > 0) or retained tail hashes (K∩ > 0) — both
+enumerable from the postings. For each candidate the merge yields
+
+    c  = |retained(Q) ∩ retained(X)|   (== K∩ for G-KMV/GB-KMV: a shared
+         value is ≤ both effective thresholds, hence ≤ τ_pair; for plain
+         KMV it upper-bounds the in-top-k K∩)
+    o1 = popcount(buf_Q & buf_X)       (exact, frozen top-r counts —
+                                        Eq. 14's exact head folded in)
+
+and the tail estimator is bounded *from the query's own sketch*: the c
+shared values are c distinct retained query hashes, so the pair's
+U_(k) ≥ h_Q[c-1] (the c-th smallest retained query hash), and with
+(k-1)/k < 1,
+
+    D̂∩  =  K∩/k · (k-1)/U_(k)  <  max_{1≤j≤c} j / unit(h_Q[j-1])
+
+(prefix max because plain KMV only guarantees K∩ ≤ c). Records whose
+bound (o1 + bound_tail(c))/|Q| falls below t are pruned — provably below
+threshold under the exact same estimator the dense sweep applies, so the
+verify step returns bit-identical candidate sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hashing import TWO32
+from repro.planner.postings import PostingsIndex
+
+# Headroom multiplier on the (float64) containment bound: the dense
+# estimator computes in float32, whose rounding can land a handful of
+# ulps ABOVE the exact value (≲ 10·2⁻²³ relative across the op chain) —
+# e.g. o1=1, |Q|=3 scores fl32(1/3) > 1/3. The slack keeps the bound
+# above every float32 score the dense sweep could produce, including
+# buffer-dominated ones, so the filter never drops a dense hit.
+_BOUND_SLACK = 1.0 + 1e-5
+
+
+@dataclasses.dataclass
+class CandidateSet:
+    """One query's pruned candidates (sorted ascending by record id)."""
+
+    rec_ids: np.ndarray    # int64[n]
+    counts: np.ndarray     # int32[n]  shared retained-hash counts c
+    o1: np.ndarray         # int32[n]  exact buffer intersections
+    hits: int              # posting entries merged (cost accounting)
+    pruned: int            # candidates dropped by the containment bound
+
+
+def query_bits(buf_row: np.ndarray) -> np.ndarray:
+    """Set bit positions of a query's packed top-r bitmap row."""
+    buf_row = np.asarray(buf_row, dtype=np.uint32)
+    if buf_row.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = ((buf_row[:, None] >> shifts[None, :]) & np.uint32(1)).reshape(-1)
+    return np.nonzero(bits)[0].astype(np.int64)
+
+
+def _gather_segments(offsets, rec_ids, rows):
+    """Concatenate CSR segments for ``rows`` (posting ids, with repeats)."""
+    if len(rows) == 0:
+        return np.zeros(0, dtype=np.int32)
+    starts = offsets[rows]
+    ends = offsets[rows + 1]
+    total = int((ends - starts).sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int32)
+    out = np.empty(total, dtype=np.int32)
+    pos = 0
+    for s, e in zip(starts, ends):
+        n = int(e - s)
+        out[pos : pos + n] = rec_ids[s:e]
+        pos += n
+    return out
+
+
+def tail_bound(q_hashes: np.ndarray) -> np.ndarray:
+    """float64[nq+1]: bound_tail(c) = max_{1≤j≤c} j / unit(h_Q[j-1]).
+
+    ``q_hashes`` are the query's retained hashes, sorted ascending.
+    Entry 0 is 0 (no shared tail ⇒ D̂∩ = 0 exactly).
+    """
+    h = np.asarray(q_hashes, dtype=np.uint64)
+    n = len(h)
+    out = np.zeros(n + 1, dtype=np.float64)
+    if n:
+        j = np.arange(1, n + 1, dtype=np.float64)
+        unit = (h.astype(np.float64) + 1.0) / TWO32
+        out[1:] = np.maximum.accumulate(j / unit)
+    return out
+
+
+def candidates_for(
+    post: PostingsIndex,
+    q_hashes: np.ndarray,
+    q_bits: np.ndarray,
+    threshold: float,
+    q_size: int,
+) -> CandidateSet:
+    """Merge Q's hashes/bits against the postings, prune by the bound.
+
+    Returns every record whose containment *bound* clears ``threshold``
+    — a superset of the dense hits by construction (output-sensitive:
+    cost scales with posting hits, never with the index size).
+    """
+    q_hashes = np.asarray(q_hashes, dtype=np.uint32)
+
+    # -- tail merge: which postings rows exist for the query's hashes.
+    pos = np.searchsorted(post.keys, q_hashes)
+    ok = pos < len(post.keys)
+    hit = np.zeros(len(q_hashes), dtype=bool)
+    hit[ok] = post.keys[pos[ok]] == q_hashes[ok]
+    tail_ids = _gather_segments(post.offsets, post.rec_ids, pos[hit])
+
+    # -- buffer merge: exact o1 from the frozen top-r postings.
+    q_bits = np.asarray(q_bits, dtype=np.int64)
+    q_bits = q_bits[q_bits < len(post.buf_offsets) - 1]
+    buf_ids = _gather_segments(post.buf_offsets, post.buf_rec_ids, q_bits)
+
+    hits = len(tail_ids) + len(buf_ids)
+    if hits == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return CandidateSet(empty, empty.astype(np.int32),
+                            empty.astype(np.int32), 0, 0)
+
+    rec_c, counts_c = np.unique(tail_ids, return_counts=True)
+    rec_b, counts_b = np.unique(buf_ids, return_counts=True)
+    rec = np.union1d(rec_c, rec_b).astype(np.int64)
+    c = np.zeros(len(rec), dtype=np.int32)
+    o1 = np.zeros(len(rec), dtype=np.int32)
+    c[np.searchsorted(rec, rec_c)] = counts_c
+    o1[np.searchsorted(rec, rec_b)] = counts_b
+
+    # -- containment bound: (o1 + bound_tail(c)) / |Q| ≥ t or prune.
+    # _BOUND_SLACK inflates the WHOLE score bound (buffer term included)
+    # to dominate the dense path's float32 rounding.
+    bound = tail_bound(np.sort(q_hashes))
+    ub = (o1.astype(np.float64) + bound[np.minimum(c, len(bound) - 1)]) \
+        / max(int(q_size), 1)
+    keep = ub * _BOUND_SLACK >= float(threshold) - 1e-12
+    pruned = int(len(rec) - keep.sum())
+    return CandidateSet(rec[keep], c[keep], o1[keep], hits, pruned)
+
+
+def f32_threshold(t) -> np.ndarray:
+    """Smallest float32 ≥ t (scalar or vector).
+
+    A float32 score s satisfies ``s >= t`` under float64 comparison (the
+    legacy host path: numpy upcasts a python-float threshold) iff
+    ``s >= f32_threshold(t)`` under pure-float32 comparison — so device
+    side comparisons stay bit-compatible with ``np.nonzero(s >= t)``.
+    """
+    t64 = np.asarray(t, dtype=np.float64)
+    f = t64.astype(np.float32)
+    return np.where(f.astype(np.float64) < t64,
+                    np.nextafter(f, np.float32(np.inf)), f)
+
+
+def threshold_hits_packed(scores, thresholds) -> list[np.ndarray]:
+    """Per-query hit ids from a score matrix, comparison at the source.
+
+    ``scores`` is f32[m, Gq] — numpy OR a device (jnp) array. The ≥
+    comparison runs where the scores live (device-side for jnp: only the
+    bool mask crosses to host, 4× less transfer than the float matrix),
+    then one vectorized nonzero pass packs all queries' indices — no
+    per-column python loop. ``thresholds`` is scalar or per-query.
+    """
+    thr = f32_threshold(thresholds)
+    if isinstance(scores, np.ndarray):
+        mask = scores >= (thr if thr.ndim == 0 else thr[None, :])
+    else:
+        import jax.numpy as jnp
+
+        mask = scores >= (jnp.float32(thr) if thr.ndim == 0
+                          else jnp.asarray(thr, jnp.float32)[None, :])
+    mask = np.asarray(mask)
+    if mask.ndim != 2:
+        raise ValueError(f"expected [m, Gq] scores, got {mask.shape}")
+    q_idx, rec_idx = np.nonzero(mask.T)
+    del q_idx  # row-major over queries; splits recover the grouping
+    counts = mask.sum(axis=0)
+    return np.split(rec_idx.astype(np.int64), np.cumsum(counts)[:-1])

@@ -93,12 +93,18 @@ class SketchServer:
     ``index`` may be a host GBKMVIndex, a ``repro.api`` GB-KMV index, or
     an already-placed :class:`repro.sketchindex.ShardedIndex` — device
     placement is the ShardedIndex's job, not the server's.
+
+    ``plan`` is the planner hint every flush passes down ("auto" |
+    "dense" | "pruned"). It only takes effect for threshold-only serving
+    (``topk=0``): top-k answers need the full ranking, so those flushes
+    always run the dense sweep.
     """
 
     def __init__(self, index, mesh=None, max_batch: int = 16,
                  max_wait: float = 0.01, topk: int = 10,
                  clock: Callable[[], float] = time.monotonic,
-                 backend: str = "jnp"):
+                 backend: str = "jnp", plan: str = "auto"):
+        from repro.planner import normalize_plan
         from repro.sketchindex import ShardedIndex
 
         if isinstance(index, ShardedIndex):
@@ -109,6 +115,7 @@ class SketchServer:
                                  "a ShardedIndex")
             self.index = ShardedIndex(index, mesh, backend=backend)
         self.topk = topk
+        self.plan = normalize_plan(plan)
         self.batcher = MicroBatcher(max_batch, max_wait, clock)
         self._next_rid = 0
         self.results: dict[int, dict] = {}
@@ -134,6 +141,7 @@ class SketchServer:
     def _execute(self, batch: list[Request]):
         results = self.index.serve_batch(
             [r.q_ids for r in batch],
-            np.asarray([r.threshold for r in batch]), self.topk)
+            np.asarray([r.threshold for r in batch]), self.topk,
+            plan=self.plan)
         for req, res in zip(batch, results):
             self.results[req.rid] = res

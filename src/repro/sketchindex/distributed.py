@@ -244,10 +244,76 @@ class ShardedIndex:
         self.budget = budget if budget is not None else getattr(
             index, "budget", None)
         self.didx = to_device_index(core, mesh)
+        self._shard_posts = None       # planner postings, one per row shard
+        self.last_plan = None
 
     @property
     def num_records(self) -> int:
         return self.host.num_records
+
+    # -- planner plumbing: per-shard postings, candidates unioned --
+    def _shard_postings(self):
+        """(postings, row_offsets) matching the device row partition.
+
+        One CSR postings index per shard of the record dim; candidate
+        generation probes every shard and unions the (disjoint) results
+        — the host-side mirror of the mesh's all_gather.
+        """
+        if self._shard_posts is None:
+            from repro import planner
+
+            s: PackedSketches = self.host.sketches
+            m = s.num_records
+            n_dev = self.mesh.devices.size
+            rows = max(-(-m // n_dev), 1)
+            posts, offs = [], []
+            for lo in range(0, m, rows):
+                hi = min(lo + rows, m)
+                sub = PackedSketches(
+                    values=np.asarray(s.values)[lo:hi],
+                    lengths=np.asarray(s.lengths)[lo:hi],
+                    thresh=np.asarray(s.thresh)[lo:hi],
+                    buf=np.asarray(s.buf)[lo:hi],
+                    sizes=np.asarray(s.sizes)[lo:hi])
+                posts.append(planner.build_postings(sub))
+                offs.append(lo)
+            self._shard_posts = (posts, offs)
+        return self._shard_posts
+
+    def _pruned_batch(self, queries, thresholds, plan: str):
+        """Planner route for a batch. Returns (hits, qp): hits is None
+        when the cost model (or a guard) sends the batch dense, and qp
+        is the already-sketched query pack (or None) so the dense path
+        never re-sketches the batch."""
+        from repro import planner
+        from repro.planner.plan import gbkmv_plan_queries
+
+        plan = planner.normalize_plan(plan)
+        thr = np.asarray(thresholds, np.float64)
+        t_min = float(thr.min()) if thr.size else 0.0
+        if plan == "dense" or t_min <= 0.0 or not queries:
+            return None, None
+        qp, hash_rows, bit_rows, sizes = gbkmv_plan_queries(
+            self.host, queries)
+        posts, offs = self._shard_postings()
+        s: PackedSketches = self.host.sketches
+        decision = planner.choose_plan(
+            posts, hash_rows, bit_rows, t_min,
+            s.num_records, s.capacity, plan=plan)
+        self.last_plan = decision
+        if decision.path == "dense":
+            return None, qp
+
+        from repro.kernels import gather_score
+
+        def score_fn(cand_rec, cand_q):
+            return gather_score.score_pairs(
+                s, qp, cand_rec, cand_q, backend=self.backend)
+
+        ids, _ = planner.pruned_batch(
+            posts, hash_rows, bit_rows, sizes, thresholds, score_fn,
+            row_offsets=offs)
+        return ids, qp
 
     # -- scoring --
     def batch_scores(self, queries) -> np.ndarray:
@@ -256,33 +322,63 @@ class ShardedIndex:
         s = score_batch(self.didx, qp, backend=self.backend)
         return np.asarray(s)[: self.num_records]
 
-    def serve_batch(self, queries, thresholds, k: int):
-        """One device sweep answering threshold + top-k for a whole batch.
+    def serve_batch(self, queries, thresholds, k: int, plan: str = "auto"):
+        """One sweep answering threshold + top-k for a whole batch.
 
         ``thresholds`` is scalar or per-query. Returns one dict per query:
-        {"hits", "topk_ids", "topk_scores"}.
+        {"hits", "topk_ids", "topk_scores"}. With ``k > 0`` the dense
+        sweep is mandatory (top-k needs the full ranking) and the hit
+        masks fall out of the same scores; threshold-only serving
+        (``k == 0``) routes through the planner per ``plan``.
         """
-        qp = batch_queries(self.host, [np.asarray(q) for q in queries])
+        from repro.planner.prune import threshold_hits_packed
+
+        queries = [np.asarray(q) for q in queries]
+        thr = np.broadcast_to(np.asarray(thresholds, np.float64),
+                              (len(queries),))
+        empty_ids = np.zeros(0, np.int64)
+        empty_scores = np.zeros(0, np.float32)
+        if k <= 0:
+            hits, qp = self._pruned_batch(queries, thr, plan)
+            if hits is None:
+                if qp is None:
+                    qp = batch_queries(self.host, queries)
+                scores = score_batch(self.didx, qp, backend=self.backend)
+                hits = threshold_hits_packed(scores[: self.num_records], thr)
+            return [{"hits": h, "topk_ids": empty_ids,
+                     "topk_scores": empty_scores} for h in hits]
+
+        qp = batch_queries(self.host, queries)
         scores = score_batch(self.didx, qp, backend=self.backend)
         vals, ids = distributed_topk(scores, k, self.mesh)
         jax.block_until_ready(vals)
-        sc = np.asarray(scores)[: self.num_records]
-        thr = np.broadcast_to(np.asarray(thresholds, np.float64),
-                              (len(queries),))
+        hits = threshold_hits_packed(scores[: self.num_records], thr)
         return [
-            {"hits": np.nonzero(sc[:, j] >= thr[j])[0],
+            {"hits": hits[j],
              "topk_ids": np.asarray(ids)[j],
              "topk_scores": np.asarray(vals)[j]}
             for j in range(len(queries))
         ]
 
     # -- repro.api protocol --
-    def query(self, q_ids, threshold: float) -> np.ndarray:
-        return self.batch_query([q_ids], threshold)[0]
+    def query(self, q_ids, threshold: float, *, plan: str = "auto") -> np.ndarray:
+        return self.batch_query([q_ids], threshold, plan=plan)[0]
 
-    def batch_query(self, queries, threshold: float) -> list[np.ndarray]:
-        s = self.batch_scores(queries)
-        return [np.nonzero(s[:, j] >= threshold)[0] for j in range(s.shape[1])]
+    def batch_query(self, queries, threshold: float, *,
+                    plan: str = "auto") -> list[np.ndarray]:
+        from repro import planner
+
+        plan = planner.normalize_plan(plan)
+        queries = [np.asarray(q) for q in queries]
+        if not queries:
+            return []
+        hits, qp = self._pruned_batch(queries, float(threshold), plan)
+        if hits is not None:
+            return hits
+        if qp is None:
+            qp = batch_queries(self.host, queries)
+        s = score_batch(self.didx, qp, backend=self.backend)
+        return planner.threshold_hits_packed(s[: self.num_records], threshold)
 
     def topk(self, q_ids, k: int):
         qp = batch_queries(self.host, [np.asarray(q_ids)])
@@ -302,6 +398,7 @@ class ShardedIndex:
         self.host = wrapper.core
         self.stats = wrapper.stats
         self.didx = to_device_index(self.host, self.mesh)
+        self._shard_posts = None   # row partition moved; rebuild lazily
         return self
 
     def save(self, path: str) -> None:
