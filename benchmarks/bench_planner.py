@@ -1,19 +1,32 @@
 """Planner bench: dense index sweep vs postings-pruned filter-and-verify.
 
 QPS and candidate-set sizes at thresholds {0.5, 0.7, 0.9} on the Zipf
-workload (the Fig. 16 generator) — the start of the perf trajectory for
-the candidate-pruning query planner. Parity between the two paths is
+workload (the Fig. 16 generator) — the perf trajectory for the
+candidate-pruning query planner. Parity between the two paths is
 asserted on every batch: a mismatch raises (and fails the CI smoke
 step), because the planner's whole contract is bit-identical results.
 
-``run(quick, json_out=...)`` additionally writes a machine-readable
-summary (BENCH_PLANNER.json at the repo root via ``benchmarks.run
---suite planner --json``).
+``run(quick, json_out=..., backend=..., baseline=..., calibrate=...)``:
+
+* ``backend`` picks the scoring implementation ("jnp" default; CI also
+  smokes "numpy" — with jnp/pallas the pruned path runs device-resident
+  over the sketch arena).
+* ``baseline`` points at a committed BENCH_PLANNER.json; the run FAILS
+  if pruned-path QPS regresses >20% below it. Machine-speed differences
+  are absorbed by scaling the baseline with the dense-QPS ratio (dense
+  is the stable denominator on any host), so the gate is effectively a
+  speedup-regression gate.
+* ``calibrate`` fits the core/cost_model.py query-path constants from
+  the measured QPS (mean_probe_hits feeds the pruned-path model) and
+  embeds them under the artifact's "calibration" key —
+  ``cost_model.load_calibration`` / $REPRO_COST_CALIBRATION installs
+  them so ``plan="auto"`` uses measured instead of hand-set constants.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import numpy as np
@@ -21,9 +34,12 @@ import numpy as np
 from benchmarks.common import write_csv
 from repro import api
 from repro.data.synth import generate_dataset, make_query_workload
+from repro.planner import candidates_for
+from repro.planner.plan import probe_hits_per_query, unpack_query_rows
 
 THRESHOLDS = (0.5, 0.7, 0.9)
 BATCH = 16
+REGRESSION_TOLERANCE = 0.8      # new pruned QPS must be ≥ 0.8 × baseline
 
 
 def _batches(queries):
@@ -40,7 +56,38 @@ def _time_path(index, batches, threshold, plan) -> float:
     return time.perf_counter() - t0
 
 
-def run(quick: bool = True, json_out: str | None = None):
+def check_baseline(rows, baseline_path: str, backend: str) -> list[str]:
+    """Compare pruned QPS per threshold against a committed artifact.
+
+    Returns human-readable failure strings (empty = pass). Same-backend
+    runs scale the baseline by the dense-QPS ratio so a slower/faster CI
+    machine doesn't trip the gate (dense is the stable denominator on
+    one backend). A different backend has a different dense/pruned cost
+    structure, so cross-backend runs compare raw pruned QPS instead.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rows = {r["threshold"]: r for r in base.get("rows", [])}
+    base_backend = base.get("workload", {}).get("backend", "jnp")
+    failures = []
+    for r in rows:
+        b = base_rows.get(r["threshold"])
+        if b is None:
+            continue
+        scale = (r["qps_dense"] / max(b["qps_dense"], 1e-9)
+                 if backend == base_backend else 1.0)
+        floor = REGRESSION_TOLERANCE * b["qps_pruned"] * scale
+        if r["qps_pruned"] < floor:
+            failures.append(
+                f"t={r['threshold']}: pruned QPS {r['qps_pruned']:.1f} < "
+                f"floor {floor:.1f} (baseline {b['qps_pruned']:.1f} × "
+                f"scale {scale:.2f} × {REGRESSION_TOLERANCE})")
+    return failures
+
+
+def run(quick: bool = True, json_out: str | None = None,
+        backend: str = "jnp", baseline: str | None = None,
+        calibrate: bool = False):
     m = 4000 if quick else 20_000
     n_elems = 20_000 if quick else 100_000
     nq = 64 if quick else 256
@@ -48,9 +95,16 @@ def run(quick: bool = True, json_out: str | None = None):
                             size_min=10, size_max=400, seed=5)
     total = sum(len(r) for r in recs)
     budget = int(total * 0.1)
-    index = api.get_engine("gbkmv").build(recs, budget, backend="jnp")
+    index = api.get_engine("gbkmv").build(recs, budget, backend=backend)
     queries = make_query_workload(recs, nq, seed=2)
     batches = _batches(queries)
+
+    # Untimed candidate accounting, identical for every backend: the
+    # host filter's candidate-set sizes and the probe's posting-entry
+    # counts (the device path never materializes candidates on host).
+    _, hash_rows, bit_rows, q_sizes = index._plan_queries(queries)
+    post = index._postings()
+    probe = probe_hits_per_query(post, hash_rows, bit_rows)
 
     rows = []
     for t in THRESHOLDS:
@@ -61,10 +115,9 @@ def run(quick: bool = True, json_out: str | None = None):
                 raise RuntimeError(
                     f"planner parity broken at t={t}, query {j}: "
                     f"dense={d.tolist()} pruned={p.tolist()}")
-        cand_sizes = []
-        for b in batches:
-            index.batch_query(b, t, plan="pruned")
-            cand_sizes.extend(index.last_candidate_sizes or [])
+        cand_sizes = [
+            len(candidates_for(post, qh, qb, t, int(qs)).rec_ids)
+            for qh, qb, qs in zip(hash_rows, bit_rows, q_sizes)]
         dt_dense = _time_path(index, batches, t, "dense")
         dt_pruned = _time_path(index, batches, t, "pruned")
         rows.append({
@@ -74,11 +127,17 @@ def run(quick: bool = True, json_out: str | None = None):
             "speedup": round(dt_dense / dt_pruned, 3),
             "mean_candidates": round(float(np.mean(cand_sizes)), 2),
             "candidate_frac": round(float(np.mean(cand_sizes)) / m, 5),
+            "mean_probe_hits": round(float(probe.mean()), 2),
             "mean_hits": float(np.mean([len(d) for d in dense])),
             "parity": True,
         })
 
     write_csv("planner.csv", rows)
+
+    failures = []
+    if baseline and os.path.exists(baseline):
+        failures = check_baseline(rows, baseline, backend)
+
     if json_out:
         payload = {
             "suite": "planner",
@@ -87,11 +146,38 @@ def run(quick: bool = True, json_out: str | None = None):
                 "generator": "zipf", "m": m, "n_elems": n_elems,
                 "alpha_freq": 0.8, "alpha_size": 1.0, "budget": budget,
                 "n_queries": nq, "batch": BATCH, "engine": "gbkmv",
-                "backend": "jnp",
+                "backend": backend,
             },
             "rows": rows,
         }
+        if calibrate:
+            from repro.core import cost_model
+
+            # Probe hits do not vary with threshold, so the main rows
+            # alone cannot separate fixed from per-hit cost. Add
+            # calibration-only measurements at truncated query sizes
+            # (fewer retained hashes → genuinely different hit counts).
+            cal_rows = list(rows)
+            for frac in (0.25, 0.5):
+                qsub = [np.asarray(q)[: max(2, int(len(q) * frac))]
+                        for q in queries]
+                bsub = _batches(qsub)
+                dt = _time_path(index, bsub, 0.7, "pruned")
+                qp_sub = index._query_pack(qsub)
+                h_sub, b_sub, _ = unpack_query_rows(qp_sub)
+                per = probe_hits_per_query(post, h_sub, b_sub)
+                cal_rows.append({
+                    "qps_pruned": nq / dt,
+                    "mean_probe_hits": float(per.mean()),
+                })
+            payload["calibration"] = cost_model.fit_query_constants(
+                cal_rows, m, index._sketch_pack().capacity)
         with open(json_out, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
+
+    if failures:
+        raise RuntimeError(
+            "pruned-path QPS regressed below the committed baseline:\n  "
+            + "\n  ".join(failures))
     return rows

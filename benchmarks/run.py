@@ -67,6 +67,17 @@ def main():
     ap.add_argument("--json", action="store_true",
                     help="also write machine-readable artifacts at the "
                          "repo root (e.g. BENCH_PLANNER.json)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=("numpy", "jnp", "pallas"),
+                    help="scoring backend for the planner suite")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the cost-model query-path constants from "
+                         "measured QPS and embed them in the planner "
+                         "JSON artifact (requires --json)")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail the planner suite if pruned-path QPS "
+                         "regresses >20%% below the committed "
+                         "BENCH_PLANNER.json (dense-ratio normalized)")
     args = ap.parse_args()
 
     if args.suite and args.suite not in {n for n, _ in SUITES}:
@@ -86,6 +97,12 @@ def main():
             kwargs = {}
             if args.json and name in JSON_ARTIFACTS:
                 kwargs["json_out"] = JSON_ARTIFACTS[name]
+            if name == "planner":
+                kwargs["backend"] = args.backend
+                if args.calibrate:
+                    kwargs["calibrate"] = True
+                if args.check_baseline:
+                    kwargs["baseline"] = JSON_ARTIFACTS["planner"]
             rows = mod.run(quick=not args.full, **kwargs)
             _print_rows(rows)
             print(f"  [{time.time()-t0:.1f}s] → reports/bench/{name}.csv")

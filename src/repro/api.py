@@ -47,6 +47,7 @@ from repro.core import gkmv as gkmv_mod
 from repro.core import kmv as kmv_mod
 from repro.core import lshe as lshe_mod
 from repro.core import minhash as minhash_mod
+from repro.core.arena import SketchArena
 from repro.core.estimators import containment_matrix, normalize_backend
 from repro.core.hashing import PAD, hash_u32_np
 from repro.core.sketches import PackedSketches
@@ -152,11 +153,15 @@ class _IndexBase:
         return [self.query(q, threshold) for q in queries]
 
     def topk(self, q_ids, k: int) -> tuple[np.ndarray, np.ndarray]:
-        """(record ids, scores) of the k highest estimated containments."""
+        """(record ids, scores) of the k highest estimated containments.
+
+        Deterministic order: score descending, ties by ascending record
+        id — the exact ranking the planner-aware pruned top-k reproduces
+        (and the tie rule ``lax.top_k`` applies on the sharded path).
+        """
         s = np.asarray(self._scores(q_ids))
         k = min(int(k), len(s))
-        ids = np.argpartition(-s, kth=max(k - 1, 0))[:k]
-        ids = ids[np.argsort(-s[ids], kind="stable")]
+        ids = np.argsort(-s, kind="stable")[:k]
         return ids.astype(np.int64), s[ids].astype(np.float32)
 
     def insert(self, new_records):
@@ -179,18 +184,46 @@ class _IndexBase:
             "(gbkmv/gkmv/kmv/lshe) only")
 
 
-def _pack_to_npz(s: PackedSketches) -> dict:
-    return {
+_ARENA_VERSION = 2
+
+
+def _arena_to_npz(s: PackedSketches) -> dict:
+    """Arena serialization: the packed columns plus — when they have been
+    built — the CSR postings, so a reloaded index answers its first
+    pruned query without re-inverting the sketches. Column keys are
+    unchanged from the v1 (postings-less) format, which is what keeps
+    old files loadable."""
+    d = {
         "values": np.asarray(s.values), "lengths": np.asarray(s.lengths),
         "thresh": np.asarray(s.thresh), "buf": np.asarray(s.buf),
         "sizes": np.asarray(s.sizes),
+        "arena_version": np.int64(_ARENA_VERSION),
     }
+    post = getattr(s, "_post", None)
+    if post is not None:
+        d.update(
+            post_keys=post.keys, post_offsets=post.offsets,
+            post_rec_ids=post.rec_ids, post_buf_offsets=post.buf_offsets,
+            post_buf_rec_ids=post.buf_rec_ids,
+            post_tau=np.uint32(post.tau))
+    return d
 
 
-def _pack_from_npz(d: dict) -> PackedSketches:
-    return PackedSketches(
+def _arena_from_npz(d: dict) -> SketchArena:
+    """Rebuild an arena from ``_arena_to_npz`` output *or* a legacy v1
+    file (same column keys, no ``post_*`` entries → postings stay lazy)."""
+    arena = SketchArena(
         values=d["values"], lengths=d["lengths"], thresh=d["thresh"],
         buf=d["buf"], sizes=d["sizes"])
+    if "post_keys" in d:
+        from repro.planner.postings import PostingsIndex
+
+        arena.install_postings(PostingsIndex(
+            keys=d["post_keys"], offsets=d["post_offsets"],
+            rec_ids=d["post_rec_ids"], buf_offsets=d["post_buf_offsets"],
+            buf_rec_ids=d["post_buf_rec_ids"],
+            num_records=arena.num_records, tau=np.uint32(d["post_tau"])))
+    return arena
 
 
 def _concat_packs(packs: list[PackedSketches]) -> PackedSketches:
@@ -207,20 +240,30 @@ def _concat_packs(packs: list[PackedSketches]) -> PackedSketches:
 class _PlannedIndexMixin:
     """Planner routing for sketch-backed indexes (gbkmv/gkmv/kmv).
 
-    ``query``/``batch_query`` accept ``plan`` ∈ {"auto", "dense",
-    "pruned"}: "auto" (default) asks :mod:`repro.planner` to pick the
-    cheaper path per batch from posting selectivity; forced modes pin
-    it. Both paths return identical candidate id sets. ``topk`` always
-    runs the dense sweep (it needs the full ranking). Postings are built
-    lazily on first planned query and maintained across ``insert``.
+    ``query``/``batch_query``/``topk`` accept ``plan`` ∈ {"auto",
+    "dense", "pruned"}: "auto" (default) asks :mod:`repro.planner` to
+    pick the cheaper path per batch from posting selectivity; forced
+    modes pin it. Both paths return identical results. ``topk`` routes
+    through postings-driven upper-bound pruning (the running k-th score
+    is the moving threshold) with exact parity against the dense
+    ranking. Postings live ON the arena (:class:`SketchArena`) — built
+    lazily on first planned query, shared with every other layer
+    viewing the same arena, and maintained incrementally across
+    ``insert``.
 
-    Subclasses provide ``_sketch_pack`` (the packed record sketches),
+    With ``backend`` ∈ {"jnp", "pallas"} the pruned threshold path runs
+    device-resident: candidate merge (kernels/postings_merge.py),
+    gather-scoring, and packed thresholding all execute on device with
+    no host-numpy transfer in between (``planner.device``).
+
+    Subclasses provide ``_sketch_pack`` (the sketch arena),
     ``_plan_queries`` (per-query retained hashes / buffer bits / sizes
     + the scoring pack), and ``_pair_score_fn`` (ragged verify scorer).
     """
 
     last_plan = None            # QueryPlan of the most recent planned batch
     last_candidate_sizes: list | None = None
+    _device_prunable = False    # engine scoring has a device twin
 
     def _sketch_pack(self) -> PackedSketches:
         raise NotImplementedError
@@ -237,13 +280,25 @@ class _PlannedIndexMixin:
         dense batches must not pay the sketching twice)."""
         raise NotImplementedError
 
-    def _postings(self):
-        from repro import planner
+    # Postings are owned by the arena, not the wrapper: every layer that
+    # views the same arena (api index, ShardedIndex, server) shares one
+    # inverted index. The property keeps the legacy ``self._post`` spelling
+    # working (tests and the rebuild-fallback insert assign through it).
+    @property
+    def _post(self):
+        return getattr(self._sketch_pack(), "_post", None)
 
-        s = self._sketch_pack()
-        if self._post is None or self._post.num_records != s.num_records:
-            self._post = planner.build_postings(s)
-        return self._post
+    @_post.setter
+    def _post(self, value):
+        arena = self._sketch_pack()
+        if value is None:
+            if isinstance(arena, SketchArena):
+                arena.clear_postings()
+        else:
+            arena.install_postings(value)
+
+    def _postings(self):
+        return SketchArena.from_pack(self._sketch_pack()).postings()
 
     def query(self, q_ids, threshold: float, *, plan: str = "auto") -> np.ndarray:
         return self.batch_query([q_ids], threshold, plan=plan)[0]
@@ -269,11 +324,46 @@ class _PlannedIndexMixin:
         self.last_plan = decision
         if decision.path == "dense":
             return self._dense_batch_query(queries, threshold, qp=qp)
+        if self._device_prunable and self.backend in ("jnp", "pallas"):
+            from repro.planner import device as planner_device
+
+            # The device path never materializes per-query candidate
+            # sets on host — only the probe breakdown is known
+            # (decision.per_query_hits); candidate accounting stays None.
+            self.last_candidate_sizes = None
+            return planner_device.pruned_batch_device(
+                SketchArena.from_pack(s), qp, threshold,
+                hits=decision.hits, backend=self.backend)
         ids, cands = planner.pruned_batch(
             self._post, hash_rows, bit_rows, sizes, threshold,
             self._pair_score_fn(qp))
         self.last_candidate_sizes = [len(c.rec_ids) for c in cands]
         return ids
+
+    def topk(self, q_ids, k: int, *,
+             plan: str = "auto") -> tuple[np.ndarray, np.ndarray]:
+        """Planner-aware top-k: postings-driven upper-bound pruning with
+        the running k-th score as the moving threshold — exact parity
+        with the dense ranking under the deterministic (-score, id)
+        order (``plan="dense"`` forces the full sweep)."""
+        from repro import planner
+
+        plan = planner.normalize_plan(plan)
+        s = self._sketch_pack()
+        if plan == "dense" or int(k) <= 0 or s.num_records == 0:
+            return super().topk(q_ids, k)
+        qp, hash_rows, bit_rows, sizes = self._plan_queries(
+            [np.asarray(q_ids)])
+        if plan == "auto":
+            decision = planner.choose_plan(
+                self._postings(), hash_rows, bit_rows, 1.0,
+                s.num_records, s.capacity)
+            self.last_plan = decision
+            if decision.path == "dense":
+                return super().topk(q_ids, k)
+        return planner.pruned_topk(
+            self._postings(), hash_rows[0], bit_rows[0], int(sizes[0]), k,
+            self._pair_score_fn(qp), s.num_records)
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +391,7 @@ class GBKMVEngine:
     @classmethod
     def _load(cls, d: dict) -> "GBKMVApiIndex":
         core = gbkmv_mod.GBKMVIndex(
-            sketches=_pack_from_npz(d), tau=np.uint32(d["tau"]),
+            sketches=_arena_from_npz(d), tau=np.uint32(d["tau"]),
             top_elems=d["top_elems"], seed=int(d["seed"]),
             buffer_bits=int(d["buffer_bits"]))
         budget = int(d["budget"]) if "budget" in d else -1
@@ -311,15 +401,16 @@ class GBKMVEngine:
 
 class GBKMVApiIndex(_PlannedIndexMixin, _IndexBase):
     engine = "gbkmv"
+    _device_prunable = True
 
     def __init__(self, core: gbkmv_mod.GBKMVIndex, budget: int | None,
                  backend: str = "jnp"):
+        core.sketches = SketchArena.from_pack(core.sketches)
         self.core = core
         self.budget = budget
         self.backend = normalize_backend(backend)
         self._records = None            # dynamic path needs no raw records
         self._build_cfg = {}
-        self._post = None               # planner postings, built lazily
 
     @property
     def num_records(self) -> int:
@@ -366,8 +457,9 @@ class GBKMVApiIndex(_PlannedIndexMixin, _IndexBase):
 
     def insert(self, new_records, budget: int | None = None):
         """Paper §IV-B dynamic maintenance: τ-retighten, never re-hash old
-        rows (``sketchindex.dynamic``); postings follow incrementally
-        (posting deletion + append, ``planner.update_postings``)."""
+        rows (``sketchindex.dynamic``). The repacked arena adopts every
+        cached postings structure incrementally (τ-truncation + append,
+        global and per-shard) inside ``insert_records``."""
         from repro.sketchindex import dynamic
 
         budget = budget if budget is not None else self.budget
@@ -376,22 +468,17 @@ class GBKMVApiIndex(_PlannedIndexMixin, _IndexBase):
                 self.core.num_records * self.core.sketches.buf_words
         self.core, self.stats = dynamic.insert_records(
             self.core, [np.asarray(r) for r in new_records], int(budget))
-        if self._post is not None:
-            from repro import planner
-
-            self._post = planner.update_postings(
-                self._post, self.core.sketches, self.core.tau)
         return self
 
     def save(self, path: str) -> None:
-        d = _pack_to_npz(self.core.sketches)
+        d = _arena_to_npz(self.core.sketches)
         np.savez_compressed(
             path, engine="gbkmv", tau=np.uint32(self.core.tau),
             top_elems=np.asarray(self.core.top_elems, np.int64),
             seed=np.int64(self.core.seed),
             buffer_bits=np.int64(self.core.buffer_bits),
             budget=np.int64(self.budget if self.budget is not None else -1),
-            **d)
+            backend=self.backend, **d)
 
     def nbytes(self) -> int:
         return self.core.nbytes()
@@ -424,23 +511,23 @@ class GKMVEngine:
 
     @classmethod
     def _load(cls, d: dict) -> "GKMVApiIndex":
-        return GKMVApiIndex(_pack_from_npz(d), tau=int(d["tau"]),
+        return GKMVApiIndex(_arena_from_npz(d), tau=int(d["tau"]),
                             seed=int(d["seed"]),
                             backend=str(d.get("backend", "jnp")))
 
 
 class GKMVApiIndex(_PlannedIndexMixin, _IndexBase):
     engine = "gkmv"
+    _device_prunable = True
 
     def __init__(self, sketches: PackedSketches, tau: int, seed: int,
                  backend: str = "jnp"):
-        self.sketches = sketches
+        self.sketches = SketchArena.from_pack(sketches)
         self.tau = np.uint32(tau)
         self.seed = seed
         self.backend = normalize_backend(backend)
         self._records = None
         self._build_cfg = {}
-        self._post = None
 
     @property
     def num_records(self) -> int:
@@ -486,8 +573,8 @@ class GKMVApiIndex(_PlannedIndexMixin, _IndexBase):
 
     def save(self, path: str) -> None:
         np.savez_compressed(path, engine="gkmv", tau=np.uint32(self.tau),
-                            seed=np.int64(self.seed),
-                            **_pack_to_npz(self.sketches))
+                            seed=np.int64(self.seed), backend=self.backend,
+                            **_arena_to_npz(self.sketches))
 
     def nbytes(self) -> int:
         return self.sketches.nbytes()
@@ -511,7 +598,7 @@ class KMVEngine:
 
     @classmethod
     def _load(cls, d: dict) -> "KMVApiIndex":
-        return KMVApiIndex(_pack_from_npz(d), seed=int(d["seed"]),
+        return KMVApiIndex(_arena_from_npz(d), seed=int(d["seed"]),
                            backend=str(d.get("backend", "jnp")))
 
 
@@ -520,12 +607,11 @@ class KMVApiIndex(_PlannedIndexMixin, _IndexBase):
 
     def __init__(self, sketches: PackedSketches, seed: int,
                  backend: str = "jnp"):
-        self.sketches = sketches
+        self.sketches = SketchArena.from_pack(sketches)
         self.seed = seed
         self.backend = normalize_backend(backend)
         self._records = None
         self._build_cfg = {}
-        self._post = None
 
     @property
     def num_records(self) -> int:
@@ -598,7 +684,8 @@ class KMVApiIndex(_PlannedIndexMixin, _IndexBase):
 
     def save(self, path: str) -> None:
         np.savez_compressed(path, engine="kmv", seed=np.int64(self.seed),
-                            **_pack_to_npz(self.sketches))
+                            backend=self.backend,
+                            **_arena_to_npz(self.sketches))
 
     def nbytes(self) -> int:
         return self.sketches.nbytes()

@@ -1,0 +1,208 @@
+"""Device-resident sketch arena: one packed store for every layer.
+
+The paper's speed claim is a *layout* claim as much as an estimator
+claim: containment queries win when the sketch bytes are contiguous and
+the hot loop never leaves them. Before this module each layer of the
+repo re-materialized its own copies of the packed sketches — the planner
+built postings from a throwaway pack, ``ShardedIndex`` sliced per-shard
+sub-packs, the device paths re-uploaded columns per call, and save/load
+spoke a postings-less dialect. :class:`SketchArena` is the single owner:
+
+    columns    the structure-of-arrays pack (values / lengths / thresh /
+               buf / sizes) — a :class:`PackedSketches` subclass, so
+               every existing reader of a pack reads an arena unchanged
+    postings   the CSR hash + buffer-bit inverted index over the columns
+               (planner/postings.py layout), built once, maintained
+               incrementally across inserts
+    shards     per-record-slice postings views for ``ShardedIndex``
+               (column *views*, never copies), maintained incrementally
+    device     cached jnp mirrors of columns and postings so the pruned
+               query path runs candidate-gen → gather-score → packed
+               thresholding without a host round-trip
+
+Mutation model: sketches are immutable between inserts. A dynamic insert
+builds a *new* arena (sketchindex/dynamic.py repacks rows) and calls
+:meth:`adopt_postings_from` on it, which carries the old arena's postings
+forward by τ-truncation + append — never a rebuild, never re-hashing old
+rows — including every cached per-shard slice. Device mirrors are
+re-created lazily on the next device query (one placement per mutation,
+then resident).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro.core.sketches import PackedSketches
+
+
+@dataclasses.dataclass
+class DevicePostings:
+    """jnp mirrors of a PostingsIndex's CSR columns (device residency).
+
+    Offsets are int32 on device (nnz < 2³¹ — the host index would not
+    fit in memory long before that bound binds).
+    """
+
+    keys: object          # u32[U]
+    offsets: object       # i32[U+1]
+    rec_ids: object       # i32[nnz]
+    buf_offsets: object   # i32[R+1]
+    buf_rec_ids: object   # i32[bnnz]
+    num_records: int
+
+
+@dataclasses.dataclass
+class SketchArena(PackedSketches):
+    """A :class:`PackedSketches` that owns its derived structures.
+
+    Construction: ``SketchArena.from_pack(pack)`` (idempotent). All
+    caches live outside the dataclass fields so ``dataclasses.replace``
+    and pytree flatten/unflatten reset them for free.
+    """
+
+    def __post_init__(self):
+        self._post = None         # planner PostingsIndex | None
+        self._shard_posts = None  # (bounds tuple[(lo, hi)], [PostingsIndex])
+        self._dev_pack = None     # PackedSketches of jnp arrays
+        self._dev_post = None     # DevicePostings
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_pack(cls, pack: PackedSketches) -> "SketchArena":
+        if isinstance(pack, cls):
+            return pack
+        return cls(values=pack.values, lengths=pack.lengths,
+                   thresh=pack.thresh, buf=pack.buf, sizes=pack.sizes)
+
+    # -- postings ----------------------------------------------------------
+
+    def postings(self):
+        """The CSR postings over this arena's columns (built lazily,
+        cached until a mutation installs or clears them)."""
+        from repro.planner.postings import build_postings
+
+        if self._post is None or self._post.num_records != self.num_records:
+            self._post = build_postings(self)
+            self._dev_post = None
+        return self._post
+
+    def install_postings(self, post) -> None:
+        self._post = post
+        self._dev_post = None
+
+    def clear_postings(self) -> None:
+        self._post = None
+        self._shard_posts = None
+        self._dev_post = None
+
+    # -- per-shard postings (record-offset slices) -------------------------
+
+    def _column_view(self, lo: int, hi: int) -> PackedSketches:
+        """A row-slice view of the columns — numpy basic slicing, no copy."""
+        return PackedSketches(
+            values=np.asarray(self.values)[lo:hi],
+            lengths=np.asarray(self.lengths)[lo:hi],
+            thresh=np.asarray(self.thresh)[lo:hi],
+            buf=np.asarray(self.buf)[lo:hi],
+            sizes=np.asarray(self.sizes)[lo:hi])
+
+    def shard_postings(self, num_shards: int):
+        """(postings, row_offsets) over ``num_shards`` record slices.
+
+        Built once from column views and cached; ``adopt_postings_from``
+        maintains the cache across inserts (truncate + append), so the
+        slice boundaries may lag the mesh's ceil-partition after inserts
+        — harmless, because candidate generation unions all slices and
+        reports *global* record ids regardless of where the cuts sit.
+        """
+        if self._shard_posts is not None:
+            bounds, posts = self._shard_posts
+            if bounds[-1][1] == self.num_records:
+                return posts, [lo for lo, _ in bounds]
+        from repro.planner.postings import build_postings
+
+        m = self.num_records
+        rows = max(-(-m // max(num_shards, 1)), 1)
+        bounds, posts = [], []
+        for lo in range(0, m, rows):
+            hi = min(lo + rows, m)
+            posts.append(build_postings(self._column_view(lo, hi)))
+            bounds.append((lo, hi))
+        self._shard_posts = (tuple(bounds), posts)
+        return posts, [lo for lo, _ in bounds]
+
+    # -- incremental maintenance across a dynamic insert -------------------
+
+    def adopt_postings_from(self, old: "SketchArena", tau) -> None:
+        """Carry ``old``'s cached postings onto this (post-insert) arena.
+
+        Rows ``[0, old.num_records)`` here are the old records refiltered
+        at the new global threshold ``tau`` (τ only decreases under the
+        fixed budget); rows beyond are new. Maintenance is therefore
+        τ-truncation of every cached postings structure plus an append of
+        the new rows — the global postings and every per-shard slice
+        update in place, no rebuild.
+        """
+        from repro.planner.postings import append_rows, truncate_postings
+
+        if not isinstance(old, SketchArena):
+            return
+        m_old, m_new = old.num_records, self.num_records
+        if old._post is not None:
+            post = truncate_postings(old._post, np.uint32(tau))
+            self._post = append_rows(post, self, m_old, m_new)
+            self._dev_post = None
+        if old._shard_posts is not None:
+            bounds, posts = old._shard_posts
+            kept = [truncate_postings(p, np.uint32(tau)) for p in posts]
+            # New rows extend the LAST slice (ids local to its row offset).
+            lo_last = bounds[-1][0]
+            kept[-1] = append_rows(kept[-1], self, m_old, m_new,
+                                   rec_offset=-lo_last)
+            new_bounds = tuple(bounds[:-1]) + ((lo_last, m_new),)
+            self._shard_posts = (new_bounds, kept)
+
+    # -- device mirrors ----------------------------------------------------
+
+    def device_pack(self) -> PackedSketches:
+        """jnp mirror of the columns — placed once, then resident."""
+        import jax.numpy as jnp
+
+        if self._dev_pack is None:
+            self._dev_pack = PackedSketches(
+                values=jnp.asarray(np.asarray(self.values)),
+                lengths=jnp.asarray(np.asarray(self.lengths)),
+                thresh=jnp.asarray(np.asarray(self.thresh)),
+                buf=jnp.asarray(np.asarray(self.buf)),
+                sizes=jnp.asarray(np.asarray(self.sizes)))
+        return self._dev_pack
+
+    def device_postings(self) -> DevicePostings:
+        """jnp mirror of the postings CSR — placed once, then resident."""
+        import jax.numpy as jnp
+
+        post = self.postings()
+        if self._dev_post is None:
+            self._dev_post = DevicePostings(
+                keys=jnp.asarray(post.keys),
+                offsets=jnp.asarray(post.offsets, jnp.int32),
+                rec_ids=jnp.asarray(post.rec_ids, jnp.int32),
+                buf_offsets=jnp.asarray(post.buf_offsets, jnp.int32),
+                buf_rec_ids=jnp.asarray(post.buf_rec_ids, jnp.int32),
+                num_records=post.num_records)
+        return self._dev_post
+
+
+# An arena IS a pack — let it cross jit boundaries the same way (caches
+# reset on unflatten via __post_init__, which is exactly right: a traced
+# arena cannot carry host-side caches).
+jax.tree_util.register_dataclass(
+    SketchArena,
+    data_fields=["values", "lengths", "thresh", "buf", "sizes"],
+    meta_fields=[],
+)

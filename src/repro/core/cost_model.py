@@ -129,25 +129,139 @@ def choose_buffer_size(
 # are calibrated above 1; each path also carries a fixed dispatch cost
 # per query batch. The constants only need to rank the two paths, not
 # predict wall-clock.
+#
+# The hand-set defaults below can be replaced by MEASURED constants:
+# ``benchmarks.run --suite planner --json --calibrate`` fits them from
+# the BENCH_PLANNER.json QPS trajectory (fit_query_constants) and writes
+# them into the artifact's "calibration" key; ``load_calibration`` (or
+# the REPRO_COST_CALIBRATION env var pointing at such a file) installs
+# them, after which ``plan="auto"`` decisions use the fitted values.
 # ---------------------------------------------------------------------------
+
+import json
+import os
 
 DENSE_COST_PER_SLOT = 1.0     # one record-slot scored for one query
 PRUNE_COST_PER_HIT = 6.0      # one posting entry merged on host
 PRUNE_COST_PER_CAND_SLOT = 3.0  # one gather-scored candidate slot
 PRUNE_FIXED_PER_QUERY = 2048.0  # postings probe + ragged dispatch
 
+_CAL_KEYS = ("dense_cost_per_slot", "prune_cost_per_hit",
+             "prune_cost_per_cand_slot", "prune_fixed_per_query")
+_calibration: dict | None = None
+_env_checked = False
+
+
+def set_calibration(cal: dict | None) -> None:
+    """Install fitted query-path constants (None restores the defaults)."""
+    global _calibration
+    if cal is not None:
+        missing = [k for k in _CAL_KEYS if k not in cal]
+        if missing:
+            raise ValueError(f"calibration missing keys: {missing}")
+        cal = {k: float(cal[k]) for k in _CAL_KEYS}
+    _calibration = cal
+
+
+def load_calibration(path: str) -> dict:
+    """Read calibration from a JSON file — either a bare constants dict
+    or a BENCH_PLANNER.json artifact with a "calibration" key — and
+    install it."""
+    with open(path) as f:
+        payload = json.load(f)
+    cal = payload.get("calibration", payload)
+    set_calibration(cal)
+    return cal
+
+
+def calibration() -> dict | None:
+    """The installed calibration, auto-loading $REPRO_COST_CALIBRATION
+    (a path) on first use."""
+    global _env_checked
+    if _calibration is None and not _env_checked:
+        _env_checked = True
+        path = os.environ.get("REPRO_COST_CALIBRATION", "")
+        if path and os.path.exists(path):
+            try:
+                load_calibration(path)
+            except (ValueError, KeyError, json.JSONDecodeError):
+                pass  # malformed artifact: keep hand-set defaults
+    return _calibration
+
 
 def dense_sweep_cost(m: int, capacity: int, gq: int) -> float:
     """Cost of scoring the full [m, Gq] matrix (one index sweep)."""
-    return DENSE_COST_PER_SLOT * float(m) * float(max(capacity, 1)) * max(gq, 1)
+    cal = calibration()
+    a = cal["dense_cost_per_slot"] if cal else DENSE_COST_PER_SLOT
+    return a * float(m) * float(max(capacity, 1)) * max(gq, 1)
 
 
 def pruned_path_cost(hits: int, capacity: int, gq: int) -> float:
     """Cost of merge + ragged verify; ``hits`` = posting entries touched
     by the batch's query hashes/bits (upper-bounds the candidate count)."""
-    return (PRUNE_FIXED_PER_QUERY * max(gq, 1)
-            + PRUNE_COST_PER_HIT * float(hits)
-            + PRUNE_COST_PER_CAND_SLOT * float(hits) * float(max(capacity, 1)))
+    cal = calibration()
+    if cal:
+        f, h, s = (cal["prune_fixed_per_query"], cal["prune_cost_per_hit"],
+                   cal["prune_cost_per_cand_slot"])
+    else:
+        f, h, s = (PRUNE_FIXED_PER_QUERY, PRUNE_COST_PER_HIT,
+                   PRUNE_COST_PER_CAND_SLOT)
+    return (f * max(gq, 1) + h * float(hits)
+            + s * float(hits) * float(max(capacity, 1)))
+
+
+def fit_query_constants(
+    rows: list[dict], m: int, capacity: int,
+) -> dict:
+    """Fit the query-path constants from measured planner-bench rows.
+
+    Rows with ``qps_dense`` anchor the dense model; rows with
+    ``qps_pruned`` + ``mean_probe_hits`` feed the pruned regression
+    (bench_planner adds calibration-only rows at truncated query sizes,
+    because probe hits do NOT vary with threshold — without hit spread
+    the fixed/per-hit split is unidentifiable). The model is per-query
+    seconds
+
+        t_dense  = a · m · capacity
+        t_pruned = fixed + g · hits            (g = per-hit merge+verify)
+
+    expressed in relative units with ``dense_cost_per_slot`` normalized
+    to 1 (only the *ranking* of the two paths matters to the planner).
+    ``g`` splits between per-hit and per-candidate-slot terms in the
+    defaults' proportion, so the fitted model stays comparable across
+    capacities near the calibration point.
+    """
+    t_dense = np.asarray([1.0 / r["qps_dense"] for r in rows
+                          if "qps_dense" in r], np.float64)
+    a = float(t_dense.mean()) / (float(m) * float(max(capacity, 1)))
+
+    pr = [r for r in rows if "qps_pruned" in r and "mean_probe_hits" in r]
+    t_pruned = np.asarray([1.0 / r["qps_pruned"] for r in pr], np.float64)
+    hits = np.asarray([r["mean_probe_hits"] for r in pr], np.float64)
+    if len(pr) >= 2 and np.ptp(hits) > 1e-6 * max(float(hits.max()), 1.0):
+        design = np.stack([np.ones_like(hits), hits], axis=1)
+        (fixed, g), *_ = np.linalg.lstsq(design, t_pruned, rcond=None)
+        fixed, g = max(float(fixed), 0.0), max(float(g), 1e-12)
+    else:
+        # Degenerate spread (constant hits): the split is unidentifiable.
+        # Keep the default fixed cost (converted to measured seconds) and
+        # attribute the remaining measured time to the per-hit term.
+        fixed = a * PRUNE_FIXED_PER_QUERY
+        g = max(float(t_pruned.mean()) - fixed, 1e-12 * a) \
+            / max(float(hits.mean()), 1.0)
+
+    # Split g between merge and verify in the defaults' proportion.
+    h0 = PRUNE_COST_PER_HIT
+    s0 = PRUNE_COST_PER_CAND_SLOT * max(capacity, 1)
+    w = h0 / (h0 + s0)
+    return {
+        "dense_cost_per_slot": 1.0,
+        "prune_fixed_per_query": fixed / a,
+        "prune_cost_per_hit": (g * w) / a,
+        "prune_cost_per_cand_slot": (g * (1.0 - w)) / (a * max(capacity, 1)),
+        "fit": {"m": int(m), "capacity": int(capacity),
+                "seconds_per_unit": a},
+    }
 
 
 # ---------------------------------------------------------------------------

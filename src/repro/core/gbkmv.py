@@ -101,7 +101,10 @@ def build_gbkmv(
     bitmaps = make_bitmaps(records, top)
     sizes = np.asarray([len(rec) for rec in records], dtype=np.int32)
     thr = np.full(m, tau, dtype=np.uint32)
-    packed = pack_rows(kept, thr, sizes, bitmaps=bitmaps, capacity=capacity)
+    from repro.core.arena import SketchArena
+
+    packed = SketchArena.from_pack(
+        pack_rows(kept, thr, sizes, bitmaps=bitmaps, capacity=capacity))
     return GBKMVIndex(sketches=packed, tau=np.uint32(tau), top_elems=top,
                       seed=seed, buffer_bits=r)
 

@@ -45,13 +45,15 @@ def build_gkmv(
     ``capacity`` optionally caps row length (rows above it fall back to a
     lower per-record effective threshold — see sketches.pack_rows).
     """
+    from repro.core.arena import SketchArena
+
     m = len(records)
     hrows = [np.sort(hash_u32_np(np.asarray(r), seed=seed)) for r in records]
     tau = select_global_threshold(hrows, budget)
     kept = [r[r <= tau] for r in hrows]
     sizes = np.asarray([len(r) for r in records], dtype=np.int32)
     thr = np.full(m, tau, dtype=np.uint32)
-    return pack_rows(kept, thr, sizes, capacity=capacity)
+    return SketchArena.from_pack(pack_rows(kept, thr, sizes, capacity=capacity))
 
 
 def sketch_query(

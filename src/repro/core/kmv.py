@@ -21,6 +21,8 @@ def build_kmv(records: Sequence[np.ndarray], budget: int, seed: int = 0) -> Pack
 
     ``budget`` counts hash slots (paper's "number of signatures").
     """
+    from repro.core.arena import SketchArena
+
     m = len(records)
     k = max(budget // max(m, 1), 2)
     rows = []
@@ -31,7 +33,7 @@ def build_kmv(records: Sequence[np.ndarray], budget: int, seed: int = 0) -> Pack
         sizes[i] = len(rec)
     # Plain KMV has no threshold semantics; use PAD-1 so τ_pair never binds.
     thr = np.full(m, PAD - np.uint32(1), dtype=np.uint32)
-    return pack_rows(rows, thr, sizes, capacity=k)
+    return SketchArena.from_pack(pack_rows(rows, thr, sizes, capacity=k))
 
 
 def kmv_distinct_estimate_np(hashes: np.ndarray, k: int) -> float:

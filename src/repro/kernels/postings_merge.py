@@ -1,0 +1,242 @@
+"""Device-resident postings merge: candidate generation for the pruned
+query path without leaving the accelerator.
+
+The host planner merges posting lists with searchsorted + python loops;
+that round-trips every batch through host numpy — exactly the transfer
+the arena exists to kill. Here the same merge runs as three fused
+device stages over the arena's device mirrors:
+
+    probe    for every query hash, its postings row (index + existence)
+             — a chunked compare against the sorted key column
+             (Pallas kernel for ``backend="pallas"``, XLA searchsorted
+             for ``backend="jnp"``)
+    expand   ragged CSR segments → a flat, statically-bounded candidate
+             stream (cumsum + searchsorted ragged-expand; the bound is
+             the batch's total posting hits, known on host *before*
+             candidate generation from the planner's cost probe)
+    score    scatter-add the stream into exact K∩ and o1 count matrices
+             (a posting entry for (h, X) against query Q *is* one shared
+             retained hash / one shared buffer bit — multiplicity is the
+             count), then evaluate the estimator in closed form per
+             cell: n_x, n_q and U₍k₎ come from per-row searchsorted
+             tables against τ_pair, every float op copied from the dense
+             kernel — O(m·Gq) elementwise instead of the dense sweep's
+             O(m·Gq·C·Cq) membership broadcast
+
+The output matrix therefore equals the dense sweep's score matrix
+bit for bit EVERYWHERE: inside the candidate set the counts are the
+dense kernel's counts, outside it K∩ = o1 = 0 which is exactly what the
+dense estimator produces. Packed thresholding over it returns identical
+hits. Everything between staging and the final mask fetch is one jitted
+computation: no host-numpy transfer between candidate generation and
+the packed threshold output (tests assert this with a transfer guard).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import PAD, TWO32
+
+# Probe kernel tiling: query hashes per grid step / key-column chunk.
+QBLOCK = 256
+KCHUNK = 512
+
+
+def _probe_kernel(keys_ref, q_ref, pos_ref, hit_ref):
+    """pos = #keys < q, hit = any(keys == q), per query hash.
+
+    ``keys_ref`` u32[1, Up] (whole padded key column, VMEM-resident),
+    ``q_ref`` u32[1, QBLOCK]. Chunked compare instead of binary search:
+    contiguous loads, no data-dependent addressing — the layout TPUs
+    like. Key padding is PAD, which never matches a real hash and is
+    masked for the (PAD == PAD) query-padding case below.
+    """
+    q = q_ref[0, :]                                     # [B]
+    up = keys_ref.shape[1]
+
+    def body(i, carry):
+        pos, hit = carry
+        chunk = lax.dynamic_slice(keys_ref[...], (0, i * KCHUNK),
+                                  (1, KCHUNK))[0]       # [KCHUNK]
+        pos = pos + jnp.sum(
+            (chunk[None, :] < q[:, None]).astype(jnp.int32), axis=-1)
+        hit = hit | jnp.any(chunk[None, :] == q[:, None], axis=-1)
+        return pos, hit
+
+    b = q.shape[0]
+    pos, hit = lax.fori_loop(
+        0, up // KCHUNK, body,
+        (jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.bool_)))
+    hit = hit & (q != PAD)
+    pos_ref[0, :] = pos
+    hit_ref[0, :] = hit.astype(jnp.int32)
+
+
+def _probe_pallas(keys, q_flat, *, interpret: bool):
+    """(pos i32[n], hit bool[n]) for a flat query-hash vector."""
+    n = q_flat.shape[0]
+    npad = -(-n // QBLOCK) * QBLOCK
+    q2 = jnp.pad(q_flat, (0, npad - n), constant_values=PAD)[None, :]
+    u = keys.shape[0]
+    upad = max(-(-u // KCHUNK) * KCHUNK, KCHUNK)
+    k2 = jnp.pad(keys, (0, upad - u), constant_values=PAD)[None, :]
+
+    pos, hit = pl.pallas_call(
+        _probe_kernel,
+        grid=(npad // QBLOCK,),
+        in_specs=[
+            pl.BlockSpec((1, upad), lambda i: (0, 0)),
+            pl.BlockSpec((1, QBLOCK), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, QBLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, QBLOCK), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, npad), jnp.int32),
+            jax.ShapeDtypeStruct((1, npad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(k2, q2)
+    return pos[0, :n], hit[0, :n].astype(jnp.bool_)
+
+
+def _probe_jnp(keys, q_flat):
+    u = keys.shape[0]
+    pos = jnp.searchsorted(keys, q_flat).astype(jnp.int32)
+    safe = jnp.clip(pos, 0, max(u - 1, 0))
+    hit = (pos < u) & (keys[safe] == q_flat) & (q_flat != PAD) \
+        if u else jnp.zeros(q_flat.shape, jnp.bool_)
+    return pos, hit
+
+
+def _expand(starts, lens, src, src_m_sentinel, pb, s1, cq):
+    """Ragged CSR segments → flat (cand_rec, cand_q, is_tail), length pb.
+
+    ``starts``/``lens`` are flat [Gq * s1] segment descriptors into the
+    concatenated posting source ``src``; slots past the true total get
+    the ``src_m_sentinel`` record id (== num_records, dropped by the
+    scatter's out-of-bounds mode). ``is_tail`` splits hash-posting
+    entries (the first ``cq`` segments of each query) from buffer-bit
+    entries.
+    """
+    cum = jnp.cumsum(lens)
+    total = cum[-1] if lens.shape[0] else jnp.int32(0)
+    out = jnp.arange(pb, dtype=jnp.int32)
+    seg = jnp.searchsorted(cum, out, side="right").astype(jnp.int32)
+    seg_c = jnp.clip(seg, 0, max(lens.shape[0] - 1, 0))
+    within = out - (cum[seg_c] - lens[seg_c])
+    src_idx = jnp.clip(starts[seg_c] + within, 0, max(src.shape[0] - 1, 0))
+    valid = out < total
+    cand_rec = jnp.where(valid, src[src_idx], jnp.int32(src_m_sentinel))
+    cand_q = jnp.where(valid, seg_c // jnp.int32(s1), 0)
+    is_tail = (seg_c % jnp.int32(s1)) < jnp.int32(cq)
+    return cand_rec, cand_q, is_tail
+
+
+def _bits_of(buf):
+    """u32[g, W] packed bitmap → bool[g, W*32] bit matrix."""
+    g, w = buf.shape
+    if w == 0:
+        return jnp.zeros((g, 0), jnp.bool_)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (buf[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(g, w * 32).astype(jnp.bool_)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pb", "m", "backend", "interpret"))
+def pruned_score_matrix(
+    keys, offsets, rec_ids, buf_offsets, buf_rec_ids,
+    x_values, x_thresh, x_buf,
+    q_values, q_thresh, q_buf, q_sizes,
+    *, pb: int, m: int, backend: str = "jnp", interpret: bool = True,
+):
+    """f32[m, Gq] pruned score matrix, computed entirely on device.
+
+    Zero outside the candidate set (= the dense estimator's value
+    there); inside it, exactly the dense kernel's estimator. ``pb``
+    is the static candidate bound — the batch's total posting hits from
+    the host cost probe, bucketed by the caller.
+    """
+    gq, cq = q_values.shape
+    u = keys.shape[0]
+    nnz = rec_ids.shape[0]
+    r = buf_offsets.shape[0] - 1
+
+    # -- probe: postings row per query hash ------------------------------
+    q_flat = q_values.reshape(-1)
+    if backend == "pallas" and u:
+        pos, hit = _probe_pallas(keys, q_flat, interpret=interpret)
+    else:
+        pos, hit = _probe_jnp(keys, q_flat)
+    pos_c = jnp.clip(pos, 0, max(u - 1, 0))
+    seg_start = jnp.where(hit, offsets[pos_c], 0)
+    seg_len = jnp.where(hit, offsets[pos_c + 1] - offsets[pos_c], 0) \
+        if u else jnp.zeros(q_flat.shape, jnp.int32)
+    seg_start = seg_start.reshape(gq, cq)
+    seg_len = seg_len.reshape(gq, cq)
+
+    # -- buffer rows: one segment per set query bit ----------------------
+    if r > 0:
+        bits = _bits_of(q_buf)[:, :r]                       # [Gq, R]
+        blen = (buf_offsets[1:] - buf_offsets[:-1])[None, :]
+        bstart = buf_offsets[:-1][None, :] + jnp.int32(nnz)
+        seg_start = jnp.concatenate(
+            [seg_start, jnp.broadcast_to(bstart, (gq, r))], axis=1)
+        seg_len = jnp.concatenate(
+            [seg_len, jnp.where(bits, blen, 0).astype(jnp.int32)], axis=1)
+    s1 = seg_start.shape[1]
+
+    src = jnp.concatenate([rec_ids, buf_rec_ids]) if r > 0 else rec_ids
+    if src.shape[0] == 0:
+        src = jnp.zeros(1, jnp.int32)
+
+    # -- expand + exact count scatter ------------------------------------
+    cand_rec, cand_q, is_tail = _expand(
+        seg_start.reshape(-1), seg_len.reshape(-1).astype(jnp.int32),
+        src, m, pb, s1, cq)
+    # One tail entry == one shared retained hash (it is ≤ both effective
+    # thresholds by construction, so it IS a live member of the pair);
+    # one buffer entry == one shared frozen bit. Multiplicity is exact.
+    # Single linearized scatter-add for both count families; invalid
+    # lanes carry the out-of-range record sentinel and drop.
+    lin = (cand_rec * jnp.int32(2 * gq) + cand_q * 2
+           + is_tail.astype(jnp.int32))
+    counts = jnp.zeros(m * gq * 2, jnp.int32).at[lin].add(
+        1, mode="drop").reshape(m, gq, 2)
+    o1, kcap = counts[..., 0], counts[..., 1]
+
+    # -- closed-form estimator over the count matrices -------------------
+    # n_x, n_q, U₍k₎ per pair from searchsorted tables against τ_pair
+    # (rows are sorted and duplicate-free, so the insertion point IS the
+    # ≤-count the dense kernel computes); every float op below is copied
+    # from the dense kernel so the matrix matches it bit for bit.
+    tau = jnp.minimum(x_thresh[:, None], q_thresh[None, :])    # [m, Gq]
+    nx = jax.vmap(
+        lambda row, t: jnp.searchsorted(row, t, side="right"))(
+            x_values, tau).astype(jnp.int32)                   # [m, Gq]
+    nq = jax.vmap(
+        lambda row, t: jnp.searchsorted(row, t, side="right"))(
+            q_values, tau.T).astype(jnp.int32).T               # [m, Gq]
+    lx = jnp.take_along_axis(x_values, jnp.maximum(nx - 1, 0), axis=1)
+    lx = jnp.where(nx > 0, lx, jnp.uint32(0))
+    lq = jnp.take_along_axis(q_values, jnp.maximum(nq.T - 1, 0), axis=1)
+    lq = jnp.where(nq.T > 0, lq, jnp.uint32(0)).T
+    u = jnp.maximum(lx, lq)
+    u_unit = (u.astype(jnp.float32) + 1.0) / TWO32
+
+    k = nx + nq - kcap
+    kf = k.astype(jnp.float32)
+    d_hat = (kcap.astype(jnp.float32) / jnp.maximum(kf, 1.0)) * (
+        (kf - 1.0) / jnp.maximum(u_unit, 1e-30))
+    d_hat = jnp.where((k >= 2) & (kcap >= 1), d_hat,
+                      jnp.where(kcap >= 1, kcap.astype(jnp.float32), 0.0))
+    return (o1.astype(jnp.float32) + d_hat) / jnp.maximum(
+        q_sizes.astype(jnp.float32), 1.0)[None, :]

@@ -4,11 +4,16 @@ postings so selective queries stop sweeping the whole index.
     postings.py  CSR hash/buffer-bit postings, incremental under insert
     prune.py     threshold-aware candidate generation + packed hits
     plan.py      per-batch dense-vs-pruned cost decision + executor
+                 (+ pruned_topk: upper-bound-pruned top-k)
+    device.py    device-resident pruned execution over a SketchArena
+                 (candidate merge → gather-score → packed thresholding
+                 with no host round-trip; imported lazily — jax-heavy)
 
 The ragged verify kernel lives with the other Pallas kernels in
-:mod:`repro.kernels.gather_score`. ``repro.api`` threads ``plan=``
+:mod:`repro.kernels.gather_score`, the device candidate merge in
+:mod:`repro.kernels.postings_merge`. ``repro.api`` threads ``plan=``
 ("auto" | "dense" | "pruned") through every sketch engine's
-``query``/``batch_query``.
+``query``/``batch_query``/``topk``.
 """
 
 from repro.planner.plan import (
@@ -17,11 +22,14 @@ from repro.planner.plan import (
     choose_plan,
     normalize_plan,
     pruned_batch,
+    pruned_topk,
 )
 from repro.planner.postings import (
     PostingsIndex,
+    append_rows,
     build_postings,
     postings_equal,
+    truncate_postings,
     update_postings,
 )
 from repro.planner.prune import (
@@ -37,9 +45,12 @@ __all__ = [
     "choose_plan",
     "normalize_plan",
     "pruned_batch",
+    "pruned_topk",
     "PostingsIndex",
+    "append_rows",
     "build_postings",
     "postings_equal",
+    "truncate_postings",
     "update_postings",
     "CandidateSet",
     "candidates_for",

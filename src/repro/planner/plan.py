@@ -4,19 +4,24 @@
 the batch's query hashes, feeds the touched-entry count into the
 core/cost_model.py query-path costs, and picks the cheaper path.
 ``plan="dense"``/``"pruned"`` force a path; ``"auto"`` is the default
-everywhere. Two hard guards keep forced/auto pruning sound:
-
-* thresholds ≤ 0 always run dense — every record trivially clears t, so
-  a filter built on "shares at least one hash/bit" would drop records
-  the dense sweep returns;
-* ``topk`` always runs dense — it needs the full ranking, not a
-  threshold cut (the cost model never routes it through the planner).
+everywhere. One hard guard keeps forced/auto pruning sound: thresholds
+≤ 0 always run dense — every record trivially clears t, so a filter
+built on "shares at least one hash/bit" would drop records the dense
+sweep returns.
 
 ``pruned_batch`` is the shared execution skeleton: generate candidates
 per query, score the ragged union in ONE backend call (the engines pass
 a closure over kernels/gather_score.py or their estimator), and cut at
 the float32-exact threshold so results match the dense sweep bit for
 bit.
+
+``pruned_topk`` extends the same machinery to top-k: candidates come
+from the postings with their containment upper bounds, get scored in
+bound-descending chunks, and scoring stops once the running k-th score
+exceeds every remaining bound — the moving-threshold analogue of the
+fixed-threshold cut. Non-candidates score exactly 0 under the
+estimator, so the result is *identical* to the dense ranking under the
+deterministic (score desc, record id asc) order.
 """
 
 from __future__ import annotations
@@ -42,6 +47,7 @@ class QueryPlan:
     est_pruned: float
     hits: int              # posting entries the batch's hashes/bits touch
     reason: str
+    per_query_hits: np.ndarray | None = None   # int64[Gq] probe breakdown
 
 
 def normalize_plan(plan: str | None) -> str:
@@ -49,6 +55,16 @@ def normalize_plan(plan: str | None) -> str:
     if plan not in PLAN_MODES:
         raise ValueError(f"plan must be one of {PLAN_MODES}, got {plan!r}")
     return plan
+
+
+def unpack_query_rows(qp):
+    """Per-query planner inputs from an already-sketched query pack:
+    (retained-hash rows, buffer-bit rows, query sizes)."""
+    vals, lens = np.asarray(qp.values), np.asarray(qp.lengths)
+    bufs = np.asarray(qp.buf)
+    hash_rows = [vals[g, : lens[g]] for g in range(qp.num_records)]
+    bit_rows = [prune.query_bits(bufs[g]) for g in range(qp.num_records)]
+    return hash_rows, bit_rows, np.asarray(qp.sizes)
 
 
 def gbkmv_plan_queries(core, queries):
@@ -61,11 +77,27 @@ def gbkmv_plan_queries(core, queries):
     from repro.sketchindex.distributed import batch_queries
 
     qp = batch_queries(core, queries)
-    vals, lens = np.asarray(qp.values), np.asarray(qp.lengths)
-    bufs = np.asarray(qp.buf)
-    hash_rows = [vals[g, : lens[g]] for g in range(len(queries))]
-    bit_rows = [prune.query_bits(bufs[g]) for g in range(len(queries))]
-    return qp, hash_rows, bit_rows, np.asarray(qp.sizes)
+    return (qp,) + unpack_query_rows(qp)
+
+
+def probe_hits_per_query(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    q_hash_rows: Sequence[np.ndarray],
+    q_bit_rows: Sequence[np.ndarray],
+) -> np.ndarray:
+    """int64[Gq] posting entries a merge would touch per query —
+    searchsorted, no merge. ``posts`` may be a list (one per shard);
+    entries sum over the mesh."""
+    if isinstance(posts, PostingsIndex):
+        posts = [posts]
+    per = np.zeros(len(q_hash_rows), dtype=np.int64)
+    for post in posts:
+        bl = np.diff(post.buf_offsets)
+        for g, (qh, qb) in enumerate(zip(q_hash_rows, q_bit_rows)):
+            per[g] += int(post.posting_lengths(qh).sum())
+            qb = np.asarray(qb, dtype=np.int64)
+            per[g] += int(bl[qb[qb < len(bl)]].sum())
+    return per
 
 
 def probe_hits(
@@ -73,20 +105,8 @@ def probe_hits(
     q_hash_rows: Sequence[np.ndarray],
     q_bit_rows: Sequence[np.ndarray],
 ) -> int:
-    """Posting entries a merge would touch — searchsorted, no merge.
-
-    ``posts`` may be a list (one per shard); hits sum over the mesh.
-    """
-    if isinstance(posts, PostingsIndex):
-        posts = [posts]
-    hits = 0
-    for post in posts:
-        bl = np.diff(post.buf_offsets)
-        for qh, qb in zip(q_hash_rows, q_bit_rows):
-            hits += int(post.posting_lengths(qh).sum())
-            qb = np.asarray(qb, dtype=np.int64)
-            hits += int(bl[qb[qb < len(bl)]].sum())
-    return hits
+    """Total posting entries a merge would touch for the batch."""
+    return int(probe_hits_per_query(posts, q_hash_rows, q_bit_rows).sum())
 
 
 def choose_plan(
@@ -104,16 +124,18 @@ def choose_plan(
         # Every record passes t ≤ 0; postings can't see zero-overlap pairs.
         return QueryPlan("dense", 0.0, np.inf, 0,
                          "threshold <= 0: pruning unsound, forced dense")
-    hits = probe_hits(posts, q_hash_rows, q_bit_rows)
+    per = probe_hits_per_query(posts, q_hash_rows, q_bit_rows)
+    hits = int(per.sum())
     est_dense = cost_model.dense_sweep_cost(m, capacity, gq)
     est_pruned = cost_model.pruned_path_cost(hits, capacity, gq)
     if plan == "dense":
-        return QueryPlan("dense", est_dense, est_pruned, hits, "forced")
+        return QueryPlan("dense", est_dense, est_pruned, hits, "forced", per)
     if plan == "pruned":
-        return QueryPlan("pruned", est_dense, est_pruned, hits, "forced")
+        return QueryPlan("pruned", est_dense, est_pruned, hits, "forced", per)
     path = "pruned" if est_pruned < est_dense else "dense"
     return QueryPlan(path, est_dense, est_pruned, hits,
-                     f"auto: dense≈{est_dense:.3g} vs pruned≈{est_pruned:.3g}")
+                     f"auto: dense≈{est_dense:.3g} vs pruned≈{est_pruned:.3g}",
+                     per)
 
 
 def merged_candidates(
@@ -186,3 +208,84 @@ def pruned_batch(
         pos += lens[g]
         out.append(c.rec_ids[s >= thr32[g]].astype(np.int64))
     return out, cands
+
+
+def pruned_topk(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    q_hashes: np.ndarray,
+    q_bits: np.ndarray,
+    q_size: int,
+    k: int,
+    score_fn: Callable[[np.ndarray, np.ndarray], np.ndarray],
+    num_records: int,
+    row_offsets: Sequence[int] | None = None,
+    chunk: int | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Top-k via postings-driven upper-bound pruning.
+
+    Candidates are generated at threshold 0 (i.e. every record sharing a
+    retained hash or buffer bit), each carrying the same containment
+    upper bound the threshold filter uses. They are scored in
+    bound-descending chunks; once k scores are in hand and every
+    remaining bound (slack-inflated, so float32 rounding of the dense
+    scores cannot sneak past it) sits strictly below the running k-th
+    score, the rest can neither enter nor tie into the top-k and scoring
+    stops. Records outside the candidate set score exactly 0 under the
+    estimator and fill any shortfall in ascending-id order — matching
+    the dense ranking's deterministic (score desc, id asc) tie rule
+    entry for entry.
+    """
+    k = min(int(k), int(num_records))
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.float32))
+    if k <= 0:
+        return empty
+    gen = merged_candidates(posts, row_offsets)
+    cand = gen(np.asarray(q_hashes, np.uint32), np.asarray(q_bits, np.int64),
+               0.0, int(q_size))
+    n = len(cand.rec_ids)
+
+    scored_ids: list[np.ndarray] = []
+    scored_s: list[np.ndarray] = []
+    if n:
+        bound = prune.tail_bound(np.sort(np.asarray(q_hashes, np.uint32)))
+        ub = (cand.o1.astype(np.float64)
+              + bound[np.minimum(cand.counts, len(bound) - 1)]) \
+            / max(int(q_size), 1) * prune._BOUND_SLACK
+        order = np.argsort(-ub, kind="stable")
+        chunk = int(chunk) if chunk else max(4 * k, 64)
+        kth = -np.inf
+        done = 0
+        pos = 0
+        while pos < n:
+            sel = order[pos : pos + chunk]
+            if done >= k and ub[sel[0]] < kth:
+                break               # bounds descend: nothing left can enter
+            s = np.asarray(score_fn(cand.rec_ids[sel].astype(np.int32),
+                                    np.zeros(len(sel), np.int32)),
+                           dtype=np.float32)
+            scored_ids.append(cand.rec_ids[sel])
+            scored_s.append(s)
+            done += len(sel)
+            pos += len(sel)
+            if done >= k:
+                alls = np.concatenate(scored_s)
+                kth = float(np.partition(alls, len(alls) - k)[len(alls) - k])
+
+    ids = np.concatenate(scored_ids) if scored_ids else np.zeros(0, np.int64)
+    s = np.concatenate(scored_s) if scored_s else np.zeros(0, np.float32)
+    # Zero-scored candidates (possible for plain KMV: a shared value can
+    # fall outside the top-k union) belong to the same tie pool as
+    # non-candidates — keep only positive scores, the zero tail fills by
+    # ascending id below. Whenever scoring stopped early the running
+    # k-th score was positive, so dropped/unscored rows cannot matter.
+    pos_mask = s > 0
+    ids, s = ids[pos_mask], s[pos_mask]
+    order2 = np.lexsort((ids, -s))          # score desc, id asc
+    ids, s = ids[order2][:k], s[order2][:k]
+    if len(ids) < k:
+        # Zero-score records, ascending id — the dense tail among ties at 0.
+        fill = np.setdiff1d(np.arange(num_records, dtype=np.int64),
+                            ids)[: k - len(ids)]
+        ids = np.concatenate([ids, fill])
+        s = np.concatenate([s, np.zeros(len(fill), np.float32)])
+    return ids.astype(np.int64), s.astype(np.float32)

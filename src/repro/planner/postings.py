@@ -136,26 +136,44 @@ def build_postings(sketches: PackedSketches) -> PostingsIndex:
         num_records=m, tau=np.uint32(tau))
 
 
-def update_postings(
-    post: PostingsIndex, sketches: PackedSketches, tau: np.uint32
-) -> PostingsIndex:
-    """Maintain postings across one ``insert`` (deletion + append only).
+def truncate_postings(post: PostingsIndex, tau: np.uint32) -> PostingsIndex:
+    """τ-retighten = prefix truncation of the hash-sorted keyspace.
 
-    ``sketches`` is the repacked index AFTER the insert: rows
-    ``[0, post.num_records)`` are the old records refiltered at the new
-    global threshold ``tau`` (τ only decreases), rows beyond are new.
+    Deletion-only half of the incremental maintenance contract: every key
+    above the new (lower) τ disappears; surviving posting lists are
+    untouched because refiltering a row at τ' keeps exactly its hashes
+    ≤ τ'. The frozen buffer postings never delete.
     """
-    m_new = sketches.num_records
-    m_old = post.num_records
-
-    # -- deletion: τ-retighten = prefix truncation of the sorted keyspace.
     cut = int(np.searchsorted(post.keys, np.uint32(tau), side="right"))
-    keys = post.keys[:cut]
     offsets = post.offsets[: cut + 1]
-    rec_ids = post.rec_ids[: offsets[-1]]
+    return PostingsIndex(
+        keys=post.keys[:cut], offsets=offsets,
+        rec_ids=post.rec_ids[: offsets[-1]],
+        buf_offsets=post.buf_offsets, buf_rec_ids=post.buf_rec_ids,
+        num_records=post.num_records, tau=np.uint32(tau))
 
-    # -- append: merge the new rows' pairs into the truncated CSR.
-    h_new, rec_new = _row_pairs(sketches, slice(m_old, m_new))
+
+def append_rows(
+    post: PostingsIndex,
+    sketches: PackedSketches,
+    lo: int,
+    hi: int,
+    rec_offset: int = 0,
+) -> PostingsIndex:
+    """Append rows ``[lo, hi)`` of ``sketches`` to an existing postings
+    index (the append half of incremental maintenance).
+
+    ``rec_offset`` shifts the appended record ids — shard-local postings
+    pass ``-shard_lo`` so ids stay local to the shard's row slice. The
+    appended ids must exceed every id already present (insert-at-the-end
+    monotonicity), which holds for both the global postings and the
+    per-shard slices because new records always pack after old ones.
+    """
+    keys, offsets, rec_ids = post.keys, post.offsets, post.rec_ids
+
+    # -- tail: merge the new rows' (hash, record) pairs into the CSR.
+    h_new, rec_new = _row_pairs(sketches, slice(lo, hi))
+    rec_new = (rec_new.astype(np.int64) + rec_offset).astype(np.int32)
     if len(h_new):
         order = np.lexsort((rec_new, h_new))
         h_new, rec_new = h_new[order], rec_new[order]
@@ -172,8 +190,8 @@ def update_postings(
     buf_offsets, buf_rec_ids = post.buf_offsets, post.buf_rec_ids
     w = np.asarray(sketches.buf).shape[1]
     if w:
-        new_off, new_recs = _buf_csr(np.asarray(sketches.buf)[m_old:],
-                                     row_offset=m_old)
+        new_off, new_recs = _buf_csr(np.asarray(sketches.buf)[lo:hi],
+                                     row_offset=lo + rec_offset)
         counts = np.diff(new_off)
         at = np.repeat(buf_offsets[1:], counts)
         buf_rec_ids = np.insert(buf_rec_ids, at, new_recs)
@@ -183,7 +201,20 @@ def update_postings(
     return PostingsIndex(
         keys=keys, offsets=offsets, rec_ids=rec_ids.astype(np.int32),
         buf_offsets=buf_offsets, buf_rec_ids=buf_rec_ids,
-        num_records=m_new, tau=np.uint32(tau))
+        num_records=post.num_records + (hi - lo), tau=post.tau)
+
+
+def update_postings(
+    post: PostingsIndex, sketches: PackedSketches, tau: np.uint32
+) -> PostingsIndex:
+    """Maintain postings across one ``insert`` (deletion + append only).
+
+    ``sketches`` is the repacked index AFTER the insert: rows
+    ``[0, post.num_records)`` are the old records refiltered at the new
+    global threshold ``tau`` (τ only decreases), rows beyond are new.
+    """
+    return append_rows(truncate_postings(post, tau), sketches,
+                       post.num_records, sketches.num_records)
 
 
 def postings_equal(a: PostingsIndex, b: PostingsIndex) -> bool:

@@ -163,14 +163,26 @@ def f32_threshold(t) -> np.ndarray:
                     np.nextafter(f, np.float32(np.inf)), f)
 
 
+def mask_to_hits(mask: np.ndarray) -> list[np.ndarray]:
+    """bool[m, Gq] hit mask → per-query sorted id arrays, one vectorized
+    nonzero pass for the whole batch (no per-column python loop)."""
+    mask = np.asarray(mask)
+    if mask.ndim != 2:
+        raise ValueError(f"expected [m, Gq] mask, got {mask.shape}")
+    q_idx, rec_idx = np.nonzero(mask.T)
+    del q_idx  # row-major over queries; splits recover the grouping
+    counts = mask.sum(axis=0)
+    return np.split(rec_idx.astype(np.int64), np.cumsum(counts)[:-1])
+
+
 def threshold_hits_packed(scores, thresholds) -> list[np.ndarray]:
     """Per-query hit ids from a score matrix, comparison at the source.
 
     ``scores`` is f32[m, Gq] — numpy OR a device (jnp) array. The ≥
     comparison runs where the scores live (device-side for jnp: only the
     bool mask crosses to host, 4× less transfer than the float matrix),
-    then one vectorized nonzero pass packs all queries' indices — no
-    per-column python loop. ``thresholds`` is scalar or per-query.
+    then one vectorized nonzero pass packs all queries' indices.
+    ``thresholds`` is scalar or per-query.
     """
     thr = f32_threshold(thresholds)
     if isinstance(scores, np.ndarray):
@@ -180,10 +192,4 @@ def threshold_hits_packed(scores, thresholds) -> list[np.ndarray]:
 
         mask = scores >= (jnp.float32(thr) if thr.ndim == 0
                           else jnp.asarray(thr, jnp.float32)[None, :])
-    mask = np.asarray(mask)
-    if mask.ndim != 2:
-        raise ValueError(f"expected [m, Gq] scores, got {mask.shape}")
-    q_idx, rec_idx = np.nonzero(mask.T)
-    del q_idx  # row-major over queries; splits recover the grouping
-    counts = mask.sum(axis=0)
-    return np.split(rec_idx.astype(np.int64), np.cumsum(counts)[:-1])
+    return mask_to_hits(np.asarray(mask))

@@ -92,12 +92,17 @@ class SketchServer:
 
     ``index`` may be a host GBKMVIndex, a ``repro.api`` GB-KMV index, or
     an already-placed :class:`repro.sketchindex.ShardedIndex` — device
-    placement is the ShardedIndex's job, not the server's.
+    placement is the ShardedIndex's job, not the server's. Every flush
+    executes against the ShardedIndex's resident sketch arena (columns,
+    postings, and device mirrors are owned there and persist across
+    flushes — nothing is repacked per flush; only the query batch moves).
 
     ``plan`` is the planner hint every flush passes down ("auto" |
-    "dense" | "pruned"). It only takes effect for threshold-only serving
-    (``topk=0``): top-k answers need the full ranking, so those flushes
-    always run the dense sweep.
+    "dense" | "pruned"). Threshold serving routes through the planner's
+    filter-and-verify; ``plan="pruned"`` additionally routes top-k
+    answers through postings-driven upper-bound pruning (exact parity
+    with the dense ranking), while "auto" keeps top-k on the dense sweep
+    the batch already amortizes.
     """
 
     def __init__(self, index, mesh=None, max_batch: int = 16,

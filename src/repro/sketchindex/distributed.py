@@ -237,14 +237,16 @@ class ShardedIndex:
 
     def __init__(self, index, mesh: Mesh, backend: str = "jnp",
                  budget: int | None = None):
+        from repro.core.arena import SketchArena
+
         core = getattr(index, "core", index)       # api wrapper or core index
+        core.sketches = SketchArena.from_pack(core.sketches)
         self.host = core
         self.mesh = mesh
         self.backend = backend
         self.budget = budget if budget is not None else getattr(
             index, "budget", None)
         self.didx = to_device_index(core, mesh)
-        self._shard_posts = None       # planner postings, one per row shard
         self.last_plan = None
 
     @property
@@ -253,32 +255,19 @@ class ShardedIndex:
 
     # -- planner plumbing: per-shard postings, candidates unioned --
     def _shard_postings(self):
-        """(postings, row_offsets) matching the device row partition.
+        """(postings, row_offsets) over the arena's record slices.
 
-        One CSR postings index per shard of the record dim; candidate
-        generation probes every shard and unions the (disjoint) results
-        — the host-side mirror of the mesh's all_gather.
+        One CSR postings index per record-offset slice, built from
+        column *views* of the shared arena (no per-shard host copies)
+        and cached on the arena itself — so the host api index and the
+        sharded view maintain ONE postings store. Candidate generation
+        probes every slice and unions the (disjoint) results — the
+        host-side mirror of the mesh's all_gather. After inserts the
+        slices update in place (τ-truncation + append); their boundaries
+        may then lag the mesh's ceil-partition, which is harmless
+        because the union reports global record ids either way.
         """
-        if self._shard_posts is None:
-            from repro import planner
-
-            s: PackedSketches = self.host.sketches
-            m = s.num_records
-            n_dev = self.mesh.devices.size
-            rows = max(-(-m // n_dev), 1)
-            posts, offs = [], []
-            for lo in range(0, m, rows):
-                hi = min(lo + rows, m)
-                sub = PackedSketches(
-                    values=np.asarray(s.values)[lo:hi],
-                    lengths=np.asarray(s.lengths)[lo:hi],
-                    thresh=np.asarray(s.thresh)[lo:hi],
-                    buf=np.asarray(s.buf)[lo:hi],
-                    sizes=np.asarray(s.sizes)[lo:hi])
-                posts.append(planner.build_postings(sub))
-                offs.append(lo)
-            self._shard_posts = (posts, offs)
-        return self._shard_posts
+        return self.host.sketches.shard_postings(self.mesh.devices.size)
 
     def _pruned_batch(self, queries, thresholds, plan: str):
         """Planner route for a batch. Returns (hits, qp): hits is None
@@ -326,10 +315,12 @@ class ShardedIndex:
         """One sweep answering threshold + top-k for a whole batch.
 
         ``thresholds`` is scalar or per-query. Returns one dict per query:
-        {"hits", "topk_ids", "topk_scores"}. With ``k > 0`` the dense
-        sweep is mandatory (top-k needs the full ranking) and the hit
-        masks fall out of the same scores; threshold-only serving
-        (``k == 0``) routes through the planner per ``plan``.
+        {"hits", "topk_ids", "topk_scores"}. ``plan`` routes both halves:
+        threshold hits through the pruned filter-and-verify and — when
+        forced "pruned" — top-k through the planner-aware upper-bound
+        pruning as well. ``plan="auto"`` keeps top-k on the dense sweep
+        (the batch amortizes it and the hit masks fall out of the same
+        scores), matching it bit for bit.
         """
         from repro.planner.prune import threshold_hits_packed
 
@@ -338,15 +329,21 @@ class ShardedIndex:
                               (len(queries),))
         empty_ids = np.zeros(0, np.int64)
         empty_scores = np.zeros(0, np.float32)
-        if k <= 0:
+        if k <= 0 or plan == "pruned":
             hits, qp = self._pruned_batch(queries, thr, plan)
             if hits is None:
                 if qp is None:
                     qp = batch_queries(self.host, queries)
                 scores = score_batch(self.didx, qp, backend=self.backend)
                 hits = threshold_hits_packed(scores[: self.num_records], thr)
-            return [{"hits": h, "topk_ids": empty_ids,
-                     "topk_scores": empty_scores} for h in hits]
+            if k <= 0:
+                return [{"hits": h, "topk_ids": empty_ids,
+                         "topk_scores": empty_scores} for h in hits]
+            # Reuse the batch's query pack: one sketching pass serves
+            # both the threshold hits and every pruned top-k.
+            tops = self._pruned_topk_batch(queries, k, qp=qp)
+            return [{"hits": h, "topk_ids": t[0], "topk_scores": t[1]}
+                    for h, t in zip(hits, tops)]
 
         qp = batch_queries(self.host, queries)
         scores = score_batch(self.didx, qp, backend=self.backend)
@@ -380,7 +377,43 @@ class ShardedIndex:
         s = score_batch(self.didx, qp, backend=self.backend)
         return planner.threshold_hits_packed(s[: self.num_records], threshold)
 
-    def topk(self, q_ids, k: int):
+    def _pruned_topk_batch(self, queries, k: int, qp=None):
+        """Planner-aware top-k for a whole batch over ONE query pack
+        (``qp`` reuses a pack the caller already sketched)."""
+        from repro import planner
+        from repro.kernels import gather_score
+        from repro.planner.plan import unpack_query_rows
+
+        if qp is None:
+            qp = batch_queries(self.host, queries)
+        hash_rows, bit_rows, sizes = unpack_query_rows(qp)
+        posts, offs = self._shard_postings()
+        s: PackedSketches = self.host.sketches
+        out = []
+        for g in range(len(queries)):
+            def score_fn(cand_rec, _cand_q, g=g):
+                return gather_score.score_pairs(
+                    s, qp, cand_rec,
+                    np.full(len(cand_rec), g, np.int32),
+                    backend=self.backend)
+
+            out.append(planner.pruned_topk(
+                posts, hash_rows[g], bit_rows[g], int(sizes[g]), k,
+                score_fn, s.num_records, row_offsets=offs))
+        return out
+
+    def topk(self, q_ids, k: int, *, plan: str = "auto"):
+        """Global top-k. ``plan="pruned"`` routes through the planner's
+        postings-driven upper-bound pruning (host merge over the shard
+        slices + device gather-scoring) with exact parity against the
+        dense mesh sweep; "auto"/"dense" run the sharded sweep +
+        all_gather (``lax.top_k`` breaks ties lower-id-first, the same
+        deterministic order the pruned path produces)."""
+        from repro import planner
+
+        plan = planner.normalize_plan(plan)
+        if plan == "pruned" and k > 0:
+            return self._pruned_topk_batch([np.asarray(q_ids)], k)[0]
         qp = batch_queries(self.host, [np.asarray(q_ids)])
         scores = score_batch(self.didx, qp, backend=self.backend)
         vals, ids = distributed_topk(scores, k, self.mesh)
@@ -389,7 +422,10 @@ class ShardedIndex:
 
     def insert(self, new_records, budget: int | None = None):
         """Dynamic insert on the host sketch (delegated to the api index so
-        budget semantics live in one place), then re-place on the mesh."""
+        budget semantics live in one place), then re-place on the mesh.
+        The arena carries the per-shard postings across the insert
+        incrementally (τ-truncation + append on each slice) — no lazy
+        rebuild."""
         from repro import api
 
         wrapper = api.GBKMVEngine.wrap(
@@ -398,7 +434,6 @@ class ShardedIndex:
         self.host = wrapper.core
         self.stats = wrapper.stats
         self.didx = to_device_index(self.host, self.mesh)
-        self._shard_posts = None   # row partition moved; rebuild lazily
         return self
 
     def save(self, path: str) -> None:

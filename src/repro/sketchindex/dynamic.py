@@ -111,7 +111,13 @@ def insert_records(
         bitmaps = np.zeros((m, s.buf.shape[1]), np.uint32)
         if s.buf.shape[1]:
             bitmaps[:m_old] = np.asarray(s.buf)
-    packed = pack_rows(all_rows, new_thr, sizes, bitmaps=bitmaps)
+    from repro.core.arena import SketchArena
+
+    packed = SketchArena.from_pack(pack_rows(all_rows, new_thr, sizes,
+                                             bitmaps=bitmaps))
+    # Carry cached postings (global + per-shard) forward incrementally:
+    # τ-truncation + append, never a rebuild of old rows.
+    packed.adopt_postings_from(SketchArena.from_pack(s), tau)
 
     stats.inserts += len(new_records)
     if drift_total:

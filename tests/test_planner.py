@@ -203,9 +203,9 @@ def test_plan_guards_and_forcing(corpus, gb_index):
     assert big_m.path == "pruned"    # selective probe vs huge sweep
 
 
-def test_topk_stays_dense(corpus, gb_index):
+def test_topk_scores_match_dense_ranking(corpus, gb_index):
     _, _, queries = corpus
-    ids, scores = gb_index.topk(queries[0], 5)   # no plan routing
+    ids, scores = gb_index.topk(queries[0], 5)   # auto plan routing
     s = gb_index.scores(queries[0])
     np.testing.assert_allclose(scores, np.sort(s)[::-1][:5], rtol=1e-6)
 
