@@ -12,10 +12,13 @@ step), because the planner's whole contract is bit-identical results.
   smokes "numpy" — with jnp/pallas the pruned path runs device-resident
   over the sketch arena).
 * ``baseline`` points at a committed BENCH_PLANNER.json; the run FAILS
-  if pruned-path QPS regresses >20% below it. Machine-speed differences
-  are absorbed by scaling the baseline with the dense-QPS ratio (dense
-  is the stable denominator on any host), so the gate is effectively a
-  speedup-regression gate.
+  if pruned-path QPS regresses below it — >10% for same-backend runs
+  (dense-QPS-ratio normalized, so machine speed cancels out and the
+  gate is effectively "block compression may cost at most 10% pruned
+  QPS"), >20% for cross-backend runs (raw QPS, inherently noisier).
+  Independently of any baseline, the run FAILS if the block-compressed
+  postings exceed ``MAX_POSTINGS_RATIO`` × the packed sketch bytes —
+  the space claim the compressed format exists to hold.
 * ``calibrate`` fits the core/cost_model.py query-path constants from
   the measured QPS (mean_probe_hits feeds the pruned-path model) and
   embeds them under the artifact's "calibration" key —
@@ -39,49 +42,66 @@ from repro.planner.plan import probe_hits_per_query, unpack_query_rows
 
 THRESHOLDS = (0.5, 0.7, 0.9)
 BATCH = 16
-REGRESSION_TOLERANCE = 0.8      # new pruned QPS must be ≥ 0.8 × baseline
+REGRESSION_TOLERANCE = 0.8        # cross-backend: ≥ 0.8 × baseline (raw)
+COMPRESSION_QPS_TOLERANCE = 0.9   # same-backend: ≥ 0.9 × baseline (scaled)
+MAX_POSTINGS_RATIO = 0.6          # compressed postings ≤ 0.6 × sketch bytes
 
 
 def _batches(queries):
     return [queries[i : i + BATCH] for i in range(0, len(queries), BATCH)]
 
 
-def _time_path(index, batches, threshold, plan) -> float:
-    """Seconds for one pass over the workload (after a warmup pass)."""
+def _time_path(index, batches, threshold, plan, repeats: int = 3) -> float:
+    """Best-of-``repeats`` seconds for one pass over the workload (after
+    a warmup pass). Best-of, not mean-of: scheduler noise only ever adds
+    time, so the minimum is the stable estimate the QPS gate needs to
+    stay reproducible across loaded CI machines."""
     for b in batches:                      # warmup: jit caches, postings
         index.batch_query(b, threshold, plan=plan)
-    t0 = time.perf_counter()
-    for b in batches:
-        index.batch_query(b, threshold, plan=plan)
-    return time.perf_counter() - t0
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for b in batches:
+            index.batch_query(b, threshold, plan=plan)
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def check_baseline(rows, baseline_path: str, backend: str) -> list[str]:
     """Compare pruned QPS per threshold against a committed artifact.
 
-    Returns human-readable failure strings (empty = pass). Same-backend
-    runs scale the baseline by the dense-QPS ratio so a slower/faster CI
-    machine doesn't trip the gate (dense is the stable denominator on
-    one backend). A different backend has a different dense/pruned cost
-    structure, so cross-backend runs compare raw pruned QPS instead.
+    Returns human-readable failure strings (empty = pass). The artifact
+    carries per-backend baseline rows (``rows_by_backend``) so every CI
+    matrix cell gates against ITS OWN backend's committed trajectory,
+    scaled by the dense-QPS ratio so a slower/faster CI machine doesn't
+    trip the gate (dense is the stable denominator on one backend) —
+    at ``COMPRESSION_QPS_TOLERANCE``, the "compression may cost at most
+    10% pruned QPS" gate. Backends the artifact has never measured fall
+    back to a raw comparison against the primary rows at the looser
+    ``REGRESSION_TOLERANCE`` (cross-backend cost structures differ).
     """
     with open(baseline_path) as f:
         base = json.load(f)
-    base_rows = {r["threshold"]: r for r in base.get("rows", [])}
-    base_backend = base.get("workload", {}).get("backend", "jnp")
+    by_backend = base.get("rows_by_backend", {})
+    if backend in by_backend:
+        base_rows = {r["threshold"]: r for r in by_backend[backend]}
+        same = True
+    else:
+        base_rows = {r["threshold"]: r for r in base.get("rows", [])}
+        same = backend == base.get("workload", {}).get("backend", "jnp")
     failures = []
     for r in rows:
         b = base_rows.get(r["threshold"])
         if b is None:
             continue
-        scale = (r["qps_dense"] / max(b["qps_dense"], 1e-9)
-                 if backend == base_backend else 1.0)
-        floor = REGRESSION_TOLERANCE * b["qps_pruned"] * scale
+        scale = r["qps_dense"] / max(b["qps_dense"], 1e-9) if same else 1.0
+        tol = COMPRESSION_QPS_TOLERANCE if same else REGRESSION_TOLERANCE
+        floor = tol * b["qps_pruned"] * scale
         if r["qps_pruned"] < floor:
             failures.append(
                 f"t={r['threshold']}: pruned QPS {r['qps_pruned']:.1f} < "
                 f"floor {floor:.1f} (baseline {b['qps_pruned']:.1f} × "
-                f"scale {scale:.2f} × {REGRESSION_TOLERANCE})")
+                f"scale {scale:.2f} × {tol})")
     return failures
 
 
@@ -106,6 +126,23 @@ def run(quick: bool = True, json_out: str | None = None,
     post = index._postings()
     probe = probe_hits_per_query(post, hash_rows, bit_rows)
 
+    # Space accounting for the block-compressed postings: at-rest bytes
+    # vs the packed sketch columns, plus the flat-CSR bytes the same
+    # lists would cost (keys + int64 row pointers + int32 entries).
+    arena = index._sketch_pack()
+    sketch_b = arena.sketch_nbytes()
+    post_b = post.nbytes()
+    flat_b = (int(post.keys.nbytes) + 8 * (len(post.keys) + 1)
+              + 4 * post.nnz + 8 * (post.buf.num_rows + 1)
+              + 4 * post.buf.nnz)
+    postings_info = {
+        "postings_nbytes": int(post_b),
+        "sketch_nbytes": int(sketch_b),
+        "postings_ratio": round(post_b / max(sketch_b, 1), 4),
+        "flat_equiv_nbytes": int(flat_b),
+        "compression_vs_flat": round(flat_b / max(post_b, 1), 2),
+    }
+
     rows = []
     for t in THRESHOLDS:
         dense = index.batch_query(queries, t, plan="dense")
@@ -115,9 +152,9 @@ def run(quick: bool = True, json_out: str | None = None,
                 raise RuntimeError(
                     f"planner parity broken at t={t}, query {j}: "
                     f"dense={d.tolist()} pruned={p.tolist()}")
-        cand_sizes = [
-            len(candidates_for(post, qh, qb, t, int(qs)).rec_ids)
-            for qh, qb, qs in zip(hash_rows, bit_rows, q_sizes)]
+        cands = [candidates_for(post, qh, qb, t, int(qs))
+                 for qh, qb, qs in zip(hash_rows, bit_rows, q_sizes)]
+        cand_sizes = [len(c.rec_ids) for c in cands]
         dt_dense = _time_path(index, batches, t, "dense")
         dt_pruned = _time_path(index, batches, t, "pruned")
         rows.append({
@@ -128,17 +165,38 @@ def run(quick: bool = True, json_out: str | None = None,
             "mean_candidates": round(float(np.mean(cand_sizes)), 2),
             "candidate_frac": round(float(np.mean(cand_sizes)) / m, 5),
             "mean_probe_hits": round(float(probe.mean()), 2),
+            "mean_blocks": round(float(np.mean([c.blocks for c in cands])), 2),
+            "mean_skipped_blocks": round(
+                float(np.mean([c.skipped_blocks for c in cands])), 2),
             "mean_hits": float(np.mean([len(d) for d in dense])),
             "parity": True,
         })
 
     write_csv("planner.csv", rows)
+    print(f"  postings: {post_b} B compressed vs {flat_b} B flat "
+          f"({postings_info['compression_vs_flat']}×), "
+          f"{postings_info['postings_ratio']}× sketch bytes")
 
     failures = []
+    if postings_info["postings_ratio"] > MAX_POSTINGS_RATIO:
+        failures.append(
+            f"compressed postings are {postings_info['postings_ratio']}× "
+            f"the packed sketch bytes (cap {MAX_POSTINGS_RATIO}): "
+            f"{post_b} B vs {sketch_b} B")
     if baseline and os.path.exists(baseline):
-        failures = check_baseline(rows, baseline, backend)
+        failures += check_baseline(rows, baseline, backend)
 
     if json_out:
+        # Carry other backends' committed rows forward so the artifact
+        # keeps one same-backend baseline per CI matrix cell.
+        by_backend = {}
+        if os.path.exists(json_out):
+            try:
+                with open(json_out) as f:
+                    by_backend = dict(json.load(f).get("rows_by_backend", {}))
+            except (json.JSONDecodeError, OSError):
+                by_backend = {}
+        by_backend[backend] = rows
         payload = {
             "suite": "planner",
             "profile": "quick" if quick else "full",
@@ -148,7 +206,9 @@ def run(quick: bool = True, json_out: str | None = None,
                 "n_queries": nq, "batch": BATCH, "engine": "gbkmv",
                 "backend": backend,
             },
+            "postings": postings_info,
             "rows": rows,
+            "rows_by_backend": by_backend,
         }
         if calibrate:
             from repro.core import cost_model
@@ -178,6 +238,6 @@ def run(quick: bool = True, json_out: str | None = None,
 
     if failures:
         raise RuntimeError(
-            "pruned-path QPS regressed below the committed baseline:\n  "
+            "planner gates failed (QPS baseline / postings-bytes cap):\n  "
             + "\n  ".join(failures))
     return rows

@@ -184,15 +184,19 @@ class _IndexBase:
             "(gbkmv/gkmv/kmv/lshe) only")
 
 
-_ARENA_VERSION = 2
+_ARENA_VERSION = 3
+
+# Per-store npz key suffixes for the blocked postings (v3 format).
+_STORE_FIELDS = ("row_blocks", "first", "last", "meta", "off", "payload")
 
 
 def _arena_to_npz(s: PackedSketches) -> dict:
     """Arena serialization: the packed columns plus — when they have been
-    built — the CSR postings, so a reloaded index answers its first
-    pruned query without re-inverting the sketches. Column keys are
-    unchanged from the v1 (postings-less) format, which is what keeps
-    old files loadable."""
+    built — the BLOCKED postings (delta-bitpacked/dense blocks, the same
+    arrays that sit in host memory and mirror to device), so a reloaded
+    index answers its first pruned query without re-inverting the
+    sketches. Column keys are unchanged from the v1 (postings-less)
+    format, which is what keeps old files loadable."""
     d = {
         "values": np.asarray(s.values), "lengths": np.asarray(s.lengths),
         "thresh": np.asarray(s.thresh), "buf": np.asarray(s.buf),
@@ -201,28 +205,44 @@ def _arena_to_npz(s: PackedSketches) -> dict:
     }
     post = getattr(s, "_post", None)
     if post is not None:
-        d.update(
-            post_keys=post.keys, post_offsets=post.offsets,
-            post_rec_ids=post.rec_ids, post_buf_offsets=post.buf_offsets,
-            post_buf_rec_ids=post.buf_rec_ids,
-            post_tau=np.uint32(post.tau))
+        d["post_keys"] = post.keys
+        d["post_tau"] = np.uint32(post.tau)
+        for prefix, store in (("post_blk_", post.tail),
+                              ("post_buf_blk_", post.buf)):
+            for f in _STORE_FIELDS:
+                d[prefix + f] = getattr(store, f)
     return d
 
 
 def _arena_from_npz(d: dict) -> SketchArena:
-    """Rebuild an arena from ``_arena_to_npz`` output *or* a legacy v1
-    file (same column keys, no ``post_*`` entries → postings stay lazy)."""
+    """Rebuild an arena from ``_arena_to_npz`` output or any older format:
+
+    v3  ``post_blk_*`` / ``post_buf_blk_*`` blocked stores — loaded
+        verbatim (zero re-encoding work)
+    v2  flat-CSR ``post_offsets``/``post_rec_ids``/... — re-encoded into
+        blocks on load (one vectorized pass)
+    v1  no ``post_*`` entries — postings stay lazy
+    """
     arena = SketchArena(
         values=d["values"], lengths=d["lengths"], thresh=d["thresh"],
         buf=d["buf"], sizes=d["sizes"])
-    if "post_keys" in d:
-        from repro.planner.postings import PostingsIndex
+    if "post_blk_row_blocks" in d:
+        from repro.planner.postings import BlockStore, PostingsIndex
 
+        stores = {}
+        for name, prefix in (("tail", "post_blk_"), ("buf", "post_buf_blk_")):
+            stores[name] = BlockStore(
+                **{f: d[prefix + f] for f in _STORE_FIELDS})
         arena.install_postings(PostingsIndex(
-            keys=d["post_keys"], offsets=d["post_offsets"],
-            rec_ids=d["post_rec_ids"], buf_offsets=d["post_buf_offsets"],
-            buf_rec_ids=d["post_buf_rec_ids"],
+            keys=d["post_keys"], tail=stores["tail"], buf=stores["buf"],
             num_records=arena.num_records, tau=np.uint32(d["post_tau"])))
+    elif "post_keys" in d:
+        from repro.planner.postings import from_flat
+
+        arena.install_postings(from_flat(
+            d["post_keys"], d["post_offsets"], d["post_rec_ids"],
+            d["post_buf_offsets"], d["post_buf_rec_ids"],
+            arena.num_records, np.uint32(d["post_tau"])))
     return arena
 
 
@@ -333,7 +353,7 @@ class _PlannedIndexMixin:
             self.last_candidate_sizes = None
             return planner_device.pruned_batch_device(
                 SketchArena.from_pack(s), qp, threshold,
-                hits=decision.hits, backend=self.backend)
+                plan=decision, backend=self.backend)
         ids, cands = planner.pruned_batch(
             self._post, hash_rows, bit_rows, sizes, threshold,
             self._pair_score_fn(qp))

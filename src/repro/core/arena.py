@@ -11,9 +11,11 @@ spoke a postings-less dialect. :class:`SketchArena` is the single owner:
     columns    the structure-of-arrays pack (values / lengths / thresh /
                buf / sizes) — a :class:`PackedSketches` subclass, so
                every existing reader of a pack reads an arena unchanged
-    postings   the CSR hash + buffer-bit inverted index over the columns
-               (planner/postings.py layout), built once, maintained
-               incrementally across inserts
+    postings   the block-compressed hash + buffer-bit inverted index over
+               the columns (planner/postings.py delta-bitpacked / dense
+               block layout), built once, maintained incrementally
+               across inserts — the single at-rest, on-device, and
+               on-disk postings format
     shards     per-record-slice postings views for ``ShardedIndex``
                (column *views*, never copies), maintained incrementally
     device     cached jnp mirrors of columns and postings so the pruned
@@ -41,18 +43,29 @@ from repro.core.sketches import PackedSketches
 
 @dataclasses.dataclass
 class DevicePostings:
-    """jnp mirrors of a PostingsIndex's CSR columns (device residency).
+    """jnp mirrors of the blocked postings' TAIL store (device residency).
 
-    Offsets are int32 on device (nnz < 2³¹ — the host index would not
+    Only the hash-keyed tail blocks cross to the accelerator: the pruned
+    device path recovers the exact buffer intersections o1 directly from
+    the packed bitmaps already resident in the device pack (the same
+    popcount the dense kernel runs), so the buffer posting lists — the
+    bulk of the flat index's bytes — never need a mirror at all. Offsets
+    are int32 on device (payload words < 2³¹ — the host index would not
     fit in memory long before that bound binds).
     """
 
     keys: object          # u32[U]
-    offsets: object       # i32[U+1]
-    rec_ids: object       # i32[nnz]
-    buf_offsets: object   # i32[R+1]
-    buf_rec_ids: object   # i32[bnnz]
+    row_blocks: object    # i32[U+1]  block range per key
+    first: object         # i32[NB]   min record id per block
+    meta: object          # u32[NB]   count-1 | bitwidth<<8 | kind<<13
+    off: object           # i32[NB+1] payload word offsets
+    payload: object       # u32[P]    bitpacked block bodies
     num_records: int
+
+    def nbytes(self) -> int:
+        return sum(int(np.asarray(a).nbytes) for a in (
+            self.keys, self.row_blocks, self.first, self.meta,
+            self.off, self.payload))
 
 
 @dataclasses.dataclass
@@ -183,19 +196,52 @@ class SketchArena(PackedSketches):
         return self._dev_pack
 
     def device_postings(self) -> DevicePostings:
-        """jnp mirror of the postings CSR — placed once, then resident."""
+        """jnp mirror of the blocked tail store — placed once, then
+        resident. Buffer postings stay host-only (o1 comes from the
+        device pack's bitmaps), so the mirror is a fraction of the flat
+        CSR it replaced."""
         import jax.numpy as jnp
 
         post = self.postings()
         if self._dev_post is None:
+            t = post.tail
             self._dev_post = DevicePostings(
                 keys=jnp.asarray(post.keys),
-                offsets=jnp.asarray(post.offsets, jnp.int32),
-                rec_ids=jnp.asarray(post.rec_ids, jnp.int32),
-                buf_offsets=jnp.asarray(post.buf_offsets, jnp.int32),
-                buf_rec_ids=jnp.asarray(post.buf_rec_ids, jnp.int32),
+                row_blocks=jnp.asarray(t.row_blocks, jnp.int32),
+                first=jnp.asarray(t.first, jnp.int32),
+                meta=jnp.asarray(t.meta, jnp.uint32),
+                off=jnp.asarray(t.off, jnp.int32),
+                payload=jnp.asarray(t.payload, jnp.uint32),
                 num_records=post.num_records)
         return self._dev_post
+
+    # -- space accounting --------------------------------------------------
+
+    def sketch_nbytes(self) -> int:
+        """The packed sketch columns alone (the paper's space budget)."""
+        return super().nbytes()
+
+    def postings_nbytes(self) -> int:
+        """At-rest bytes of the blocked postings (built if absent)."""
+        return self.postings().nbytes()
+
+    def nbytes(self) -> int:
+        """Honest total: columns + every derived structure currently
+        materialized (global postings, per-shard slices, device mirrors
+        of both the columns and the postings). The space–accuracy
+        benchmarks charge the index for the bytes that make it fast,
+        not only for the sketch payload."""
+        total = super().nbytes()
+        if self._post is not None:
+            total += self._post.nbytes()
+        if self._shard_posts is not None:
+            _, posts = self._shard_posts
+            total += sum(p.nbytes() for p in posts)
+        if self._dev_pack is not None:
+            total += self._dev_pack.nbytes()
+        if self._dev_post is not None:
+            total += self._dev_post.nbytes()
+        return total
 
 
 # An arena IS a pack — let it cross jit boundaries the same way (caches

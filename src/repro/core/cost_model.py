@@ -142,9 +142,12 @@ import json
 import os
 
 DENSE_COST_PER_SLOT = 1.0     # one record-slot scored for one query
-PRUNE_COST_PER_HIT = 6.0      # one posting entry merged on host
+PRUNE_COST_PER_HIT = 6.0      # one posting entry decoded + merged on host
 PRUNE_COST_PER_CAND_SLOT = 3.0  # one gather-scored candidate slot
 PRUNE_FIXED_PER_QUERY = 2048.0  # postings probe + ragged dispatch
+PRUNE_COST_PER_BLOCK = 12.0   # block header check + bitpack/bitmap decode
+                              # setup (the compressed-postings merge pays
+                              # per touched block, not only per entry)
 
 _CAL_KEYS = ("dense_cost_per_slot", "prune_cost_per_hit",
              "prune_cost_per_cand_slot", "prune_fixed_per_query")
@@ -153,13 +156,23 @@ _env_checked = False
 
 
 def set_calibration(cal: dict | None) -> None:
-    """Install fitted query-path constants (None restores the defaults)."""
+    """Install fitted query-path constants (None restores the defaults).
+
+    ``prune_cost_per_block`` is optional: fits from pre-block artifacts
+    fold block-decode time into the per-hit constant (hits and touched
+    blocks are strongly collinear on one workload), so a missing key
+    means 0.0 under calibration — never the hand-set default on top of
+    an already-inclusive fitted per-hit cost.
+    """
     global _calibration
     if cal is not None:
         missing = [k for k in _CAL_KEYS if k not in cal]
         if missing:
             raise ValueError(f"calibration missing keys: {missing}")
-        cal = {k: float(cal[k]) for k in _CAL_KEYS}
+        installed = {k: float(cal[k]) for k in _CAL_KEYS}
+        installed["prune_cost_per_block"] = float(
+            cal.get("prune_cost_per_block", 0.0))
+        cal = installed
     _calibration = cal
 
 
@@ -196,17 +209,22 @@ def dense_sweep_cost(m: int, capacity: int, gq: int) -> float:
     return a * float(m) * float(max(capacity, 1)) * max(gq, 1)
 
 
-def pruned_path_cost(hits: int, capacity: int, gq: int) -> float:
-    """Cost of merge + ragged verify; ``hits`` = posting entries touched
-    by the batch's query hashes/bits (upper-bounds the candidate count)."""
+def pruned_path_cost(hits: int, capacity: int, gq: int,
+                     blocks: int = 0) -> float:
+    """Cost of block decode + merge + ragged verify; ``hits`` = posting
+    entries touched by the batch's query hashes/bits (upper-bounds the
+    candidate count), ``blocks`` = compressed posting blocks those
+    entries live in (each pays a header check + decode setup)."""
     cal = calibration()
     if cal:
-        f, h, s = (cal["prune_fixed_per_query"], cal["prune_cost_per_hit"],
-                   cal["prune_cost_per_cand_slot"])
+        f, h, s, b = (cal["prune_fixed_per_query"],
+                      cal["prune_cost_per_hit"],
+                      cal["prune_cost_per_cand_slot"],
+                      cal["prune_cost_per_block"])
     else:
-        f, h, s = (PRUNE_FIXED_PER_QUERY, PRUNE_COST_PER_HIT,
-                   PRUNE_COST_PER_CAND_SLOT)
-    return (f * max(gq, 1) + h * float(hits)
+        f, h, s, b = (PRUNE_FIXED_PER_QUERY, PRUNE_COST_PER_HIT,
+                      PRUNE_COST_PER_CAND_SLOT, PRUNE_COST_PER_BLOCK)
+    return (f * max(gq, 1) + h * float(hits) + b * float(blocks)
             + s * float(hits) * float(max(capacity, 1)))
 
 

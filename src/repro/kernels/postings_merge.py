@@ -1,35 +1,50 @@
-"""Device-resident postings merge: candidate generation for the pruned
-query path without leaving the accelerator.
+"""Device-resident postings merge over BLOCK-COMPRESSED postings:
+candidate generation for the pruned query path without leaving the
+accelerator — and without ever materializing the flat posting lists.
 
-The host planner merges posting lists with searchsorted + python loops;
-that round-trips every batch through host numpy — exactly the transfer
-the arena exists to kill. Here the same merge runs as three fused
-device stages over the arena's device mirrors:
+The host planner decodes blocks with vectorized numpy; that round-trips
+every batch through host memory — exactly the transfer the arena exists
+to kill. Here the same merge runs as fused device stages over the
+arena's blocked tail mirror:
 
     probe    for every query hash, its postings row (index + existence)
              — a chunked compare against the sorted key column
              (Pallas kernel for ``backend="pallas"``, XLA searchsorted
              for ``backend="jnp"``)
-    expand   ragged CSR segments → a flat, statically-bounded candidate
-             stream (cumsum + searchsorted ragged-expand; the bound is
-             the batch's total posting hits, known on host *before*
-             candidate generation from the planner's cost probe)
-    score    scatter-add the stream into exact K∩ and o1 count matrices
-             (a posting entry for (h, X) against query Q *is* one shared
-             retained hash / one shared buffer bit — multiplicity is the
-             count), then evaluate the estimator in closed form per
-             cell: n_x, n_q and U₍k₎ come from per-row searchsorted
-             tables against τ_pair, every float op copied from the dense
-             kernel — O(m·Gq) elementwise instead of the dense sweep's
+    expand   matched rows' block ranges → a flat, statically-bounded
+             stream of block tasks (cumsum + searchsorted ragged-expand;
+             the bound is the batch's touched-block count, known on host
+             *before* candidate generation from the planner's header
+             probe)
+    decode   each task's block body → up to 128 record ids. Sparse
+             bodies unpack their bitpacked deltas and prefix-sum back to
+             ids (the Pallas block-decode kernel for ``"pallas"`` — one
+             task per grid step, one dynamic-slice DMA of the body, a
+             one-hot word select instead of a data-dependent gather — or
+             a vectorized jnp twin); the rare dense-bitmap bodies
+             rank-select their set bits through a masked scatter
+             (``tbd`` static bound, compiled out when the batch touches
+             none)
+    score    scatter-add the decoded stream into the exact K∩ count
+             matrix (a posting entry for (h, X) against query Q *is* one
+             shared retained hash — multiplicity is the count), take the
+             exact o1 matrix straight from the resident packed bitmaps
+             (the dense kernel's own popcount — which is why the buffer
+             posting lists never need a device mirror at all), then
+             evaluate the estimator in closed form per cell: n_x, n_q
+             and U₍k₎ come from per-row searchsorted tables against
+             τ_pair, every float op copied from the dense kernel —
+             O(m·Gq) elementwise instead of the dense sweep's
              O(m·Gq·C·Cq) membership broadcast
 
 The output matrix therefore equals the dense sweep's score matrix
 bit for bit EVERYWHERE: inside the candidate set the counts are the
-dense kernel's counts, outside it K∩ = o1 = 0 which is exactly what the
-dense estimator produces. Packed thresholding over it returns identical
-hits. Everything between staging and the final mask fetch is one jitted
-computation: no host-numpy transfer between candidate generation and
-the packed threshold output (tests assert this with a transfer guard).
+dense kernel's counts, outside it K∩ = 0 and o1 is the identical
+popcount, which is exactly what the dense estimator produces. Packed
+thresholding over it returns identical hits. Everything between staging
+and the final mask fetch is one jitted computation: no host-numpy
+transfer between candidate generation and the packed threshold output
+(tests assert this with a transfer guard).
 """
 
 from __future__ import annotations
@@ -42,10 +57,15 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core.hashing import PAD, TWO32
+from repro.planner.postings import BLOCK, DENSE_MAX_WORDS
 
 # Probe kernel tiling: query hashes per grid step / key-column chunk.
 QBLOCK = 256
 KCHUNK = 512
+# Sparse block bodies span at most ceil(127·31/32) = 124 payload words;
+# one 128-word window therefore always covers a body (plus slack the
+# payload is padded with), so the decode kernel's DMA has a static size.
+DECODE_WINDOW = 128
 
 
 def _probe_kernel(keys_ref, q_ref, pos_ref, hit_ref):
@@ -58,7 +78,6 @@ def _probe_kernel(keys_ref, q_ref, pos_ref, hit_ref):
     masked for the (PAD == PAD) query-padding case below.
     """
     q = q_ref[0, :]                                     # [B]
-    up = keys_ref.shape[1]
 
     def body(i, carry):
         pos, hit = carry
@@ -70,6 +89,7 @@ def _probe_kernel(keys_ref, q_ref, pos_ref, hit_ref):
         return pos, hit
 
     b = q.shape[0]
+    up = keys_ref.shape[1]
     pos, hit = lax.fori_loop(
         0, up // KCHUNK, body,
         (jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.bool_)))
@@ -116,59 +136,147 @@ def _probe_jnp(keys, q_flat):
     return pos, hit
 
 
-def _expand(starts, lens, src, src_m_sentinel, pb, s1, cq):
-    """Ragged CSR segments → flat (cand_rec, cand_q, is_tail), length pb.
+# ---------------------------------------------------------------------------
+# block decode: sparse bodies (the common kind)
+# ---------------------------------------------------------------------------
 
-    ``starts``/``lens`` are flat [Gq * s1] segment descriptors into the
-    concatenated posting source ``src``; slots past the true total get
-    the ``src_m_sentinel`` record id (== num_records, dropped by the
-    scatter's out-of-bounds mode). ``is_tail`` splits hash-posting
-    entries (the first ``cq`` segments of each query) from buffer-bit
-    entries.
+
+def _block_decode_kernel(first_ref, off_ref, bw_ref, cnt_ref,
+                         payload_ref, out_ref):
+    """Decode ONE sparse block task per grid step.
+
+    One dynamic-slice DMA pulls the block's ``DECODE_WINDOW``-word body
+    out of the payload column; deltas unpack via a one-hot word select
+    (a [127, 128] masked max — VPU-shaped work, no data-dependent
+    addressing) and a prefix sum turns them back into record ids. All
+    arithmetic is 32-bit: the two straddled words recombine with
+    shift-or instead of a 64-bit widen, because TPUs would rather not.
+    Lanes past the block's count carry garbage and are masked by the
+    caller (shared with the jnp twin).
     """
-    cum = jnp.cumsum(lens)
-    total = cum[-1] if lens.shape[0] else jnp.int32(0)
-    out = jnp.arange(pb, dtype=jnp.int32)
-    seg = jnp.searchsorted(cum, out, side="right").astype(jnp.int32)
-    seg_c = jnp.clip(seg, 0, max(lens.shape[0] - 1, 0))
-    within = out - (cum[seg_c] - lens[seg_c])
-    src_idx = jnp.clip(starts[seg_c] + within, 0, max(src.shape[0] - 1, 0))
-    valid = out < total
-    cand_rec = jnp.where(valid, src[src_idx], jnp.int32(src_m_sentinel))
-    cand_q = jnp.where(valid, seg_c // jnp.int32(s1), 0)
-    is_tail = (seg_c % jnp.int32(s1)) < jnp.int32(cq)
-    return cand_rec, cand_q, is_tail
+    first = first_ref[0, 0]
+    off = off_ref[0, 0]
+    bw = bw_ref[0, 0].astype(jnp.uint32)
+    cnt = cnt_ref[0, 0]
+
+    body = lax.dynamic_slice(payload_ref[...], (0, off),
+                             (1, DECODE_WINDOW))            # u32[1, W]
+    p = lax.broadcasted_iota(jnp.int32, (1, BLOCK - 1), 1)  # [1, 127]
+    bitpos = p * bw_ref[0, 0]
+    widx = bitpos >> 5
+    lanes = lax.broadcasted_iota(jnp.int32, (1, DECODE_WINDOW), 1)
+    sel0 = widx[0][:, None] == lanes[0][None, :]            # [127, W]
+    sel1 = (widx[0] + 1)[:, None] == lanes[0][None, :]
+    w0 = jnp.max(jnp.where(sel0, body[0][None, :], jnp.uint32(0)), axis=1)
+    w1 = jnp.max(jnp.where(sel1, body[0][None, :], jnp.uint32(0)), axis=1)
+
+    sh = (bitpos[0] & 31).astype(jnp.uint32)
+    lo = w0 >> sh
+    hi = jnp.where(sh > 0,
+                   w1 << ((jnp.uint32(32) - sh) & jnp.uint32(31)),
+                   jnp.uint32(0))
+    mask = jnp.where(bw > 0, (jnp.uint32(1) << bw) - jnp.uint32(1),
+                     jnp.uint32(0))
+    v = ((lo | hi) & mask).astype(jnp.int32)
+    v = jnp.where(p[0] < cnt - 1, v, 0)[None, :]
+    ids = first + jnp.concatenate(
+        [jnp.zeros((1, 1), jnp.int32), jnp.cumsum(v, axis=1)], axis=1)
+    out_ref[0, :] = ids[0]
 
 
-def _bits_of(buf):
-    """u32[g, W] packed bitmap → bool[g, W*32] bit matrix."""
-    g, w = buf.shape
-    if w == 0:
-        return jnp.zeros((g, 0), jnp.bool_)
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = (buf[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
-    return bits.reshape(g, w * 32).astype(jnp.bool_)
+def _decode_sparse_pallas(first, off, bw, cnt, payload, *, interpret: bool):
+    """i32[tb, BLOCK] raw sparse-decoded ids (Pallas, one task/step)."""
+    tb = first.shape[0]
+    out = pl.pallas_call(
+        _block_decode_kernel,
+        grid=(tb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, payload.shape[0]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tb, BLOCK), jnp.int32),
+        interpret=interpret,
+    )(first[:, None], off[:, None], bw[:, None], cnt[:, None],
+      payload[None, :])
+    return out
+
+
+def _decode_sparse_jnp(first, off, bw, cnt, payload):
+    """jnp twin of the decode kernel: same 32-bit math, XLA gathers."""
+    pmax = payload.shape[0] - 1
+    p = jnp.arange(BLOCK - 1, dtype=jnp.int32)[None, :]     # [1, 127]
+    bitpos = p * bw[:, None]                                # [tb, 127]
+    w = off[:, None] + (bitpos >> 5)
+    w0 = payload[jnp.clip(w, 0, pmax)]
+    w1 = payload[jnp.clip(w + 1, 0, pmax)]
+    sh = (bitpos & 31).astype(jnp.uint32)
+    lo = w0 >> sh
+    hi = jnp.where(sh > 0,
+                   w1 << ((jnp.uint32(32) - sh) & jnp.uint32(31)),
+                   jnp.uint32(0))
+    bwu = bw.astype(jnp.uint32)[:, None]
+    mask = jnp.where(bwu > 0, (jnp.uint32(1) << bwu) - jnp.uint32(1),
+                     jnp.uint32(0))
+    v = ((lo | hi) & mask).astype(jnp.int32)
+    v = jnp.where(p < cnt[:, None] - 1, v, 0)
+    zeros = jnp.zeros((first.shape[0], 1), jnp.int32)
+    return first[:, None] + jnp.concatenate(
+        [zeros, jnp.cumsum(v, axis=1)], axis=1)
+
+
+def _dense_overlay(ids, task_first, task_off, task_wcnt, task_kind,
+                   payload, order_key, *, tbd: int, m: int):
+    """Overwrite the (rare) dense-bitmap tasks' lanes with rank-selected
+    set-bit ids. ``tbd`` statically bounds the dense task count (host
+    header probe); the kind-major order makes every dense task land in
+    the first ``tbd`` slots of ``order``."""
+    order = jnp.argsort(order_key)[:tbd]
+    offs = task_off[order]
+    wcnt = task_wcnt[order]
+    pmax = payload.shape[0] - 1
+    wi = offs[:, None] + jnp.arange(DENSE_MAX_WORDS, dtype=jnp.int32)[None, :]
+    words = payload[jnp.clip(wi, 0, pmax)]
+    words = jnp.where(
+        jnp.arange(DENSE_MAX_WORDS, dtype=jnp.int32)[None, :] < wcnt[:, None],
+        words, jnp.uint32(0))
+    bits = ((words[:, :, None] >> jnp.arange(32, dtype=jnp.uint32))
+            & jnp.uint32(1)).astype(jnp.int32).reshape(tbd, -1)
+    rank = jnp.cumsum(bits, axis=1)                     # [tbd, DW*32]
+    col = jnp.where((bits == 1) & (rank <= BLOCK), rank - 1, BLOCK)
+    j = jnp.arange(DENSE_MAX_WORDS * 32, dtype=jnp.int32)[None, :]
+    vals = task_first[order][:, None] + j
+    row = jnp.arange(tbd, dtype=jnp.int32)[:, None] + jnp.zeros_like(col)
+    dense_ids = jnp.full((tbd, BLOCK + 1), m, jnp.int32) \
+        .at[row.reshape(-1), col.reshape(-1)].set(vals.reshape(-1))[:, :BLOCK]
+    keep = (task_kind[order] == 1)[:, None]
+    return ids.at[order].set(jnp.where(keep, dense_ids, ids[order]))
 
 
 @functools.partial(
-    jax.jit, static_argnames=("pb", "m", "backend", "interpret"))
+    jax.jit, static_argnames=("tb", "tbd", "m", "backend", "interpret"))
 def pruned_score_matrix(
-    keys, offsets, rec_ids, buf_offsets, buf_rec_ids,
+    keys, row_blocks, blk_first, blk_meta, blk_off, payload,
     x_values, x_thresh, x_buf,
     q_values, q_thresh, q_buf, q_sizes,
-    *, pb: int, m: int, backend: str = "jnp", interpret: bool = True,
+    *, tb: int, tbd: int, m: int, backend: str = "jnp",
+    interpret: bool = True,
 ):
     """f32[m, Gq] pruned score matrix, computed entirely on device.
 
-    Zero outside the candidate set (= the dense estimator's value
-    there); inside it, exactly the dense kernel's estimator. ``pb``
-    is the static candidate bound — the batch's total posting hits from
-    the host cost probe, bucketed by the caller.
+    Zero K∩ outside the candidate set (= the dense estimator's value
+    there) and the dense kernel's own o1 everywhere; inside the
+    candidate set, exactly the dense kernel's estimator. ``tb`` is the
+    static block-task bound and ``tbd`` the dense-block-task bound —
+    both from the host header probe, bucketed by the caller (``tbd=0``
+    compiles the dense overlay out entirely).
     """
     gq, cq = q_values.shape
     u = keys.shape[0]
-    nnz = rec_ids.shape[0]
-    r = buf_offsets.shape[0] - 1
+    nb = blk_first.shape[0]
 
     # -- probe: postings row per query hash ------------------------------
     q_flat = q_values.reshape(-1)
@@ -177,41 +285,68 @@ def pruned_score_matrix(
     else:
         pos, hit = _probe_jnp(keys, q_flat)
     pos_c = jnp.clip(pos, 0, max(u - 1, 0))
-    seg_start = jnp.where(hit, offsets[pos_c], 0)
-    seg_len = jnp.where(hit, offsets[pos_c + 1] - offsets[pos_c], 0) \
-        if u else jnp.zeros(q_flat.shape, jnp.int32)
-    seg_start = seg_start.reshape(gq, cq)
-    seg_len = seg_len.reshape(gq, cq)
+    if u:
+        seg_start = jnp.where(hit, row_blocks[pos_c], 0)
+        seg_nblk = jnp.where(hit, row_blocks[pos_c + 1] - row_blocks[pos_c],
+                             0)
+    else:
+        seg_start = jnp.zeros(q_flat.shape, jnp.int32)
+        seg_nblk = jnp.zeros(q_flat.shape, jnp.int32)
 
-    # -- buffer rows: one segment per set query bit ----------------------
-    if r > 0:
-        bits = _bits_of(q_buf)[:, :r]                       # [Gq, R]
-        blen = (buf_offsets[1:] - buf_offsets[:-1])[None, :]
-        bstart = buf_offsets[:-1][None, :] + jnp.int32(nnz)
-        seg_start = jnp.concatenate(
-            [seg_start, jnp.broadcast_to(bstart, (gq, r))], axis=1)
-        seg_len = jnp.concatenate(
-            [seg_len, jnp.where(bits, blen, 0).astype(jnp.int32)], axis=1)
-    s1 = seg_start.shape[1]
+    # -- expand: matched rows' block ranges → flat block-task stream -----
+    cum = jnp.cumsum(seg_nblk)
+    total = cum[-1] if seg_nblk.shape[0] else jnp.int32(0)
+    out = jnp.arange(tb, dtype=jnp.int32)
+    seg = jnp.searchsorted(cum, out, side="right").astype(jnp.int32)
+    seg_c = jnp.clip(seg, 0, max(seg_nblk.shape[0] - 1, 0))
+    within = out - (cum[seg_c] - seg_nblk[seg_c])
+    valid = out < total
+    task_blk = jnp.where(valid, seg_start[seg_c] + within, nb)  # nb=sentinel
+    task_q = jnp.where(valid, seg_c // jnp.int32(max(cq, 1)), 0)
 
-    src = jnp.concatenate([rec_ids, buf_rec_ids]) if r > 0 else rec_ids
-    if src.shape[0] == 0:
-        src = jnp.zeros(1, jnp.int32)
+    # Sentinel block: first = m (every lane drops), count 1, no body.
+    first_s = jnp.concatenate([blk_first, jnp.full((1,), m, jnp.int32)])
+    meta_s = jnp.concatenate([blk_meta, jnp.zeros((1,), jnp.uint32)])
+    off_s = jnp.concatenate([blk_off, blk_off[-1:]])
+    pay = jnp.pad(payload, (0, DECODE_WINDOW)) if payload.shape[0] \
+        else jnp.zeros(DECODE_WINDOW, jnp.uint32)
 
-    # -- expand + exact count scatter ------------------------------------
-    cand_rec, cand_q, is_tail = _expand(
-        seg_start.reshape(-1), seg_len.reshape(-1).astype(jnp.int32),
-        src, m, pb, s1, cq)
-    # One tail entry == one shared retained hash (it is ≤ both effective
-    # thresholds by construction, so it IS a live member of the pair);
-    # one buffer entry == one shared frozen bit. Multiplicity is exact.
-    # Single linearized scatter-add for both count families; invalid
-    # lanes carry the out-of-range record sentinel and drop.
-    lin = (cand_rec * jnp.int32(2 * gq) + cand_q * 2
-           + is_tail.astype(jnp.int32))
-    counts = jnp.zeros(m * gq * 2, jnp.int32).at[lin].add(
-        1, mode="drop").reshape(m, gq, 2)
-    o1, kcap = counts[..., 0], counts[..., 1]
+    t_first = first_s[task_blk]
+    t_meta = meta_s[task_blk]
+    t_off = off_s[task_blk]
+    t_wcnt = off_s[jnp.minimum(task_blk + 1, nb)] - t_off
+    t_cnt = (t_meta & jnp.uint32(0x7F)).astype(jnp.int32) + 1
+    t_bw = ((t_meta >> jnp.uint32(8)) & jnp.uint32(0x1F)).astype(jnp.int32)
+    t_kind = ((t_meta >> jnp.uint32(13)) & jnp.uint32(1)).astype(jnp.int32)
+
+    # -- decode: block bodies → ids [tb, BLOCK] --------------------------
+    if backend == "pallas":
+        ids = _decode_sparse_pallas(t_first, t_off, t_bw, t_cnt, pay,
+                                    interpret=interpret)
+    else:
+        ids = _decode_sparse_jnp(t_first, t_off, t_bw, t_cnt, pay)
+    if tbd:
+        # Kind-major, position-minor key: every dense task sorts into
+        # the first tbd slots deterministically (no stable-sort needed).
+        order_key = (1 - t_kind) * jnp.int32(tb + 1) + out
+        ids = _dense_overlay(ids, t_first, t_off, t_wcnt, t_kind, pay,
+                             order_key, tbd=tbd, m=m)
+    lanes = jnp.arange(BLOCK, dtype=jnp.int32)[None, :]
+    ids = jnp.where(lanes < t_cnt[:, None], ids, m)
+
+    # -- exact count scatter + bitmap o1 ---------------------------------
+    # One decoded entry == one shared retained hash (it is ≤ both
+    # effective thresholds by construction, so it IS a live member of
+    # the pair); multiplicity is exact. Sentinel/invalid lanes carry the
+    # out-of-range record id m and drop.
+    lin = ids * jnp.int32(gq) + task_q[:, None]
+    kcap = jnp.zeros(m * gq, jnp.int32).at[lin.reshape(-1)].add(
+        1, mode="drop").reshape(m, gq)
+    if x_buf.shape[1]:
+        o1 = jnp.sum(lax.population_count(
+            x_buf[:, None, :] & q_buf[None, :, :]), axis=-1).astype(jnp.int32)
+    else:
+        o1 = jnp.zeros((m, gq), jnp.int32)
 
     # -- closed-form estimator over the count matrices -------------------
     # n_x, n_q, U₍k₎ per pair from searchsorted tables against τ_pair
@@ -229,8 +364,8 @@ def pruned_score_matrix(
     lx = jnp.where(nx > 0, lx, jnp.uint32(0))
     lq = jnp.take_along_axis(q_values, jnp.maximum(nq.T - 1, 0), axis=1)
     lq = jnp.where(nq.T > 0, lq, jnp.uint32(0)).T
-    u = jnp.maximum(lx, lq)
-    u_unit = (u.astype(jnp.float32) + 1.0) / TWO32
+    uu = jnp.maximum(lx, lq)
+    u_unit = (uu.astype(jnp.float32) + 1.0) / TWO32
 
     k = nx + nq - kcap
     kf = k.astype(jnp.float32)

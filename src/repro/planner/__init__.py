@@ -1,16 +1,19 @@
 """Candidate-pruning query planner: filter-and-verify over inverted
 postings so selective queries stop sweeping the whole index.
 
-    postings.py  CSR hash/buffer-bit postings, incremental under insert
-    prune.py     threshold-aware candidate generation + packed hits
+    postings.py  block-compressed hash/buffer-bit postings (128-entry
+                 delta-bitpacked or dense-bitmap blocks), incremental
+                 under insert
+    prune.py     threshold-aware candidate generation with per-block
+                 header skipping + packed hits
     plan.py      per-batch dense-vs-pruned cost decision + executor
                  (+ pruned_topk: upper-bound-pruned top-k)
     device.py    device-resident pruned execution over a SketchArena
-                 (candidate merge → gather-score → packed thresholding
+                 (block decode → gather-score → packed thresholding
                  with no host round-trip; imported lazily — jax-heavy)
 
 The ragged verify kernel lives with the other Pallas kernels in
-:mod:`repro.kernels.gather_score`, the device candidate merge in
+:mod:`repro.kernels.gather_score`, the device block-decode/merge in
 :mod:`repro.kernels.postings_merge`. ``repro.api`` threads ``plan=``
 ("auto" | "dense" | "pruned") through every sketch engine's
 ``query``/``batch_query``/``topk``.
@@ -21,13 +24,20 @@ from repro.planner.plan import (
     QueryPlan,
     choose_plan,
     normalize_plan,
+    probe_block_stats,
     pruned_batch,
     pruned_topk,
 )
 from repro.planner.postings import (
+    BLOCK,
+    BlockStore,
     PostingsIndex,
     append_rows,
     build_postings,
+    decode_blocks,
+    decode_store,
+    encode_store,
+    from_flat,
     postings_equal,
     truncate_postings,
     update_postings,
@@ -44,11 +54,18 @@ __all__ = [
     "QueryPlan",
     "choose_plan",
     "normalize_plan",
+    "probe_block_stats",
     "pruned_batch",
     "pruned_topk",
+    "BLOCK",
+    "BlockStore",
     "PostingsIndex",
     "append_rows",
     "build_postings",
+    "decode_blocks",
+    "decode_store",
+    "encode_store",
+    "from_flat",
     "postings_equal",
     "truncate_postings",
     "update_postings",

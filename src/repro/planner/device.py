@@ -1,12 +1,20 @@
 """Device-resident pruned execution over a :class:`SketchArena`.
 
 The contract the arena makes possible: with ``backend`` ∈ {"jnp",
-"pallas"}, ``plan="pruned"`` runs candidate generation → gather-scoring
-→ packed thresholding as ONE device computation over the arena's
-resident mirrors. The only host work is *before* candidate generation
-(query sketching, the cost probe that fixes the static candidate bound,
-staging the query pack) and *after* the packed threshold output (the
-final bool-mask fetch that every path, dense included, pays once).
+"pallas"}, ``plan="pruned"`` runs candidate generation (block-task
+expand + on-device block decode) → gather-scoring → packed thresholding
+as ONE device computation over the arena's resident mirrors. The only
+host work is *before* candidate generation (query sketching, the header
+probe that fixes the static block-task bounds, staging the query pack)
+and *after* the packed threshold output (the final bool-mask fetch that
+every path, dense included, pays once).
+
+The mirrors are the BLOCKED postings: compressed blocks upload, decode
+on device (kernels/postings_merge.py), and never materialize a flat
+posting list anywhere — the compression that shrinks the at-rest index
+also shrinks what the arena ships to the accelerator. Buffer posting
+lists don't ship at all: the device path recovers o1 from the packed
+bitmaps already resident in the device pack.
 
 ``stage_query_inputs`` / ``pruned_scores`` are split exactly at those
 seams so tests can wrap the middle in ``jax.transfer_guard("disallow")``
@@ -36,7 +44,8 @@ def stage_query_inputs(arena: SketchArena, qp, thresholds=None):
     Returns (device_postings, device_pack, device query columns, device
     float32-exact thresholds — or None when ``thresholds`` is None). The
     arena mirrors are cached — only the query pack actually moves per
-    batch; the index columns and postings move once per mutation.
+    batch; the index columns and blocked postings move once per
+    mutation.
     """
     import jax.numpy as jnp
 
@@ -62,51 +71,68 @@ def stage_query_inputs(arena: SketchArena, qp, thresholds=None):
     return dpost, dpack, dq, dthr
 
 
-def pruned_scores(dpost, dpack, dq, *, pb: int, m: int, backend: str):
+def pruned_scores(dpost, dpack, dq, *, tb: int, tbd: int, m: int,
+                  backend: str):
     """f32[m, Gq] device score matrix — no host transfer inside.
 
-    Candidate merge (kernels/postings_merge.py probe + ragged expand),
-    gather-scoring, and the scatter into the dense matrix are one jitted
-    call over already-resident inputs.
+    Block-task expand, block decode (kernels/postings_merge.py probe +
+    decode kernel), the K∩ scatter, the bitmap o1 popcount, and the
+    closed-form estimator are one jitted call over already-resident
+    inputs. ``tb``/``tbd`` are the static (bucketed) block-task bounds
+    from the host header probe.
     """
     from repro.kernels import postings_merge
     from repro.kernels.ops import _on_tpu
 
     qv, qt, qb, qs = dq
     return postings_merge.pruned_score_matrix(
-        dpost.keys, dpost.offsets, dpost.rec_ids,
-        dpost.buf_offsets, dpost.buf_rec_ids,
+        dpost.keys, dpost.row_blocks, dpost.first, dpost.meta,
+        dpost.off, dpost.payload,
         dpack.values, dpack.thresh, dpack.buf,
         qv, qt, qb, qs,
-        pb=pb, m=m, backend=backend, interpret=not _on_tpu())
+        tb=tb, tbd=tbd, m=m, backend=backend, interpret=not _on_tpu())
 
 
-def pruned_hit_mask(dpost, dpack, dq, dthr, *, pb: int, m: int,
+def pruned_hit_mask(dpost, dpack, dq, dthr, *, tb: int, tbd: int, m: int,
                     backend: str):
-    """bool[m, Gq] device hit mask — candidate-gen → score → packed
-    thresholding with no host transfer anywhere in between (the staged
-    ``dthr`` already encodes the float32-exact cut)."""
-    s = pruned_scores(dpost, dpack, dq, pb=pb, m=m, backend=backend)
+    """bool[m, Gq] device hit mask — candidate-gen → block decode →
+    score → packed thresholding with no host transfer anywhere in
+    between (the staged ``dthr`` already encodes the float32-exact
+    cut)."""
+    s = pruned_scores(dpost, dpack, dq, tb=tb, tbd=tbd, m=m,
+                      backend=backend)
     return s >= dthr[None, :]
 
 
+def task_bounds(plan) -> tuple[int, int]:
+    """(tb, tbd) static decode bounds from a :class:`QueryPlan`'s header
+    probe — bucketed so steady-state serving reuses compiled shapes;
+    ``tbd`` stays 0 when the batch touches no dense blocks (the overlay
+    compiles out)."""
+    tb = _bucket(max(int(plan.tail_blocks), 1))
+    tbd = _bucket(int(plan.tail_dense_blocks), lo=8) \
+        if int(plan.tail_dense_blocks) else 0
+    return tb, tbd
+
+
 def pruned_batch_device(
-    arena: SketchArena, qp, threshold, *, hits: int, backend: str,
+    arena: SketchArena, qp, threshold, *, plan, backend: str,
 ) -> list[np.ndarray]:
     """Device-resident filter-and-verify for one query batch.
 
-    ``hits`` is the batch's total posting entries from the planner's
-    host-side cost probe (``QueryPlan.hits``) — it upper-bounds the
-    candidate stream, so the static shape is known before any device
-    work starts. Returns per-query hit ids, bit-identical to the dense
-    sweep (same estimator math, same packed float32-exact thresholding).
+    ``plan`` is the batch's :class:`QueryPlan`: its host-side header
+    probe (``hits``, ``tail_blocks``, ``tail_dense_blocks``) fixes every
+    static shape before any device work starts. Returns per-query hit
+    ids, bit-identical to the dense sweep (same estimator math, same
+    packed float32-exact thresholding).
     """
     gq = qp.num_records
     m = arena.num_records
-    if hits <= 0 or m == 0:
+    if plan.hits <= 0 or m == 0:
         return [np.zeros(0, np.int64) for _ in range(gq)]
 
     dpost, dpack, dq, dthr = stage_query_inputs(arena, qp, threshold)
-    mask = pruned_hit_mask(dpost, dpack, dq, dthr, pb=_bucket(int(hits)),
+    tb, tbd = task_bounds(plan)
+    mask = pruned_hit_mask(dpost, dpack, dq, dthr, tb=tb, tbd=tbd,
                            m=m, backend=backend)
     return prune.mask_to_hits(np.asarray(mask))

@@ -48,6 +48,9 @@ class QueryPlan:
     hits: int              # posting entries the batch's hashes/bits touch
     reason: str
     per_query_hits: np.ndarray | None = None   # int64[Gq] probe breakdown
+    blocks: int = 0               # posting blocks touched (tail + buffer)
+    tail_blocks: int = 0          # tail blocks touched (device expand bound)
+    tail_dense_blocks: int = 0    # of which dense-bitmap blocks
 
 
 def normalize_plan(plan: str | None) -> str:
@@ -80,24 +83,59 @@ def gbkmv_plan_queries(core, queries):
     return (qp,) + unpack_query_rows(qp)
 
 
+def _probe(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    q_hash_rows: Sequence[np.ndarray],
+    q_bit_rows: Sequence[np.ndarray],
+) -> tuple[np.ndarray, int, int, int]:
+    """ONE key-probe pass over the batch: (per-query posting entries,
+    tail_blocks, tail_dense_blocks, buf_blocks).
+
+    Header arithmetic only (cached row lengths, row_blocks diffs, a
+    dense-kind cumsum) — nothing decodes, the buffer store included.
+    The tail block numbers also fix the device path's static block-task
+    bounds BEFORE any device work starts, preserving the stage/compute
+    transfer seam. ``posts`` may be a list (one per shard); everything
+    sums over the mesh.
+    """
+    if isinstance(posts, PostingsIndex):
+        posts = [posts]
+    per = np.zeros(len(q_hash_rows), dtype=np.int64)
+    tb = td = bb = 0
+    for post in posts:
+        keys = post.keys
+        row_lens = post.tail_row_lengths()
+        buf_lens = post.buf_row_lengths()
+        rbt = post.tail.row_blocks.astype(np.int64)
+        dcum = np.concatenate(
+            [[0], np.cumsum((post.tail.meta >> np.uint32(13))
+                            & np.uint32(1))]).astype(np.int64)
+        rbb = post.buf.row_blocks.astype(np.int64)
+        for g, (qh, qb) in enumerate(zip(q_hash_rows, q_bit_rows)):
+            h = np.asarray(qh, dtype=np.uint32)
+            pos = np.searchsorted(keys, h)
+            ok = pos < len(keys)
+            hit = np.zeros(len(h), dtype=bool)
+            hit[ok] = keys[pos[ok]] == h[ok]
+            r = pos[hit]
+            per[g] += int(row_lens[r].sum())
+            tb += int((rbt[r + 1] - rbt[r]).sum())
+            td += int((dcum[rbt[r + 1]] - dcum[rbt[r]]).sum())
+            qb = np.asarray(qb, dtype=np.int64)
+            qb = qb[qb < post.buf.num_rows]
+            per[g] += int(buf_lens[qb].sum())
+            bb += int((rbb[qb + 1] - rbb[qb]).sum())
+    return per, tb, td, bb
+
+
 def probe_hits_per_query(
     posts: PostingsIndex | Sequence[PostingsIndex],
     q_hash_rows: Sequence[np.ndarray],
     q_bit_rows: Sequence[np.ndarray],
 ) -> np.ndarray:
     """int64[Gq] posting entries a merge would touch per query —
-    searchsorted, no merge. ``posts`` may be a list (one per shard);
-    entries sum over the mesh."""
-    if isinstance(posts, PostingsIndex):
-        posts = [posts]
-    per = np.zeros(len(q_hash_rows), dtype=np.int64)
-    for post in posts:
-        bl = np.diff(post.buf_offsets)
-        for g, (qh, qb) in enumerate(zip(q_hash_rows, q_bit_rows)):
-            per[g] += int(post.posting_lengths(qh).sum())
-            qb = np.asarray(qb, dtype=np.int64)
-            per[g] += int(bl[qb[qb < len(bl)]].sum())
-    return per
+    searchsorted + header arithmetic, no merge, no decode."""
+    return _probe(posts, q_hash_rows, q_bit_rows)[0]
 
 
 def probe_hits(
@@ -107,6 +145,15 @@ def probe_hits(
 ) -> int:
     """Total posting entries a merge would touch for the batch."""
     return int(probe_hits_per_query(posts, q_hash_rows, q_bit_rows).sum())
+
+
+def probe_block_stats(
+    posts: PostingsIndex | Sequence[PostingsIndex],
+    q_hash_rows: Sequence[np.ndarray],
+    q_bit_rows: Sequence[np.ndarray],
+) -> tuple[int, int, int]:
+    """(tail_blocks, tail_dense_blocks, buf_blocks) the batch touches."""
+    return _probe(posts, q_hash_rows, q_bit_rows)[1:]
 
 
 def choose_plan(
@@ -124,18 +171,22 @@ def choose_plan(
         # Every record passes t ≤ 0; postings can't see zero-overlap pairs.
         return QueryPlan("dense", 0.0, np.inf, 0,
                          "threshold <= 0: pruning unsound, forced dense")
-    per = probe_hits_per_query(posts, q_hash_rows, q_bit_rows)
+    per, tb, td, bb = _probe(posts, q_hash_rows, q_bit_rows)
     hits = int(per.sum())
     est_dense = cost_model.dense_sweep_cost(m, capacity, gq)
-    est_pruned = cost_model.pruned_path_cost(hits, capacity, gq)
+    est_pruned = cost_model.pruned_path_cost(hits, capacity, gq,
+                                             blocks=tb + bb)
+    blk = dict(blocks=tb + bb, tail_blocks=tb, tail_dense_blocks=td)
     if plan == "dense":
-        return QueryPlan("dense", est_dense, est_pruned, hits, "forced", per)
+        return QueryPlan("dense", est_dense, est_pruned, hits, "forced",
+                         per, **blk)
     if plan == "pruned":
-        return QueryPlan("pruned", est_dense, est_pruned, hits, "forced", per)
+        return QueryPlan("pruned", est_dense, est_pruned, hits, "forced",
+                         per, **blk)
     path = "pruned" if est_pruned < est_dense else "dense"
     return QueryPlan(path, est_dense, est_pruned, hits,
                      f"auto: dense≈{est_dense:.3g} vs pruned≈{est_pruned:.3g}",
-                     per)
+                     per, **blk)
 
 
 def merged_candidates(
@@ -162,6 +213,8 @@ def merged_candidates(
             o1=np.concatenate([c.o1 for c in parts]),
             hits=sum(c.hits for c in parts),
             pruned=sum(c.pruned for c in parts),
+            blocks=sum(c.blocks for c in parts),
+            skipped_blocks=sum(c.skipped_blocks for c in parts),
         )
 
     return gen

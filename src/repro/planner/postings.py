@@ -1,4 +1,5 @@
-"""CSR-packed inverted index over retained sketch hashes + buffer bits.
+"""Block-compressed inverted index over retained sketch hashes + buffer
+bits — the arena's single at-rest, on-device, and on-disk postings format.
 
 The filter half of the planner's filter-and-verify pipeline: a record X
 can share tail mass with Q only through hash values *both* sketches
@@ -7,28 +8,58 @@ so postings over exactly those two keyspaces enumerate every record with
 a non-zero estimated intersection (prune.py turns the match counts into
 a sound containment upper bound).
 
-Layout (all host numpy, built once from a :class:`PackedSketches`):
+The flat CSR layout of PR 2/3 stored one int32 per posting entry plus
+int64 row pointers — ~2× the sketch bytes at planner-bench scale. The
+b-bit minwise observation (Li & König) applies here unchanged: posting
+entries are *sorted record ids*, so consecutive deltas need ~log2(gap)
+bits, not 32. Layout (all host numpy, per :class:`BlockStore`):
 
-    keys       uint32[U]    distinct retained hash values, ascending
-    offsets    int64[U+1]   CSR row pointers into rec_ids
-    rec_ids    int32[nnz]   record ids per key, ascending within a key
-    buf_offsets int64[R+1]  one row per frozen buffer bit (R = W·32)
-    buf_rec_ids int32[bnnz] record ids with that bit set, ascending
+    row_blocks int32[nrows+1]  CSR over BLOCKS: row r owns blocks
+                               row_blocks[r] : row_blocks[r+1]
+    first      int32[NB]       min record id in the block (= its 1st id)
+    last       int32[NB]       max record id in the block (= its last id)
+    meta       uint32[NB]      (count-1) | bitwidth << 8 | kind << 13
+    off        int64[NB+1]     payload word offsets per block
+    payload    uint32[P]       bitpacked block bodies
+
+Each block covers up to ``BLOCK`` (128) consecutive entries of one row.
+Two roaring-style body kinds, chosen per block by encoded size:
+
+    sparse (kind 0)   count-1 deltas ``id[i] - id[i-1]``, bitpacked at
+                      the block's max-delta bitwidth (0 bits when the
+                      block holds one entry or only duplicate ids)
+    dense  (kind 1)   a bitmap of ``last - first + 1`` bits; chosen only
+                      when strictly smaller than sparse AND the ids are
+                      strictly ascending (a bitmap cannot represent the
+                      duplicate ids a 32-bit hash collision inside one
+                      record produces)
+
+A :class:`PostingsIndex` is ``keys`` (distinct retained hash values,
+ascending) + a tail store (one row per key) + a buffer store (one row
+per frozen buffer bit). ``offsets``/``rec_ids``/``buf_offsets``/
+``buf_rec_ids`` survive as lazily-decoded *views* so structural tests
+and host debugging read the classic CSR; the blocked arrays are what is
+stored, mirrored to device, and serialized.
 
 Incremental maintenance under ``insert`` (sketchindex/dynamic.py): the
 fixed budget only ever *lowers* τ, and after an insert every stored row
 holds exactly its old hashes ≤ τ' — so maintenance is
 
-    deletion:  drop every posting with key > τ'. Keys are sorted by hash
-               value, so this is a prefix truncation, O(1) + one slice.
-    append:    merge the new rows' (hash, record) pairs into the CSR
-               (one np.insert pass — new record ids exceed all old ids,
-               so within-key ascending order is preserved for free); the
-               frozen top-r buffer never deletes, new rows append at
-               each bit's segment end.
+    deletion:  drop every posting row with key > τ'. Keys are sorted by
+               hash value and blocks are laid out in key order, so this
+               is a prefix truncation of keys, blocks, AND payload —
+               O(1) + slices.
+    append:    new record ids exceed every stored id, so only rows that
+               actually receive entries change; their blocks re-encode
+               (full 128-entry blocks are byte-identical to a fresh
+               rebuild's, because blocks are independent and the
+               segmentation boundaries are deterministic) and splice
+               back between untouched block runs with one vectorized
+               gather. The frozen top-r buffer never deletes.
 
 No raw-data access and no re-hashing of old rows, mirroring the dynamic
-index's own τ-retightening contract.
+index's own τ-retightening contract; incremental update == fresh
+rebuild, structurally, block for block (tests assert it).
 """
 
 from __future__ import annotations
@@ -39,33 +70,347 @@ import numpy as np
 
 from repro.core.sketches import PackedSketches
 
+BLOCK = 128          # max entries per block
+_BW_SHIFT = 8        # meta bit layout: count-1 [0:7], bitwidth [8:13],
+_KIND_SHIFT = 13     # kind [13]
+_CNT_MASK = np.uint32(0x7F)
+_BW_MASK = np.uint32(0x1F)
+# Dense bodies never exceed this many words: sparse needs at most
+# ceil(127·31/32) = 124 words, and dense is only chosen when strictly
+# smaller — so a static 124-word window always covers a dense body
+# (the device decode relies on this bound).
+DENSE_MAX_WORDS = 124
+
 
 @dataclasses.dataclass
-class PostingsIndex:
-    """Inverted postings over one engine's packed sketches."""
+class BlockStore:
+    """One keyspace's block-compressed posting lists."""
 
-    keys: np.ndarray          # uint32[U]
-    offsets: np.ndarray       # int64[U+1]
-    rec_ids: np.ndarray       # int32[nnz]
-    buf_offsets: np.ndarray   # int64[R+1]
-    buf_rec_ids: np.ndarray   # int32[bnnz]
-    num_records: int
-    tau: np.uint32            # max retained key at build/update time
+    row_blocks: np.ndarray   # int32[nrows+1]
+    first: np.ndarray        # int32[NB]
+    last: np.ndarray         # int32[NB]
+    meta: np.ndarray         # uint32[NB]
+    off: np.ndarray          # int64[NB+1]
+    payload: np.ndarray      # uint32[P]
+
+    @property
+    def num_rows(self) -> int:
+        return len(self.row_blocks) - 1
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.first)
+
+    def counts(self) -> np.ndarray:
+        """int64[NB] entries per block (from the packed meta)."""
+        return ((self.meta & _CNT_MASK) + 1).astype(np.int64)
+
+    def row_lengths(self) -> np.ndarray:
+        """int64[nrows] entries per row (header arithmetic, no decode)."""
+        ccum = np.concatenate([[0], np.cumsum(self.counts())])
+        rb = self.row_blocks.astype(np.int64)
+        return ccum[rb[1:]] - ccum[rb[:-1]]
 
     @property
     def nnz(self) -> int:
-        return len(self.rec_ids)
+        return int(self.counts().sum())
 
     def nbytes(self) -> int:
         return sum(int(a.nbytes) for a in (
-            self.keys, self.offsets, self.rec_ids,
-            self.buf_offsets, self.buf_rec_ids))
+            self.row_blocks, self.first, self.last, self.meta,
+            self.off, self.payload))
+
+
+def _ragged_take(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenate ``[starts[i], starts[i]+lens[i])`` ranges (int64)."""
+    lens = np.asarray(lens, np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    cum = np.cumsum(lens)
+    out = np.arange(total, dtype=np.int64)
+    seg = np.searchsorted(cum, out, side="right")
+    return np.asarray(starts, np.int64)[seg] + out - (cum[seg] - lens[seg])
+
+
+def _bitlen(x: np.ndarray) -> np.ndarray:
+    """int32 bit lengths (0 for 0). Exact for values < 2**53."""
+    x = np.asarray(x, np.int64)
+    out = np.zeros(x.shape, np.int32)
+    nz = x > 0
+    if nz.any():
+        out[nz] = (np.floor(np.log2(x[nz].astype(np.float64)))
+                   .astype(np.int32) + 1)
+    return out
+
+
+def encode_store(offsets: np.ndarray, rec_ids: np.ndarray) -> BlockStore:
+    """Encode a flat CSR (row pointers + sorted-per-row ids) into blocks."""
+    offsets = np.asarray(offsets, np.int64)
+    rec = np.asarray(rec_ids, np.int64)
+    nrows = len(offsets) - 1
+    lens = np.diff(offsets)
+    nblk_row = -(-lens // BLOCK)
+    row_blocks = np.concatenate([[0], np.cumsum(nblk_row)]).astype(np.int32)
+    nb = int(row_blocks[-1])
+    if nb == 0:
+        return BlockStore(
+            row_blocks=row_blocks,
+            first=np.zeros(0, np.int32), last=np.zeros(0, np.int32),
+            meta=np.zeros(0, np.uint32), off=np.zeros(1, np.int64),
+            payload=np.zeros(0, np.uint32))
+
+    rowid = np.repeat(np.arange(nrows), nblk_row)
+    within = np.arange(nb, dtype=np.int64) - row_blocks[rowid]
+    bstart = offsets[rowid] + within * BLOCK
+    bend = np.minimum(bstart + BLOCK, offsets[rowid + 1])
+    cnt = (bend - bstart).astype(np.int64)
+    first = rec[bstart].astype(np.int32)
+    last = rec[bend - 1].astype(np.int32)
+
+    # Deltas, zeroed at block starts (blocks tile rec positions exactly,
+    # so reduceat segments over ``bstart`` are the blocks).
+    d = np.zeros(len(rec), np.int64)
+    d[1:] = rec[1:] - rec[:-1]
+    d[bstart] = 0
+    md = np.maximum.reduceat(d, bstart)
+    d_lo = d.copy()
+    d_lo[bstart] = np.int64(2) ** 62
+    mind = np.minimum.reduceat(d_lo, bstart)    # 2^62 for 1-entry blocks
+
+    bw = _bitlen(md)
+    span = last.astype(np.int64) - first + 1
+    w_sparse = ((cnt - 1) * bw + 31) // 32
+    w_dense = (span + 31) // 32
+    dense = (mind >= 1) & (w_dense < w_sparse) & (w_dense <= DENSE_MAX_WORDS)
+    words = np.where(dense, w_dense, w_sparse)
+    off = np.concatenate([[0], np.cumsum(words)]).astype(np.int64)
+    payload = np.zeros(int(off[-1]), np.uint32)
+
+    blkof = np.repeat(np.arange(nb, dtype=np.int64), cnt)
+    pos_in_blk = np.arange(len(rec), dtype=np.int64) - bstart[blkof]
+
+    # -- sparse bodies: bitpack the count-1 deltas at the block's width.
+    sel = (pos_in_blk > 0) & ~dense[blkof] & (bw[blkof] > 0)
+    if sel.any():
+        b = blkof[sel]
+        bitpos = (pos_in_blk[sel] - 1) * bw[b]
+        word = off[b] + (bitpos >> 5)
+        shift = (bitpos & 31).astype(np.uint64)
+        val = d[sel].astype(np.uint64) << shift
+        np.bitwise_or.at(payload, word, (val & 0xFFFFFFFF).astype(np.uint32))
+        hi = (val >> np.uint64(32)).astype(np.uint32)
+        spill = hi != 0
+        np.bitwise_or.at(payload, word[spill] + 1, hi[spill])
+
+    # -- dense bodies: one bit per id over the block's span.
+    seld = dense[blkof]
+    if seld.any():
+        b = blkof[seld]
+        bit = rec[seld] - first[b]
+        np.bitwise_or.at(payload, off[b] + (bit >> 5),
+                         (np.uint32(1) << (bit & 31).astype(np.uint32)))
+
+    meta = ((cnt - 1).astype(np.uint32)
+            | (bw.astype(np.uint32) << np.uint32(_BW_SHIFT))
+            | (dense.astype(np.uint32) << np.uint32(_KIND_SHIFT)))
+    return BlockStore(row_blocks=row_blocks, first=first, last=last,
+                      meta=meta, off=off, payload=payload)
+
+
+def decode_blocks(store: BlockStore, blks: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """(ids int32[total], counts int64[len(blks)]) for a block subset.
+
+    ``blks`` may be any selection, REPEATS INCLUDED — a duplicated
+    query hash merges its posting list once per occurrence, so the
+    candidate-generation caller relies on repeated block ids decoding
+    once each per occurrence (everything here is a pure gather, never
+    an in-place write keyed by block id). Decoded entries come back
+    grouped in ``blks`` order, ascending within each block.
+    """
+    blks = np.asarray(blks, np.int64)
+    if len(blks) == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.int64)
+    meta = store.meta[blks]
+    cnt = ((meta & _CNT_MASK) + 1).astype(np.int64)
+    bw = ((meta >> np.uint32(_BW_SHIFT)) & _BW_MASK).astype(np.int64)
+    dense = (meta >> np.uint32(_KIND_SHIFT)) & np.uint32(1)
+    first = store.first[blks].astype(np.int64)
+    off = store.off[blks]
+    pay = store.payload
+
+    total = int(cnt.sum())
+    estart = np.concatenate([[0], np.cumsum(cnt)])
+    eblk = np.repeat(np.arange(len(blks), dtype=np.int64), cnt)
+    erank = np.arange(total, dtype=np.int64) - estart[eblk]
+
+    # -- sparse: unpack deltas, per-block prefix-sum back to ids.
+    dall = np.zeros(total, np.int64)
+    read = (dense[eblk] == 0) & (erank >= 1) & (bw[eblk] > 0)
+    if read.any():
+        b = eblk[read]
+        bitpos = (erank[read] - 1) * bw[b]
+        w = off[b] + (bitpos >> 5)
+        w0 = pay[w].astype(np.uint64)
+        w1 = pay[np.minimum(w + 1, max(len(pay) - 1, 0))].astype(np.uint64)
+        shift = (bitpos & 31).astype(np.uint64)
+        mask = (np.uint64(1) << bw[b].astype(np.uint64)) - np.uint64(1)
+        dall[read] = ((((w1 << np.uint64(32)) | w0) >> shift) & mask
+                      ).astype(np.int64)
+    cs = np.cumsum(dall)
+    base = cs[estart[:-1]] - dall[estart[:-1]]
+    ids = first[eblk] + (cs - base[eblk])
+
+    # -- dense: unpack bitmaps, set-bit positions are the ids.
+    db = np.nonzero(dense)[0]
+    if len(db):
+        wcnt = (store.off[blks[db] + 1] - off[db]).astype(np.int64)
+        widx = _ragged_take(off[db], wcnt)
+        bits = ((pay[widx][:, None] >> np.arange(32, dtype=np.uint32))
+                & np.uint32(1)).astype(bool)
+        wrow, bpos = np.nonzero(bits)        # word order == block order
+        wblk = np.repeat(np.arange(len(db)), wcnt)[wrow]
+        wbase = np.concatenate([[0], np.cumsum(wcnt)])[:-1]
+        dense_ids = (first[db[wblk]]
+                     + (widx[wrow] - off[db[wblk]]) * 32 + bpos)
+        tgt = _ragged_take(estart[db], cnt[db])
+        ids[tgt] = dense_ids
+        del wbase
+    return ids.astype(np.int32), cnt
+
+
+def decode_store(store: BlockStore) -> tuple[np.ndarray, np.ndarray]:
+    """Full decode → classic flat CSR (offsets int64[nrows+1], ids)."""
+    ids, _ = decode_blocks(store, np.arange(store.num_blocks))
+    ccum = np.concatenate([[0], np.cumsum(store.counts())])
+    return ccum[store.row_blocks.astype(np.int64)].astype(np.int64), ids
+
+
+def _merge_stores(a: BlockStore, b: BlockStore, use_b: np.ndarray,
+                  row: np.ndarray) -> BlockStore:
+    """New store whose row i is row ``row[i]`` of ``b`` if ``use_b[i]``
+    else of ``a`` — pure block-level gathers, nothing re-encodes."""
+    use_b = np.asarray(use_b, bool)
+    row = np.asarray(row, np.int64)
+    nb_a = a.num_blocks
+    first = np.concatenate([a.first, b.first])
+    last = np.concatenate([a.last, b.last])
+    meta = np.concatenate([a.meta, b.meta])
+    words = np.concatenate([np.diff(a.off), np.diff(b.off)])
+    pstart = np.concatenate([a.off[:-1], b.off[:-1] + len(a.payload)])
+    pay = np.concatenate([a.payload, b.payload])
+
+    rb_a = a.row_blocks.astype(np.int64)
+    rb_b = b.row_blocks.astype(np.int64)
+    start = np.where(use_b, rb_b[np.minimum(row, b.num_rows)] + nb_a,
+                     rb_a[np.minimum(row, a.num_rows)])
+    nbl = np.where(use_b,
+                   rb_b[np.minimum(row + 1, b.num_rows)]
+                   - rb_b[np.minimum(row, b.num_rows)],
+                   rb_a[np.minimum(row + 1, a.num_rows)]
+                   - rb_a[np.minimum(row, a.num_rows)])
+    src = _ragged_take(start, nbl)
+    row_blocks = np.concatenate([[0], np.cumsum(nbl)]).astype(np.int32)
+    w2 = words[src]
+    off2 = np.concatenate([[0], np.cumsum(w2)]).astype(np.int64)
+    return BlockStore(
+        row_blocks=row_blocks, first=first[src], last=last[src],
+        meta=meta[src], off=off2,
+        payload=pay[_ragged_take(pstart[src], w2)].astype(np.uint32))
+
+
+def _append_store(store: BlockStore, new_offsets: np.ndarray,
+                  new_ids: np.ndarray, rows: np.ndarray,
+                  num_rows: int) -> BlockStore:
+    """Append ``new_ids`` (CSR rows over ``rows``, every id exceeding all
+    stored ids) to a fixed-row-count store. Only the receiving rows
+    decode + re-encode; everything else splices through untouched."""
+    new_lens = np.diff(np.asarray(new_offsets, np.int64))
+    touched = new_lens > 0
+    rows = np.asarray(rows, np.int64)[touched]
+    new_lens = new_lens[touched]
+    if len(rows) == 0:
+        return store
+    starts = np.asarray(new_offsets, np.int64)[:-1][touched]
+    new_ids = np.asarray(new_ids, np.int32)
+
+    rb = store.row_blocks.astype(np.int64)
+    old_blks = _ragged_take(rb[rows], rb[rows + 1] - rb[rows])
+    old_ids, _ = decode_blocks(store, old_blks)
+    old_lens = store.row_lengths()[rows]
+
+    comb_lens = old_lens + new_lens
+    comb_off = np.concatenate([[0], np.cumsum(comb_lens)]).astype(np.int64)
+    comb = np.empty(int(comb_off[-1]), np.int32)
+    comb[_ragged_take(comb_off[:-1], old_lens)] = old_ids
+    comb[_ragged_take(comb_off[:-1] + old_lens, new_lens)] = \
+        new_ids[_ragged_take(starts, new_lens)]
+    enc = encode_store(comb_off, comb)
+
+    use_b = np.zeros(num_rows, bool)
+    use_b[rows] = True
+    src_row = np.arange(num_rows, dtype=np.int64)
+    src_row[rows] = np.arange(len(rows))
+    return _merge_stores(store, enc, use_b, src_row)
+
+
+@dataclasses.dataclass
+class PostingsIndex:
+    """Block-compressed inverted postings over one engine's sketches."""
+
+    keys: np.ndarray          # uint32[U] distinct retained hashes, asc
+    tail: BlockStore          # one row per key
+    buf: BlockStore           # one row per frozen buffer bit
+    num_records: int
+    tau: np.uint32            # max retained key at build/update time
+
+    def __post_init__(self):
+        self._decoded_tail = None   # (offsets, rec_ids) cache
+        self._decoded_buf = None
+        self._row_lens = None       # tail row_lengths cache (probe path)
+        self._buf_row_lens = None   # buffer row_lengths cache (probe path)
+
+    @property
+    def nnz(self) -> int:
+        return self.tail.nnz
+
+    def nbytes(self) -> int:
+        """At-rest bytes: keys + both block stores (decoded-view caches
+        are debug/test scaffolding and intentionally excluded)."""
+        return int(self.keys.nbytes) + self.tail.nbytes() + self.buf.nbytes()
+
+    # -- decoded CSR views (lazy, cached per immutable instance) ----------
+
+    @property
+    def offsets(self) -> np.ndarray:
+        if self._decoded_tail is None:
+            self._decoded_tail = decode_store(self.tail)
+        return self._decoded_tail[0]
+
+    @property
+    def rec_ids(self) -> np.ndarray:
+        if self._decoded_tail is None:
+            self._decoded_tail = decode_store(self.tail)
+        return self._decoded_tail[1]
+
+    @property
+    def buf_offsets(self) -> np.ndarray:
+        if self._decoded_buf is None:
+            self._decoded_buf = decode_store(self.buf)
+        return self._decoded_buf[0]
+
+    @property
+    def buf_rec_ids(self) -> np.ndarray:
+        if self._decoded_buf is None:
+            self._decoded_buf = decode_store(self.buf)
+        return self._decoded_buf[1]
 
     def posting_lengths(self, hashes: np.ndarray) -> np.ndarray:
         """int64[n] — posting-list length per query hash (0 when absent).
 
-        One searchsorted probe; used by the plan cost model to estimate
-        merge work *without* materializing the merge.
+        One searchsorted probe over keys + header arithmetic; used by
+        the plan cost model to estimate merge work *without* decoding.
         """
         h = np.asarray(hashes, dtype=np.uint32)
         pos = np.searchsorted(self.keys, h)
@@ -73,9 +418,21 @@ class PostingsIndex:
         hit = np.zeros(len(h), dtype=bool)
         hit[ok] = self.keys[pos[ok]] == h[ok]
         out = np.zeros(len(h), dtype=np.int64)
-        p = pos[hit]
-        out[hit] = self.offsets[p + 1] - self.offsets[p]
+        out[hit] = self.tail_row_lengths()[pos[hit]]
         return out
+
+    def tail_row_lengths(self) -> np.ndarray:
+        """int64[U] entries per key — header arithmetic, cached."""
+        if self._row_lens is None:
+            self._row_lens = self.tail.row_lengths()
+        return self._row_lens
+
+    def buf_row_lengths(self) -> np.ndarray:
+        """int64[R] entries per buffer bit — header arithmetic, cached
+        (the probe path must never decode the buffer store)."""
+        if self._buf_row_lens is None:
+            self._buf_row_lens = self.buf.row_lengths()
+        return self._buf_row_lens
 
 
 def _bit_matrix(buf: np.ndarray) -> np.ndarray:
@@ -123,6 +480,17 @@ def _buf_csr(buf: np.ndarray, row_offset: int = 0):
     return offsets, (recs + row_offset).astype(np.int32)
 
 
+def from_flat(keys, offsets, rec_ids, buf_offsets, buf_rec_ids,
+              num_records: int, tau) -> PostingsIndex:
+    """Encode a classic flat CSR (the PR 2/3 layout, still what v2 save
+    files carry) into the blocked format."""
+    return PostingsIndex(
+        keys=np.asarray(keys, np.uint32),
+        tail=encode_store(offsets, rec_ids),
+        buf=encode_store(buf_offsets, buf_rec_ids),
+        num_records=int(num_records), tau=np.uint32(tau))
+
+
 def build_postings(sketches: PackedSketches) -> PostingsIndex:
     """Build hash + buffer postings from a packed index in one pass."""
     m = sketches.num_records
@@ -130,27 +498,28 @@ def build_postings(sketches: PackedSketches) -> PostingsIndex:
     keys, offsets, rec_ids = _csr_from_pairs(h, rec)
     buf_offsets, buf_rec_ids = _buf_csr(np.asarray(sketches.buf))
     tau = keys[-1] if len(keys) else np.uint32(0)
-    return PostingsIndex(
-        keys=keys, offsets=offsets, rec_ids=rec_ids,
-        buf_offsets=buf_offsets, buf_rec_ids=buf_rec_ids,
-        num_records=m, tau=np.uint32(tau))
+    return from_flat(keys, offsets, rec_ids, buf_offsets, buf_rec_ids,
+                     m, tau)
 
 
 def truncate_postings(post: PostingsIndex, tau: np.uint32) -> PostingsIndex:
     """τ-retighten = prefix truncation of the hash-sorted keyspace.
 
     Deletion-only half of the incremental maintenance contract: every key
-    above the new (lower) τ disappears; surviving posting lists are
-    untouched because refiltering a row at τ' keeps exactly its hashes
-    ≤ τ'. The frozen buffer postings never delete.
+    above the new (lower) τ disappears; surviving rows are untouched
+    because refiltering a row at τ' keeps exactly its hashes ≤ τ'.
+    Blocks are laid out in key order, so keys, headers, and payload all
+    truncate by prefix slices. The frozen buffer postings never delete.
     """
     cut = int(np.searchsorted(post.keys, np.uint32(tau), side="right"))
-    offsets = post.offsets[: cut + 1]
-    return PostingsIndex(
-        keys=post.keys[:cut], offsets=offsets,
-        rec_ids=post.rec_ids[: offsets[-1]],
-        buf_offsets=post.buf_offsets, buf_rec_ids=post.buf_rec_ids,
-        num_records=post.num_records, tau=np.uint32(tau))
+    t = post.tail
+    nbk = int(t.row_blocks[cut])
+    tail = BlockStore(
+        row_blocks=t.row_blocks[: cut + 1], first=t.first[:nbk],
+        last=t.last[:nbk], meta=t.meta[:nbk], off=t.off[: nbk + 1],
+        payload=t.payload[: int(t.off[nbk])])
+    return PostingsIndex(keys=post.keys[:cut], tail=tail, buf=post.buf,
+                         num_records=post.num_records, tau=np.uint32(tau))
 
 
 def append_rows(
@@ -168,40 +537,58 @@ def append_rows(
     appended ids must exceed every id already present (insert-at-the-end
     monotonicity), which holds for both the global postings and the
     per-shard slices because new records always pack after old ones.
+    Only the rows that receive entries re-encode; the result is block-
+    for-block identical to a fresh rebuild because blocks never span
+    rows and the 128-entry segmentation is deterministic.
     """
-    keys, offsets, rec_ids = post.keys, post.offsets, post.rec_ids
+    keys, tail = post.keys, post.tail
 
-    # -- tail: merge the new rows' (hash, record) pairs into the CSR.
+    # -- tail: merge the new rows' (hash, record) pairs, key by key.
     h_new, rec_new = _row_pairs(sketches, slice(lo, hi))
     rec_new = (rec_new.astype(np.int64) + rec_offset).astype(np.int32)
     if len(h_new):
-        order = np.lexsort((rec_new, h_new))
-        h_new, rec_new = h_new[order], rec_new[order]
-        flat_h = np.repeat(keys, np.diff(offsets))
-        # side="right": new pairs land after equal old keys; new record
-        # ids all exceed old ids, so within-key order stays ascending.
-        at = np.searchsorted(flat_h, h_new, side="right")
-        flat_h = np.insert(flat_h, at, h_new)
-        rec_ids = np.insert(rec_ids, at, rec_new)
-        keys, starts = np.unique(flat_h, return_index=True)
-        offsets = np.concatenate([starts, [len(flat_h)]]).astype(np.int64)
+        nk, noff, nrec = _csr_from_pairs(h_new, rec_new)
+        merged = np.union1d(keys, nk).astype(np.uint32)
+        posn = np.searchsorted(nk, merged)
+        is_new = np.zeros(len(merged), bool)
+        okn = posn < len(nk)
+        is_new[okn] = nk[posn[okn]] == merged[okn]
 
-    # -- buffer: frozen top-r set, new rows append at each segment end.
-    buf_offsets, buf_rec_ids = post.buf_offsets, post.buf_rec_ids
+        # CSR of the new pairs over ALL merged rows (zero-length where
+        # the key got nothing), so _append_store sees one row space.
+        lens_m = np.zeros(len(merged), np.int64)
+        lens_m[is_new] = np.diff(noff)
+        off_m = np.concatenate([[0], np.cumsum(lens_m)]).astype(np.int64)
+
+        # Rows new to the key set enter the store as empty rows first
+        # (pure row_blocks splice), then receive their entries.
+        in_old = np.zeros(len(merged), bool)
+        poso = np.searchsorted(keys, merged)
+        oko = poso < len(keys)
+        in_old[oko] = keys[poso[oko]] == merged[oko]
+        empty = BlockStore(
+            row_blocks=np.zeros(2, np.int32),
+            first=np.zeros(0, np.int32), last=np.zeros(0, np.int32),
+            meta=np.zeros(0, np.uint32), off=np.zeros(1, np.int64),
+            payload=np.zeros(0, np.uint32))
+        widened = _merge_stores(tail, empty, ~in_old,
+                                np.where(in_old, poso, 0))
+        tail = _append_store(widened, off_m, nrec,
+                             np.arange(len(merged)), len(merged))
+        keys = merged
+
+    # -- buffer: frozen top-r set, new rows append at each bit's row.
+    buf = post.buf
     w = np.asarray(sketches.buf).shape[1]
     if w:
         new_off, new_recs = _buf_csr(np.asarray(sketches.buf)[lo:hi],
                                      row_offset=lo + rec_offset)
-        counts = np.diff(new_off)
-        at = np.repeat(buf_offsets[1:], counts)
-        buf_rec_ids = np.insert(buf_rec_ids, at, new_recs)
-        buf_offsets = buf_offsets + np.concatenate(
-            [[0], np.cumsum(counts)]).astype(np.int64)
+        buf = _append_store(buf, new_off, new_recs,
+                            np.arange(buf.num_rows), buf.num_rows)
 
-    return PostingsIndex(
-        keys=keys, offsets=offsets, rec_ids=rec_ids.astype(np.int32),
-        buf_offsets=buf_offsets, buf_rec_ids=buf_rec_ids,
-        num_records=post.num_records + (hi - lo), tau=post.tau)
+    return PostingsIndex(keys=keys, tail=tail, buf=buf,
+                         num_records=post.num_records + (hi - lo),
+                         tau=post.tau)
 
 
 def update_postings(
@@ -217,11 +604,20 @@ def update_postings(
                        post.num_records, sketches.num_records)
 
 
+def _stores_equal(a: BlockStore, b: BlockStore) -> bool:
+    return (np.array_equal(a.row_blocks, b.row_blocks)
+            and np.array_equal(a.first, b.first)
+            and np.array_equal(a.last, b.last)
+            and np.array_equal(a.meta, b.meta)
+            and np.array_equal(a.off, b.off)
+            and np.array_equal(a.payload, b.payload))
+
+
 def postings_equal(a: PostingsIndex, b: PostingsIndex) -> bool:
-    """Structural equality (tests: incremental update == fresh rebuild)."""
+    """Structural equality (tests: incremental update == fresh rebuild) —
+    compared on the blocked arrays, so segmentation and per-block
+    encoding choices must match exactly, not just the decoded ids."""
     return (a.num_records == b.num_records
             and np.array_equal(a.keys, b.keys)
-            and np.array_equal(a.offsets, b.offsets)
-            and np.array_equal(a.rec_ids, b.rec_ids)
-            and np.array_equal(a.buf_offsets, b.buf_offsets)
-            and np.array_equal(a.buf_rec_ids, b.buf_rec_ids))
+            and _stores_equal(a.tail, b.tail)
+            and _stores_equal(a.buf, b.buf))

@@ -22,6 +22,20 @@ U_(k) ≥ h_Q[c-1] (the c-th smallest retained query hash), and with
 bound (o1 + bound_tail(c))/|Q| falls below t are pruned — provably below
 threshold under the exact same estimator the dense sweep applies, so the
 verify step returns bit-identical candidate sets.
+
+Block skipping (the compressed-postings payoff): the same bound is
+evaluated PER BLOCK HEADER before any block decodes. A block's header
+carries its record-id range [first, last]; counting how many of the
+query's matched tail lists (→ c_max) and buffer-bit lists (→ o1_max)
+overlap that range bounds every resident record's true counts from
+above, because a record can only contribute to c/o1 through lists whose
+id range covers it. Blocks whose (o1_max + bound_tail(c_max))/|Q| falls
+below t never decode. Soundness of the two-phase filter: any record
+touching a skipped block has its FULL-count bound below t (c_max/o1_max
+bound the full counts, not the decoded subset), so it is provably below
+threshold even if it also surfaces through kept blocks with partial
+counts — the verify step re-scores candidates from the sketches, never
+from the merge counts, so partial counts cannot flip a true hit.
 """
 
 from __future__ import annotations
@@ -31,7 +45,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.hashing import TWO32
-from repro.planner.postings import PostingsIndex
+from repro.planner.postings import PostingsIndex, _ragged_take, decode_blocks
 
 # Headroom multiplier on the (float64) containment bound: the dense
 # estimator computes in float32, whose rounding can land a handful of
@@ -49,8 +63,10 @@ class CandidateSet:
     rec_ids: np.ndarray    # int64[n]
     counts: np.ndarray     # int32[n]  shared retained-hash counts c
     o1: np.ndarray         # int32[n]  exact buffer intersections
-    hits: int              # posting entries merged (cost accounting)
+    hits: int              # posting entries decoded (cost accounting)
     pruned: int            # candidates dropped by the containment bound
+    blocks: int = 0        # posting blocks the merge touched
+    skipped_blocks: int = 0  # blocks the header bound skipped pre-decode
 
 
 def query_bits(buf_row: np.ndarray) -> np.ndarray:
@@ -63,22 +79,13 @@ def query_bits(buf_row: np.ndarray) -> np.ndarray:
     return np.nonzero(bits)[0].astype(np.int64)
 
 
-def _gather_segments(offsets, rec_ids, rows):
-    """Concatenate CSR segments for ``rows`` (posting ids, with repeats)."""
-    if len(rows) == 0:
-        return np.zeros(0, dtype=np.int32)
-    starts = offsets[rows]
-    ends = offsets[rows + 1]
-    total = int((ends - starts).sum())
-    if total == 0:
-        return np.zeros(0, dtype=np.int32)
-    out = np.empty(total, dtype=np.int32)
-    pos = 0
-    for s, e in zip(starts, ends):
-        n = int(e - s)
-        out[pos : pos + n] = rec_ids[s:e]
-        pos += n
-    return out
+def _row_block_list(store, rows) -> np.ndarray:
+    """Flat block ids of ``rows`` (repeats kept — a duplicated query hash
+    merges its posting list once per occurrence, exactly like the flat
+    CSR gather did)."""
+    rb = store.row_blocks.astype(np.int64)
+    rows = np.asarray(rows, np.int64)
+    return _ragged_take(rb[rows], rb[rows + 1] - rb[rows])
 
 
 def tail_bound(q_hashes: np.ndarray) -> np.ndarray:
@@ -104,11 +111,13 @@ def candidates_for(
     threshold: float,
     q_size: int,
 ) -> CandidateSet:
-    """Merge Q's hashes/bits against the postings, prune by the bound.
+    """Merge Q's hashes/bits against the blocked postings, prune by the
+    bound — skipping whole blocks whose header bound already sits below
+    ``threshold`` (they never decode).
 
     Returns every record whose containment *bound* clears ``threshold``
     — a superset of the dense hits by construction (output-sensitive:
-    cost scales with posting hits, never with the index size).
+    cost scales with decoded posting hits, never with the index size).
     """
     q_hashes = np.asarray(q_hashes, dtype=np.uint32)
 
@@ -117,18 +126,55 @@ def candidates_for(
     ok = pos < len(post.keys)
     hit = np.zeros(len(q_hashes), dtype=bool)
     hit[ok] = post.keys[pos[ok]] == q_hashes[ok]
-    tail_ids = _gather_segments(post.offsets, post.rec_ids, pos[hit])
+    rows_t = pos[hit]
+    blks_t = _row_block_list(post.tail, rows_t)
 
-    # -- buffer merge: exact o1 from the frozen top-r postings.
+    # -- buffer merge: blocks of the frozen top-r postings rows.
     q_bits = np.asarray(q_bits, dtype=np.int64)
-    q_bits = q_bits[q_bits < len(post.buf_offsets) - 1]
-    buf_ids = _gather_segments(post.buf_offsets, post.buf_rec_ids, q_bits)
+    q_bits = q_bits[q_bits < post.buf.num_rows]
+    blks_b = _row_block_list(post.buf, q_bits)
+
+    n_blocks = len(blks_t) + len(blks_b)
+    skipped = 0
+    bound = tail_bound(np.sort(q_hashes))    # shared: block skip + final cut
+    if float(threshold) > 0.0 and n_blocks:
+        rbt = post.tail.row_blocks.astype(np.int64)
+        # Matched-list id ranges (tail rows are never empty; buffer rows
+        # can be — a bit no record carries owns zero blocks).
+        slo_t = np.sort(post.tail.first[rbt[rows_t]]) \
+            if len(rows_t) else np.zeros(0, np.int32)
+        shi_t = np.sort(post.tail.last[rbt[rows_t + 1] - 1]) \
+            if len(rows_t) else np.zeros(0, np.int32)
+        rbb = post.buf.row_blocks.astype(np.int64)
+        qb_live = q_bits[rbb[q_bits + 1] > rbb[q_bits]]
+        slo_b = np.sort(post.buf.first[rbb[qb_live]])
+        shi_b = np.sort(post.buf.last[rbb[qb_live + 1] - 1])
+        qs = max(int(q_size), 1)
+
+        def _keep(first, last):
+            c_max = (np.searchsorted(slo_t, last, side="right")
+                     - np.searchsorted(shi_t, first, side="left"))
+            o1_max = (np.searchsorted(slo_b, last, side="right")
+                      - np.searchsorted(shi_b, first, side="left"))
+            ub = (o1_max.astype(np.float64)
+                  + bound[np.minimum(c_max, len(bound) - 1)]) / qs
+            return ub * _BOUND_SLACK >= float(threshold) - 1e-12
+
+        keep_t = _keep(post.tail.first[blks_t], post.tail.last[blks_t])
+        keep_b = _keep(post.buf.first[blks_b], post.buf.last[blks_b])
+        skipped = int((~keep_t).sum()) + int((~keep_b).sum())
+        blks_t, blks_b = blks_t[keep_t], blks_b[keep_b]
+
+    tail_ids, _ = decode_blocks(post.tail, blks_t)
+    buf_ids, _ = decode_blocks(post.buf, blks_b)
 
     hits = len(tail_ids) + len(buf_ids)
     if hits == 0:
         empty = np.zeros(0, dtype=np.int64)
         return CandidateSet(empty, empty.astype(np.int32),
-                            empty.astype(np.int32), 0, 0)
+                            empty.astype(np.int32), 0, 0,
+                            blocks=n_blocks - skipped,
+                            skipped_blocks=skipped)
 
     rec_c, counts_c = np.unique(tail_ids, return_counts=True)
     rec_b, counts_b = np.unique(buf_ids, return_counts=True)
@@ -141,12 +187,12 @@ def candidates_for(
     # -- containment bound: (o1 + bound_tail(c)) / |Q| ≥ t or prune.
     # _BOUND_SLACK inflates the WHOLE score bound (buffer term included)
     # to dominate the dense path's float32 rounding.
-    bound = tail_bound(np.sort(q_hashes))
     ub = (o1.astype(np.float64) + bound[np.minimum(c, len(bound) - 1)]) \
         / max(int(q_size), 1)
     keep = ub * _BOUND_SLACK >= float(threshold) - 1e-12
     pruned = int(len(rec) - keep.sum())
-    return CandidateSet(rec[keep], c[keep], o1[keep], hits, pruned)
+    return CandidateSet(rec[keep], c[keep], o1[keep], hits, pruned,
+                        blocks=n_blocks - skipped, skipped_blocks=skipped)
 
 
 def f32_threshold(t) -> np.ndarray:

@@ -257,15 +257,17 @@ class ShardedIndex:
     def _shard_postings(self):
         """(postings, row_offsets) over the arena's record slices.
 
-        One CSR postings index per record-offset slice, built from
-        column *views* of the shared arena (no per-shard host copies)
-        and cached on the arena itself — so the host api index and the
-        sharded view maintain ONE postings store. Candidate generation
-        probes every slice and unions the (disjoint) results — the
-        host-side mirror of the mesh's all_gather. After inserts the
-        slices update in place (τ-truncation + append); their boundaries
-        may then lag the mesh's ceil-partition, which is harmless
-        because the union reports global record ids either way.
+        One block-compressed postings index per record-offset slice,
+        built from column *views* of the shared arena (no per-shard
+        host copies) and cached on the arena itself — so the host api
+        index and the sharded view maintain ONE postings store.
+        Candidate generation probes every slice (block headers first —
+        skipping applies per shard) and unions the (disjoint) results —
+        the host-side mirror of the mesh's all_gather. After inserts
+        the slices update in place (τ-truncation of each slice's blocks
+        + re-encoding only the appended rows); their boundaries may
+        then lag the mesh's ceil-partition, which is harmless because
+        the union reports global record ids either way.
         """
         return self.host.sketches.shard_postings(self.mesh.devices.size)
 

@@ -116,7 +116,9 @@ def insert_records(
     packed = SketchArena.from_pack(pack_rows(all_rows, new_thr, sizes,
                                              bitmaps=bitmaps))
     # Carry cached postings (global + per-shard) forward incrementally:
-    # τ-truncation + append, never a rebuild of old rows.
+    # τ-truncation + append on the BLOCKED stores — key prefix slices
+    # plus re-encoding only the rows the new records touch, never a
+    # rebuild of old rows (and block-for-block identical to one).
     packed.adopt_postings_from(SketchArena.from_pack(s), tau)
 
     stats.inserts += len(new_records)

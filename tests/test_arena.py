@@ -166,6 +166,36 @@ def test_arena_roundtrip_across_backends(corpus, tmp_path, backend):
             np.testing.assert_array_equal(d, w)
 
 
+def test_v2_flat_postings_npz_still_loads(corpus, tmp_path, gb_index):
+    """Files written by the v2 (flat-CSR postings) format re-encode into
+    blocks on load and answer identically — with the same blocked
+    structure a fresh rebuild produces."""
+    recs, total, queries = corpus
+    gb_index.batch_query(queries, 0.6, plan="pruned")   # build postings
+    core = gb_index.core
+    s = core.sketches
+    post = gb_index._post
+    path = str(tmp_path / "v2_flat.npz")
+    np.savez_compressed(                    # the exact v2 field set
+        path, engine="gbkmv", tau=np.uint32(core.tau),
+        top_elems=np.asarray(core.top_elems, np.int64),
+        seed=np.int64(core.seed), buffer_bits=np.int64(core.buffer_bits),
+        budget=np.int64(-1), arena_version=np.int64(2),
+        values=np.asarray(s.values), lengths=np.asarray(s.lengths),
+        thresh=np.asarray(s.thresh), buf=np.asarray(s.buf),
+        sizes=np.asarray(s.sizes),
+        post_keys=post.keys, post_offsets=post.offsets,
+        post_rec_ids=post.rec_ids, post_buf_offsets=post.buf_offsets,
+        post_buf_rec_ids=post.buf_rec_ids, post_tau=np.uint32(post.tau))
+    loaded = api.load_index(path)
+    assert loaded._post is not None         # postings traveled, re-encoded
+    assert planner.postings_equal(loaded._post, post)
+    for t in (0.4, 0.8):
+        for a, b in zip(gb_index.batch_query(queries, t),
+                        loaded.batch_query(queries, t, plan="pruned")):
+            np.testing.assert_array_equal(a, b)
+
+
 def test_legacy_packed_npz_still_loads(corpus, tmp_path, gb_index):
     """Files written by the v1 (postings-less) format keep loading."""
     recs, total, queries = corpus
@@ -211,10 +241,10 @@ def test_pruned_path_device_resident(corpus, backend):
         idx._postings(), hash_rows, bit_rows, t,
         arena.num_records, arena.capacity, plan="pruned")
     dpost, dpack, dq, dthr = planner_device.stage_query_inputs(arena, qp, t)
+    tb, tbd = planner_device.task_bounds(decision)
     with jax.transfer_guard("disallow"):
         mask = planner_device.pruned_hit_mask(
-            dpost, dpack, dq, dthr,
-            pb=planner_device._bucket(decision.hits),
+            dpost, dpack, dq, dthr, tb=tb, tbd=tbd,
             m=arena.num_records, backend=backend)
         assert not isinstance(mask, np.ndarray)        # still on device
     got = planner.prune.mask_to_hits(np.asarray(mask))

@@ -1,0 +1,50 @@
+"""Hypothesis property: block decode is the identity on random postings
+— for ANY per-row sorted id lists (duplicates included), decode(encode)
+returns the exact flat CSR, so the blocked store is information-lossless
+by construction, not just on the workloads we benchmarked."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property test needs hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.planner import postings as P  # noqa: E402
+
+settings.register_profile("blocks", max_examples=40, deadline=None)
+settings.load_profile("blocks")
+
+
+@given(st.lists(
+    st.lists(st.integers(min_value=0, max_value=2**31 - 1),
+             min_size=0, max_size=300),
+    min_size=0, max_size=8))
+def test_block_decode_is_identity_property(rows):
+    rows = [np.sort(np.asarray(r, np.int64)) for r in rows]
+    offsets = np.concatenate(
+        [[0], np.cumsum([len(r) for r in rows])]).astype(np.int64)
+    rec = (np.concatenate(rows).astype(np.int32)
+           if rows and offsets[-1] else np.zeros(0, np.int32))
+    store = P.encode_store(offsets, rec)
+    off2, rec2 = P.decode_store(store)
+    np.testing.assert_array_equal(off2, offsets)
+    np.testing.assert_array_equal(rec2, rec)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**20), min_size=0,
+                max_size=220),
+       st.integers(min_value=0, max_value=2**20))
+def test_truncate_is_prefix_of_keys_property(key_list, tau):
+    """Truncation at any τ equals rebuilding from only the ≤ τ keys."""
+    keys = np.unique(np.asarray(key_list, np.uint32))
+    offsets = np.arange(len(keys) + 1, dtype=np.int64)   # one id per key
+    rec = np.arange(len(keys), dtype=np.int32)
+    post = P.from_flat(keys, offsets, rec, np.zeros(1, np.int64),
+                       np.zeros(0, np.int32), len(keys) or 1,
+                       keys[-1] if len(keys) else 0)
+    tr = P.truncate_postings(post, np.uint32(tau))
+    cut = int(np.searchsorted(keys, np.uint32(tau), side="right"))
+    fresh = P.from_flat(keys[:cut], offsets[: cut + 1], rec[:cut],
+                        np.zeros(1, np.int64), np.zeros(0, np.int32),
+                        post.num_records, tau)
+    assert P.postings_equal(tr, fresh)
