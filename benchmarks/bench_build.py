@@ -1,0 +1,223 @@
+"""Build bench: vectorized construction vs the seed-era per-record oracle.
+
+The paper's headline construction claim (§V-E: one hash function, built
+>100× faster than LSH-E) needs a fast build path to mean anything.
+This suite measures records/s and elements/s for gbkmv/gkmv/kmv/lshe on
+the quick Zipf workload, for both the vectorized pipeline (host CSR ops,
+or the fused device hash→τ→pack under ``backend="jnp"|"pallas"``) and
+the retained per-record oracles — asserting bit-identical sketches
+between the two on every run (a mismatch raises and fails CI).
+
+``run(quick, json_out=..., backend=..., baseline=...)``:
+
+* ``backend`` picks the construction path for the sketch engines
+  ("numpy" = host vectorized; "jnp"/"pallas" = fused device build).
+  LSH-E's vectorized build is host-side regardless.
+* ``baseline`` points at a committed BENCH_BUILD.json; the run FAILS if
+  any engine's ``speedup_vs_oracle`` drops below
+  ``SPEEDUP_TOLERANCE ×`` that backend's committed speedup. Gating on
+  the speedup RATIO — both numerator and denominator measured on the
+  same machine in the same run — cancels machine speed the same way the
+  planner gate's dense-QPS normalization does.
+* Independently of any baseline, the gbkmv numpy-path speedup must
+  clear ``MIN_GBKMV_NUMPY_SPEEDUP`` (the PR's ≥10× acceptance floor).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core import gbkmv, gkmv, kmv, lshe, minhash
+from repro.data.synth import generate_dataset
+
+ENGINES = ("gbkmv", "gkmv", "kmv", "lshe")
+# ≥ tolerance × committed speedup_vs_oracle. The numpy ratio compares two
+# host paths and is stable across machines; the device paths compare a
+# Python oracle against XLA-compiled work, whose relative cost varies
+# more with core count / BLAS — hence the looser floor.
+SPEEDUP_TOLERANCE = {"numpy": 0.8}
+SPEEDUP_TOLERANCE_DEFAULT = 0.5
+MIN_GBKMV_NUMPY_SPEEDUP = 10.0    # acceptance floor, numpy path
+LSHE_HASHES_QUICK = 64
+LSHE_HASHES_FULL = 256
+
+
+def _pack_of(obj):
+    """The PackedSketches behind either a pack or a GBKMVIndex."""
+    return obj.sketches if hasattr(obj, "sketches") else obj
+
+
+def _assert_pack_parity(fast, oracle, label: str) -> None:
+    f, o = _pack_of(fast), _pack_of(oracle)
+    for field in ("values", "lengths", "thresh", "buf", "sizes"):
+        a, b = np.asarray(getattr(f, field)), np.asarray(getattr(o, field))
+        if a.shape != b.shape or not np.array_equal(a, b):
+            raise RuntimeError(
+                f"build parity broken: {label}.{field} fast {a.shape} "
+                f"vs oracle {b.shape}")
+
+
+def _builders(engine: str, recs, budget: int, backend: str, seed: int,
+              num_hashes: int):
+    """(fast_fn, oracle_fn, parity_fn) for one engine."""
+    bb = None if backend == "numpy" else backend
+    if engine == "gbkmv":
+        fast = lambda: gbkmv.build_gbkmv(recs, budget, r="auto", seed=seed,
+                                         build_backend=bb)
+        oracle = lambda: gbkmv.build_gbkmv_oracle(recs, budget, r="auto",
+                                                  seed=seed)
+
+        def parity(f, o):
+            _assert_pack_parity(f, o, "gbkmv")
+            if int(f.tau) != int(o.tau) or not np.array_equal(
+                    f.top_elems, o.top_elems):
+                raise RuntimeError("build parity broken: gbkmv tau/top_elems")
+        return fast, oracle, parity
+    if engine == "gkmv":
+        fast = lambda: gkmv.build_gkmv(recs, budget, seed=seed,
+                                       build_backend=bb)
+        oracle = lambda: gkmv.build_gkmv_oracle(recs, budget, seed=seed)
+        return fast, oracle, lambda f, o: _assert_pack_parity(f, o, "gkmv")
+    if engine == "kmv":
+        fast = lambda: kmv.build_kmv(recs, budget, seed=seed,
+                                     build_backend=bb)
+        oracle = lambda: kmv.build_kmv_oracle(recs, budget, seed=seed)
+        return fast, oracle, lambda f, o: _assert_pack_parity(f, o, "kmv")
+    if engine == "lshe":
+        # The signature matrix is the entire §V-E construction cost.
+        fast = lambda: lshe.build_lshe(recs, num_hashes=num_hashes, seed=seed)
+        oracle = lambda: minhash.build_signatures_oracle(
+            recs, num_hashes, seed=seed)
+
+        def parity(f, o):
+            if not np.array_equal(f.signatures, o):
+                raise RuntimeError("build parity broken: lshe signatures")
+        return fast, oracle, parity
+    raise ValueError(engine)
+
+
+def _time_fast(fn, repeats: int = 4) -> float:
+    """Best-of-``repeats`` seconds after one warmup build (jit caches on
+    the device path compile on the warmup, as they would on any repeated
+    ingest of the same shape)."""
+    fn()
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def check_baseline(rows, baseline_path: str, backend: str) -> list[str]:
+    """Per-engine speedup_vs_oracle gate against a committed artifact.
+
+    The artifact carries per-backend rows (``rows_by_backend``); each CI
+    matrix cell gates against ITS OWN backend's committed speedups. The
+    ratio is machine-normalized by construction (fast and oracle share
+    the run), so the tolerance is a genuine regression budget.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rows = {r["engine"]: r
+                 for r in base.get("rows_by_backend", {}).get(backend, [])}
+    tol = SPEEDUP_TOLERANCE.get(backend, SPEEDUP_TOLERANCE_DEFAULT)
+    failures = []
+    for r in rows:
+        b = base_rows.get(r["engine"])
+        if b is None:
+            continue
+        floor = tol * b["speedup_vs_oracle"]
+        if r["speedup_vs_oracle"] < floor:
+            failures.append(
+                f"{r['engine']}: build speedup {r['speedup_vs_oracle']:.1f}× "
+                f"< floor {floor:.1f}× (committed "
+                f"{b['speedup_vs_oracle']:.1f}× × {tol})")
+    return failures
+
+
+def run(quick: bool = True, json_out: str | None = None,
+        backend: str = "numpy", baseline: str | None = None):
+    # Quick profile is sized so the oracle's per-element Python cost
+    # dominates its fixed overheads — small-N runs drown the gated ratio
+    # in scheduler noise and the shared r="auto" cost-model time.
+    m = 2500 if quick else 8000
+    n_elems = 25_000 if quick else 60_000
+    num_hashes = LSHE_HASHES_QUICK if quick else LSHE_HASHES_FULL
+    recs = generate_dataset(m, n_elems, alpha_freq=0.8, alpha_size=1.0,
+                            size_min=10, size_max=300, seed=7)
+    total = sum(len(r) for r in recs)
+    budget = int(total * 0.1)
+
+    rows = []
+    for engine in ENGINES:
+        fast, oracle, parity = _builders(engine, recs, budget, backend,
+                                         seed=3, num_hashes=num_hashes)
+        # Oracle best-of-3: one pass would let scheduler noise into the
+        # denominator of the gated ratio.
+        dt_oracle = np.inf
+        for _ in range(3):
+            t0 = time.perf_counter()
+            oracle_out = oracle()
+            dt_oracle = min(dt_oracle, time.perf_counter() - t0)
+        parity(fast(), oracle_out)
+        dt_fast = _time_fast(fast)
+        rows.append({
+            "engine": engine,
+            "backend": backend if engine != "lshe" else "numpy",
+            "records_per_s": round(m / dt_fast, 1),
+            "elements_per_s": round(total / dt_fast, 1),
+            "oracle_records_per_s": round(m / dt_oracle, 1),
+            "speedup_vs_oracle": round(dt_oracle / dt_fast, 2),
+            "build_s": round(dt_fast, 4),
+            "oracle_build_s": round(dt_oracle, 4),
+            "parity": True,
+        })
+
+    write_csv("build.csv", rows)
+
+    failures = []
+    if backend == "numpy":
+        gb = next(r for r in rows if r["engine"] == "gbkmv")
+        if gb["speedup_vs_oracle"] < MIN_GBKMV_NUMPY_SPEEDUP:
+            failures.append(
+                f"gbkmv numpy build speedup {gb['speedup_vs_oracle']:.1f}× "
+                f"below the {MIN_GBKMV_NUMPY_SPEEDUP}× acceptance floor")
+    if baseline and os.path.exists(baseline):
+        failures += check_baseline(rows, baseline, backend)
+
+    if json_out:
+        by_backend = {}
+        if os.path.exists(json_out):
+            try:
+                with open(json_out) as f:
+                    by_backend = dict(json.load(f).get("rows_by_backend", {}))
+            except (json.JSONDecodeError, OSError):
+                by_backend = {}
+        by_backend[backend] = rows
+        payload = {
+            "suite": "build",
+            "profile": "quick" if quick else "full",
+            "workload": {
+                "generator": "zipf", "m": m, "n_elems": n_elems,
+                "alpha_freq": 0.8, "alpha_size": 1.0, "budget": budget,
+                "total_elements": total, "lshe_num_hashes": num_hashes,
+                "backend": backend,
+            },
+            "rows": rows,
+            "rows_by_backend": by_backend,
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+
+    if failures:
+        raise RuntimeError(
+            "build gates failed (speedup floor / committed baseline):\n  "
+            + "\n  ".join(failures))
+    return rows

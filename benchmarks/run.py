@@ -16,6 +16,7 @@ import traceback
 from benchmarks import (
     bench_accuracy_distribution,
     bench_buffer_size,
+    bench_build,
     bench_construction,
     bench_kernels,
     bench_planner,
@@ -39,12 +40,16 @@ SUITES = [
     ("fig19_uniform_exact", bench_uniform_exact),
     ("kernel_microbench", bench_kernels),
     ("planner", bench_planner),
+    ("build", bench_build),
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # suite name -> repo-root JSON artifact written under --json.
-JSON_ARTIFACTS = {"planner": os.path.join(REPO_ROOT, "BENCH_PLANNER.json")}
+JSON_ARTIFACTS = {
+    "planner": os.path.join(REPO_ROOT, "BENCH_PLANNER.json"),
+    "build": os.path.join(REPO_ROOT, "BENCH_BUILD.json"),
+}
 
 
 def _print_rows(rows, limit=100):
@@ -103,6 +108,10 @@ def main():
                     kwargs["calibrate"] = True
                 if args.check_baseline:
                     kwargs["baseline"] = JSON_ARTIFACTS["planner"]
+            if name == "build":
+                kwargs["backend"] = args.backend
+                if args.check_baseline:
+                    kwargs["baseline"] = JSON_ARTIFACTS["build"]
             rows = mod.run(quick=not args.full, **kwargs)
             _print_rows(rows)
             print(f"  [{time.time()-t0:.1f}s] → reports/bench/{name}.csv")

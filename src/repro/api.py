@@ -246,15 +246,25 @@ def _arena_from_npz(d: dict) -> SketchArena:
     return arena
 
 
-def _concat_packs(packs: list[PackedSketches]) -> PackedSketches:
-    """Stack equal-width single-query packs into one query-batch pack."""
-    return PackedSketches(
-        values=np.concatenate([np.asarray(p.values) for p in packs]),
-        lengths=np.concatenate([np.asarray(p.lengths) for p in packs]),
-        thresh=np.concatenate([np.asarray(p.thresh) for p in packs]),
-        buf=np.concatenate([np.asarray(p.buf) for p in packs]),
-        sizes=np.concatenate([np.asarray(p.sizes) for p in packs]),
-    )
+def _validate_postings_arg(postings: str) -> str:
+    """Reject a bad ``postings=`` BEFORE the (possibly device) build
+    runs — a typo must not cost a full construction pass."""
+    if postings not in ("lazy", "eager"):
+        raise ValueError(f"postings must be 'lazy' or 'eager', "
+                         f"got {postings!r}")
+    return postings
+
+
+def _maybe_eager_postings(sketches, postings: str) -> None:
+    """``postings="eager"``: encode the block-compressed postings from
+    the freshly packed columns at build time (device-built columns are
+    pinned to host once first). ``"lazy"`` (default) defers to the first
+    planned query — the seed-era behavior, and what the space-accuracy
+    benchmarks charge for."""
+    if _validate_postings_arg(postings) == "eager":
+        arena = SketchArena.from_pack(sketches)
+        arena.ensure_host()
+        arena.postings()
 
 
 class _PlannedIndexMixin:
@@ -397,10 +407,24 @@ class GBKMVEngine:
 
     @classmethod
     def build(cls, records, budget, r="auto", seed=0, capacity=None,
-              backend="jnp", **_):
+              backend="jnp", tau_mode="exact", build_backend=None,
+              postings="lazy", **_):
+        """Vectorized construction (no per-record Python). ``backend``
+        picks the *scoring* implementation; ``build_backend`` the
+        construction path — None/"numpy" = host vectorized,
+        "jnp"/"pallas" = the fused device hash→τ→pack computation.
+        ``tau_mode`` ∈ {"exact", "histogram"} (histogram: two-level
+        refine, τ within 2^8 of exact — the distributed selector).
+        ``postings="eager"`` encodes the block-compressed postings from
+        the packed columns before returning, so the first pruned query
+        pays no inversion."""
+        _validate_postings_arg(postings)
         core = gbkmv_mod.build_gbkmv(records, budget=budget, r=r, seed=seed,
-                                     capacity=capacity)
-        return GBKMVApiIndex(core, budget=int(budget), backend=backend)
+                                     capacity=capacity, tau_mode=tau_mode,
+                                     build_backend=build_backend)
+        idx = GBKMVApiIndex(core, budget=int(budget), backend=backend)
+        _maybe_eager_postings(core.sketches, postings)
+        return idx
 
     @staticmethod
     def wrap(core: gbkmv_mod.GBKMVIndex, budget: int | None = None,
@@ -514,9 +538,13 @@ class GKMVEngine:
     """G-KMV: global hash threshold τ, no frequent-element buffer."""
 
     @classmethod
-    def build(cls, records, budget, seed=0, capacity=None, backend="jnp", **_):
+    def build(cls, records, budget, seed=0, capacity=None, backend="jnp",
+              tau_mode="exact", build_backend=None, postings="lazy", **_):
+        _validate_postings_arg(postings)
         sk = gkmv_mod.build_gkmv(records, budget=budget, seed=seed,
-                                 capacity=capacity)
+                                 capacity=capacity, tau_mode=tau_mode,
+                                 build_backend=build_backend)
+        _maybe_eager_postings(sk, postings)
         tau = int(np.asarray(sk.thresh).max()) if sk.num_records else int(PAD - 1)
         idx = GKMVApiIndex(sk, tau=tau, seed=seed, backend=backend)
         idx._records = [np.asarray(r) for r in records]
@@ -563,10 +591,9 @@ class GKMVApiIndex(_PlannedIndexMixin, _IndexBase):
         return self.sketches
 
     def _query_pack(self, queries) -> PackedSketches:
-        return _concat_packs([
-            gkmv_mod.sketch_query(q, self.tau, seed=self.seed,
-                                  capacity=self.sketches.capacity)
-            for q in queries])
+        return gkmv_mod.sketch_query_batch(
+            queries, self.tau, seed=self.seed,
+            capacity=self.sketches.capacity)
 
     def _plan_queries(self, queries):
         qp = self._query_pack(queries)
@@ -605,8 +632,12 @@ class KMVEngine:
     """Plain KMV, uniform k = floor(budget/m) per record (Theorem 1)."""
 
     @classmethod
-    def build(cls, records, budget, seed=0, backend="jnp", **_):
-        sk = kmv_mod.build_kmv(records, budget=budget, seed=seed)
+    def build(cls, records, budget, seed=0, backend="jnp",
+              build_backend=None, postings="lazy", **_):
+        _validate_postings_arg(postings)
+        sk = kmv_mod.build_kmv(records, budget=budget, seed=seed,
+                               build_backend=build_backend)
+        _maybe_eager_postings(sk, postings)
         idx = KMVApiIndex(sk, seed=seed, backend=backend)
         idx._records = [np.asarray(r) for r in records]
         idx._build_cfg = {"budget": budget, "seed": seed, "backend": backend}

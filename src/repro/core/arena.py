@@ -180,19 +180,52 @@ class SketchArena(PackedSketches):
             new_bounds = tuple(bounds[:-1]) + ((lo_last, m_new),)
             self._shard_posts = (new_bounds, kept)
 
+    # -- host/device column residency --------------------------------------
+
+    def ensure_host(self) -> "SketchArena":
+        """Pin device-built columns to host numpy in place (one transfer).
+
+        The fused device build leaves columns as jnp arrays; host
+        pipelines that read them repeatedly (postings build, shard
+        slicing, save) call this once instead of paying a transfer per
+        ``np.asarray``. The jnp originals become the cached device pack,
+        so device residency is kept, not dropped. No-op for host-built
+        arenas.
+        """
+        import jax.numpy as jnp
+
+        if not isinstance(self.values, np.ndarray):
+            if self._dev_pack is None:
+                self._dev_pack = PackedSketches(
+                    values=jnp.asarray(self.values),
+                    lengths=jnp.asarray(self.lengths),
+                    thresh=jnp.asarray(self.thresh),
+                    buf=jnp.asarray(self.buf),
+                    sizes=jnp.asarray(self.sizes))
+            self.values = np.asarray(self.values)
+            self.lengths = np.asarray(self.lengths)
+            self.thresh = np.asarray(self.thresh)
+            self.buf = np.asarray(self.buf)
+            self.sizes = np.asarray(self.sizes)
+        return self
+
     # -- device mirrors ----------------------------------------------------
 
     def device_pack(self) -> PackedSketches:
-        """jnp mirror of the columns — placed once, then resident."""
+        """jnp mirror of the columns — placed once, then resident.
+
+        Columns that are already jnp arrays (the fused device build
+        writes them that way) are adopted as-is: build → query shares
+        one device allocation, no host round-trip."""
         import jax.numpy as jnp
 
         if self._dev_pack is None:
             self._dev_pack = PackedSketches(
-                values=jnp.asarray(np.asarray(self.values)),
-                lengths=jnp.asarray(np.asarray(self.lengths)),
-                thresh=jnp.asarray(np.asarray(self.thresh)),
-                buf=jnp.asarray(np.asarray(self.buf)),
-                sizes=jnp.asarray(np.asarray(self.sizes)))
+                values=jnp.asarray(self.values),
+                lengths=jnp.asarray(self.lengths),
+                thresh=jnp.asarray(self.thresh),
+                buf=jnp.asarray(self.buf),
+                sizes=jnp.asarray(self.sizes))
         return self._dev_pack
 
     def device_postings(self) -> DevicePostings:

@@ -4,6 +4,16 @@
 Budget accounting follows Algorithm 1: with budget ``b`` measured in hash
 slots (32-bit words), the buffer costs ``r/32`` words per record and the
 G-KMV tail gets the remainder: ``Σ_X (r/32 + n_X) <= b``.
+
+Construction is the paper's headline speed claim (§V-E: one hash
+function, >100× faster than LSH-E) and is fully vectorized here: one CSR
+ingest, element frequencies via ``np.unique`` over the flat ids, top-r by
+argpartition, buffer membership by sorted search, one flat hash pass, one
+τ-selection, one lexsort+scatter pack. The seed-era per-record builder
+survives as :func:`build_gbkmv_oracle` — the bit-parity oracle for tests
+and the build bench. ``build_backend="jnp"|"pallas"`` routes the
+hash→τ→pack stage through the fused device computation
+(:func:`repro.kernels.hash_threshold.fused_build_columns`).
 """
 
 from __future__ import annotations
@@ -15,9 +25,11 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import cost_model
-from repro.core.gkmv import select_global_threshold
-from repro.core.hashing import hash_u32_np, PAD
-from repro.core.sketches import PackedSketches, make_bitmaps, pack_rows
+from repro.core.gkmv import select_global_threshold, select_tau_flat
+from repro.core.hashing import hash_u32_np
+from repro.core.sketches import (PackedSketches, RaggedBatch, make_bitmaps,
+                                 make_bitmaps_oracle, pack_csr, pack_rows,
+                                 top_membership)
 
 
 @dataclasses.dataclass
@@ -39,10 +51,28 @@ class GBKMVIndex:
 
 
 def element_frequencies(records: Sequence[np.ndarray]) -> Counter:
+    """Per-element occurrence counts as a Counter (oracle-path helper)."""
     cnt: Counter = Counter()
     for rec in records:
         cnt.update(int(e) for e in np.asarray(rec))
     return cnt
+
+
+def element_frequencies_csr(batch: RaggedBatch
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """(unique element ids, counts) over the flat id stream — the
+    vectorized twin of :func:`element_frequencies`. Dense non-negative
+    universes count through one ``np.bincount`` (O(N + U), no sort);
+    anything else falls back to ``np.unique``."""
+    ids = batch.ids
+    if len(ids) == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    lo, hi = int(ids.min()), int(ids.max())
+    if lo >= 0 and hi < max(4 * len(ids), 1 << 22):
+        counts = np.bincount(ids, minlength=hi + 1)
+        uniq = np.nonzero(counts)[0].astype(np.int64)
+        return uniq, counts[uniq]
+    return np.unique(ids, return_counts=True)
 
 
 def choose_top_elements(freq: Counter, r: int) -> np.ndarray:
@@ -53,21 +83,109 @@ def choose_top_elements(freq: Counter, r: int) -> np.ndarray:
     return np.asarray([e for e, _ in items], dtype=np.int64)
 
 
+def choose_top_elements_csr(uniq: np.ndarray, counts: np.ndarray,
+                            r: int) -> np.ndarray:
+    """Vectorized top-r by (count desc, id asc): argpartition down to the
+    r candidates, then one small lexsort — bit-identical ordering to
+    :func:`choose_top_elements` on the same frequency table."""
+    if r <= 0 or len(uniq) == 0:
+        return np.zeros(0, dtype=np.int64)
+    r_eff = min(int(r), len(uniq))
+    if r_eff < len(uniq):
+        # np.unique returns ids ascending, so within equal counts the
+        # stable partition key (-count, id) is realized by partitioning
+        # on -count alone only AFTER tie-breaking — use the composite
+        # sort on the (cheap) argpartition survivors plus ties at the cut.
+        kth = np.partition(counts, len(counts) - r_eff)[len(counts) - r_eff]
+        cand = np.nonzero(counts >= kth)[0]
+    else:
+        cand = np.arange(len(uniq))
+    order = np.lexsort((uniq[cand], -counts[cand]))[:r_eff]
+    return uniq[cand[order]].astype(np.int64)
+
+
+def _auto_buffer_bits(counts: np.ndarray, sizes: np.ndarray,
+                      budget: int, m: int) -> int:
+    """§IV-C6 cost model on the vectorized frequency table."""
+    freqs = np.sort(counts.astype(np.int64))[::-1]
+    return cost_model.choose_buffer_size(freqs, np.asarray(sizes, np.int64),
+                                         budget, m)
+
+
 def build_gbkmv(
     records: Sequence[np.ndarray],
     budget: int,
     r: int | str = "auto",
     seed: int = 0,
     capacity: int | None = None,
+    tau_mode: str = "exact",
+    build_backend: str | None = None,
 ) -> GBKMVIndex:
-    """Algorithm 1: pick r (cost model), top-r elements, τ, pack sketches.
+    """Algorithm 1, vectorized: pick r (cost model), top-r elements, τ,
+    pack sketches — no per-record Python anywhere on the path.
 
     Args:
-      records:  element-id arrays (distinct ids within each record)
+      records:  element-id arrays (distinct ids within each record), or a
+                pre-ingested :class:`RaggedBatch`
       budget:   total space in 32-bit slots across all records
       r:        buffer bits per record; "auto" runs the §IV-C6 cost model
       capacity: optional cap on the packed G-KMV row length
+      tau_mode: "exact" (partition; bit-equal to the oracle) or
+                "histogram" (two-level histogram refine, τ within 2^8 of
+                exact — the distributed selector's semantics)
+      build_backend: None/"numpy" = host vectorized; "jnp"/"pallas" = the
+                fused device hash→τ→pack computation (Pallas hash kernel
+                on the pallas spelling), columns land device-resident
     """
+    batch = (records if isinstance(records, RaggedBatch)
+             else RaggedBatch.from_records(records))
+    m = batch.num_records
+    sizes = batch.sizes
+
+    uniq, counts = element_frequencies_csr(batch)
+    if r == "auto":
+        r = _auto_buffer_bits(counts, sizes.astype(np.int64), budget, m)
+    r = int(r)
+    top = choose_top_elements_csr(uniq, counts, r)
+
+    # Buffer split via sorted-search membership (no Python sets); the
+    # same membership pass feeds the bitmaps.
+    is_top, bit = top_membership(batch.ids, top)
+    tail_mask = ~is_top
+
+    words_per_rec = -(-r // 32) if r else 0
+    tail_budget = max(budget - m * words_per_rec, m)  # ≥1 slot per record
+
+    bitmaps = make_bitmaps(batch, top, membership=(is_top, bit))
+    if build_backend in ("jnp", "pallas"):
+        from repro.kernels.hash_threshold import fused_build_columns
+
+        packed, tau = fused_build_columns(
+            batch, tail_mask, tail_budget, seed=seed, capacity=capacity,
+            tau_mode=tau_mode, bitmaps=bitmaps, backend=build_backend)
+    else:
+        h_tail = hash_u32_np(batch.ids[tail_mask], seed=seed)
+        tau = select_tau_flat(h_tail, tail_budget, tau_mode=tau_mode)
+        keep = h_tail <= tau
+        row_tail = batch.row_index()[tail_mask]
+        thr = np.full(m, tau, dtype=np.uint32)
+        packed = pack_csr(h_tail[keep], row_tail[keep], m, thr, sizes,
+                          bitmaps=bitmaps, capacity=capacity)
+    from repro.core.arena import SketchArena
+
+    packed = SketchArena.from_pack(packed)
+    return GBKMVIndex(sketches=packed, tau=np.uint32(tau), top_elems=top,
+                      seed=seed, buffer_bits=r)
+
+
+def build_gbkmv_oracle(
+    records: Sequence[np.ndarray],
+    budget: int,
+    r: int | str = "auto",
+    seed: int = 0,
+    capacity: int | None = None,
+) -> GBKMVIndex:
+    """The seed-era per-record Algorithm 1 — test oracle for build_gbkmv."""
     m = len(records)
     freq = element_frequencies(records)
 
@@ -98,7 +216,7 @@ def build_gbkmv(
     tau = select_global_threshold(hrows, tail_budget)
 
     kept = [h[h <= tau] for h in hrows]
-    bitmaps = make_bitmaps(records, top)
+    bitmaps = make_bitmaps_oracle(records, top)
     sizes = np.asarray([len(rec) for rec in records], dtype=np.int32)
     thr = np.full(m, tau, dtype=np.uint32)
     from repro.core.arena import SketchArena
@@ -111,15 +229,28 @@ def build_gbkmv(
 
 def sketch_query(index: GBKMVIndex, q_ids: np.ndarray) -> PackedSketches:
     """Sketch a query with the index's τ / top-r / seed (§IV-B)."""
-    from repro.core.gkmv import sketch_query as _sq
+    return sketch_query_batch(index, [np.asarray(q_ids)])
 
-    q = _sq(q_ids, index.tau, seed=index.seed,
-            capacity=index.sketches.capacity, top_elems=index.top_elems)
+
+def sketch_query_batch(index: GBKMVIndex, queries) -> PackedSketches:
+    """One vectorized pack for a whole query batch (shared by api
+    ``query``/``batch_query`` and the distributed ``batch_queries``)."""
+    from repro.core.gkmv import sketch_query_batch as _sqb
+
+    q = _sqb(queries, index.tau, seed=index.seed,
+             capacity=index.sketches.capacity, top_elems=index.top_elems)
     # Align buffer word width with the index (make_bitmaps already matches
-    # because top_elems defines the width; guard the r=0 case).
+    # because top_elems defines the width; guard the r=0 case). A query
+    # pack WIDER than the index would mean dropping live buffer bits —
+    # that's an inconsistent index, not something to paper over.
     if q.buf.shape[1] != index.sketches.buf.shape[1]:
         w = index.sketches.buf.shape[1]
-        buf = np.zeros((1, w), dtype=np.uint32)
+        if q.buf.shape[1] > w:
+            raise ValueError(
+                f"query buffer needs {q.buf.shape[1]} words but the index "
+                f"stores {w}: top_elems is inconsistent with the packed "
+                "buffer width")
+        buf = np.zeros((q.num_records, w), dtype=np.uint32)
         buf[:, : q.buf.shape[1]] = q.buf
         q = dataclasses.replace(q, buf=buf)
     return q

@@ -5,6 +5,14 @@ budget: the expected row length is ``τ · |X|``, so ``Σ_j τ·x_j = b`` gives
 ``τ = b / N`` (paper §IV-C4). We compute τ *exactly* instead: the b-th
 smallest value of the multiset of all record-element hashes, which hits the
 budget precisely on the given data rather than in expectation.
+
+Construction is fully vectorized (no per-record Python): records ingest
+once into a ragged CSR batch, one hash pass covers every element, τ is a
+single ``np.partition`` (or the two-level ``histogram_tau`` under
+``tau_mode="histogram"`` — within 2^8 hash values of exact), and packing
+is one lexsort + scatter (:func:`repro.core.sketches.pack_csr`). The
+seed-era per-record builder survives as :func:`build_gkmv_oracle` — the
+bit-parity oracle the tests and the build bench compare against.
 """
 
 from __future__ import annotations
@@ -14,7 +22,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.hashing import hash_u32_np, PAD
-from repro.core.sketches import PackedSketches, pack_rows
+from repro.core.sketches import (PackedSketches, RaggedBatch, pack_csr,
+                                 pack_rows, top_membership)
+
+TAU_MODES = ("exact", "histogram")
 
 
 def select_global_threshold(
@@ -29,9 +40,33 @@ def select_global_threshold(
     if budget >= total or total == 0:
         return np.uint32(PAD - np.uint32(1))
     allh = np.concatenate([np.asarray(r, dtype=np.uint32) for r in hash_rows])
+    return select_tau_flat(allh, budget)
+
+
+def select_tau_flat(hashes: np.ndarray, budget: int,
+                    tau_mode: str = "exact") -> np.uint32:
+    """τ over a FLAT hash stream — the vectorized pipeline's selector.
+
+    ``tau_mode="exact"``: the budget-th smallest value (``np.partition``),
+    bit-equal to :func:`select_global_threshold` on the same multiset.
+    ``tau_mode="histogram"``: the two-level histogram refine shared with
+    the distributed reduction (:func:`repro.sketchindex.build
+    .histogram_tau`) — returns the 2^8-wide bin upper bound, i.e.
+    ``(τ_exact & ~0xFF) | 0xFF`` whenever the budget binds (so
+    τ_hist ≥ τ_exact and τ_hist − τ_exact ≤ 255).
+    """
+    if tau_mode not in TAU_MODES:
+        raise ValueError(f"tau_mode must be one of {TAU_MODES}, "
+                         f"got {tau_mode!r}")
+    hashes = np.asarray(hashes, dtype=np.uint32)
+    if budget >= len(hashes) or len(hashes) == 0:
+        return np.uint32(PAD - np.uint32(1))
+    if tau_mode == "histogram":
+        from repro.sketchindex.build import histogram_tau
+
+        return np.uint32(histogram_tau(hashes, budget))
     # budget-th smallest (1-indexed) == partition at budget-1
-    tau = np.partition(allh, budget - 1)[budget - 1]
-    return np.uint32(tau)
+    return np.uint32(np.partition(hashes, budget - 1)[budget - 1])
 
 
 def build_gkmv(
@@ -39,12 +74,45 @@ def build_gkmv(
     budget: int,
     seed: int = 0,
     capacity: int | None = None,
+    tau_mode: str = "exact",
+    build_backend: str | None = None,
 ) -> PackedSketches:
     """Build a G-KMV index: filter every record's hashes at the global τ.
 
-    ``capacity`` optionally caps row length (rows above it fall back to a
-    lower per-record effective threshold — see sketches.pack_rows).
+    One vectorized pass — CSR ingest, flat hash, one τ-selection, one
+    lexsort+scatter pack. ``capacity`` optionally caps row length (rows
+    above it fall back to a lower per-record effective threshold — see
+    sketches.pack_csr). ``build_backend="jnp"|"pallas"`` runs the fused
+    device hash→τ→pack computation instead of the host pass.
     """
+    from repro.core.arena import SketchArena
+
+    batch = (records if isinstance(records, RaggedBatch)
+             else RaggedBatch.from_records(records))
+    m = batch.num_records
+    if build_backend in ("jnp", "pallas"):
+        from repro.kernels.hash_threshold import fused_build_columns
+
+        packed, _ = fused_build_columns(
+            batch, np.ones(batch.total, bool), budget, seed=seed,
+            capacity=capacity, tau_mode=tau_mode, backend=build_backend)
+        return SketchArena.from_pack(packed)
+    h = hash_u32_np(batch.ids, seed=seed)
+    tau = select_tau_flat(h, budget, tau_mode=tau_mode)
+    keep = h <= tau
+    row = batch.row_index()
+    thr = np.full(m, tau, dtype=np.uint32)
+    return SketchArena.from_pack(pack_csr(
+        h[keep], row[keep], m, thr, batch.sizes, capacity=capacity))
+
+
+def build_gkmv_oracle(
+    records: Sequence[np.ndarray],
+    budget: int,
+    seed: int = 0,
+    capacity: int | None = None,
+) -> PackedSketches:
+    """The seed-era per-record builder — test oracle for build_gkmv."""
     from repro.core.arena import SketchArena
 
     m = len(records)
@@ -56,6 +124,41 @@ def build_gkmv(
     return SketchArena.from_pack(pack_rows(kept, thr, sizes, capacity=capacity))
 
 
+def sketch_query_batch(
+    queries: Sequence[np.ndarray],
+    tau: np.uint32,
+    seed: int = 0,
+    capacity: int | None = None,
+    top_elems: np.ndarray | None = None,
+) -> PackedSketches:
+    """Sketch a whole query batch at threshold τ in one vectorized pass.
+
+    The single shared packer behind api ``query``/``batch_query`` and the
+    distributed ``batch_queries``: CSR ingest, one hash pass, sorted-search
+    buffer membership (no per-element Python ``set``), one lexsort+scatter
+    pack, vectorized bitmaps. Row i of the result is bit-identical to
+    :func:`sketch_query` on ``queries[i]`` alone (given the same
+    ``capacity``, which fixes the pack width).
+    """
+    from repro.core.sketches import make_bitmaps
+
+    batch = (queries if isinstance(queries, RaggedBatch)
+             else RaggedBatch.from_records(queries))
+    m = batch.num_records
+    h = hash_u32_np(batch.ids, seed=seed)
+    tail_mask = np.ones(batch.total, bool)
+    bitmaps = None
+    if top_elems is not None and len(top_elems):
+        is_top, _ = top_membership(batch.ids, top_elems)
+        tail_mask = ~is_top
+        bitmaps = make_bitmaps(batch, top_elems)
+    keep = tail_mask & (h <= tau)
+    row = batch.row_index()
+    thr = np.full(m, tau, dtype=np.uint32)
+    return pack_csr(h[keep], row[keep], m, thr, batch.sizes,
+                    bitmaps=bitmaps, capacity=capacity)
+
+
 def sketch_query(
     q_ids: np.ndarray,
     tau: np.uint32,
@@ -64,13 +167,25 @@ def sketch_query(
     top_elems: np.ndarray | None = None,
 ) -> PackedSketches:
     """Sketch one query record at threshold τ (matching an index build)."""
-    from repro.core.sketches import make_bitmaps
+    return sketch_query_batch([np.asarray(q_ids)], tau, seed=seed,
+                              capacity=capacity, top_elems=top_elems)
+
+
+def sketch_query_oracle(
+    q_ids: np.ndarray,
+    tau: np.uint32,
+    seed: int = 0,
+    capacity: int | None = None,
+    top_elems: np.ndarray | None = None,
+) -> PackedSketches:
+    """Seed-era per-element query sketcher — test oracle for sketch_query."""
+    from repro.core.sketches import make_bitmaps_oracle
 
     q_ids = np.asarray(q_ids)
     if top_elems is not None and len(top_elems):
         top_set = set(int(e) for e in top_elems)
         tail = np.asarray([e for e in q_ids if int(e) not in top_set])
-        bitmaps = make_bitmaps([q_ids], top_elems)
+        bitmaps = make_bitmaps_oracle([q_ids], top_elems)
     else:
         tail = q_ids
         bitmaps = None

@@ -65,11 +65,60 @@ def unit_np(v) -> np.ndarray:
     return (np.asarray(v, dtype=np.float64) + 1.0) / TWO32
 
 
+def _mix_np(h: np.ndarray) -> np.ndarray:
+    """murmur3 fmix32 on a uint32 array of any shape (host).
+
+    uint32 multiplies wrap mod 2^32 in C just like the uint64-widening
+    spelling in :func:`hash_u32_np` — bit-identical, half the traffic.
+    """
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def minhash_seed_offsets(num_hashes: int, seed: int = 0,
+                         start: int = 0) -> np.ndarray:
+    """uint32[num_hashes] pre-mix additive constants for hash functions
+    ``start .. start+num_hashes``: ``0x9E3779B9 · (seed·1000003 + i + 1)``
+    mod 2^32 — exactly the per-function seeding hash_u32_np applies."""
+    i = np.arange(start, start + num_hashes, dtype=np.uint64)
+    offs = (np.uint64(0x9E3779B9) * (np.uint64(seed) * np.uint64(1000003)
+                                     + i + np.uint64(1)))
+    return (offs & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def minhash_matrix_np(ids: np.ndarray, num_hashes: int, seed: int = 0,
+                      start: int = 0) -> np.ndarray:
+    """All hash values ``uint32[num_hashes, n]`` of one id array under
+    ``num_hashes`` independent functions — one batched mix, no loop."""
+    ids32 = (np.asarray(ids, dtype=np.uint64)
+             & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    offs = minhash_seed_offsets(num_hashes, seed=seed, start=start)
+    with np.errstate(over="ignore"):
+        return _mix_np(ids32[None, :] + offs[:, None])
+
+
 def minhash_signature_np(ids: np.ndarray, num_hashes: int, seed: int = 0) -> np.ndarray:
     """MinHash signature (k independent hash fns) of one element-id set.
 
-    Baseline substrate for MinHash / LSH-E. Returns ``uint32[num_hashes]``.
+    Baseline substrate for MinHash / LSH-E. Returns ``uint32[num_hashes]``
+    from ONE ``[num_hashes, n]`` batched hash + row-min (the seed-era
+    256-iteration Python loop survives as
+    :func:`minhash_signature_oracle`).
     """
+    ids = np.asarray(ids)
+    if len(ids) == 0:
+        return np.full(num_hashes, PAD, dtype=np.uint32)
+    return minhash_matrix_np(ids, num_hashes, seed=seed).min(axis=1)
+
+
+def minhash_signature_oracle(ids: np.ndarray, num_hashes: int,
+                             seed: int = 0) -> np.ndarray:
+    """Seed-era one-hash-at-a-time loop — test oracle for the batched
+    signature (bit-identical output)."""
     ids = np.asarray(ids, dtype=np.uint64)
     sig = np.empty(num_hashes, dtype=np.uint32)
     for i in range(num_hashes):

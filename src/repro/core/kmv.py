@@ -3,6 +3,12 @@
 Theorem 1: under a total budget ``b`` over ``m`` records, the optimal plain
 KMV allocation is uniform ``k_i = floor(b / m)``, because pair estimation
 uses ``k = min(k_Q, k_X)`` (Eq. 8). We implement exactly that.
+
+Construction is vectorized: one CSR ingest, one flat hash pass, one
+lexsort, then each row keeps its k smallest by within-row position — no
+per-record Python. :func:`build_kmv_oracle` keeps the seed-era loop as
+the bit-parity test oracle; ``build_backend="jnp"|"pallas"`` routes the
+hash/sort/pack through the fused device computation.
 """
 
 from __future__ import annotations
@@ -12,15 +18,51 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.hashing import hash_u32_np
-from repro.core.sketches import PackedSketches, pack_rows
+from repro.core.sketches import PackedSketches, RaggedBatch, pack_csr, pack_rows
 from repro.core.hashing import PAD
 
 
-def build_kmv(records: Sequence[np.ndarray], budget: int, seed: int = 0) -> PackedSketches:
+def build_kmv(records: Sequence[np.ndarray], budget: int, seed: int = 0,
+              build_backend: str | None = None) -> PackedSketches:
     """Keep the ``floor(budget/m)`` minimum hash values of every record.
 
     ``budget`` counts hash slots (paper's "number of signatures").
     """
+    from repro.core.arena import SketchArena
+
+    batch = (records if isinstance(records, RaggedBatch)
+             else RaggedBatch.from_records(records))
+    m = batch.num_records
+    k = max(budget // max(m, 1), 2)
+    if build_backend in ("jnp", "pallas"):
+        from repro.kernels.hash_threshold import fused_build_columns
+
+        packed, _ = fused_build_columns(
+            batch, np.ones(batch.total, bool), 0, seed=seed, row_cap=k,
+            backend=build_backend)
+        return SketchArena.from_pack(packed)
+    h = hash_u32_np(batch.ids, seed=seed)
+    row = batch.row_index()
+    # Per-row k-smallest: one u64 (row | hash) key sort, keep pos < k.
+    key = np.sort((row.astype(np.uint64) << np.uint64(32))
+                  | h.astype(np.uint64))
+    h = (key & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    row = (key >> np.uint64(32)).astype(np.int64)
+    counts = np.bincount(row, minlength=m).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    pos = np.arange(len(h), dtype=np.int64) - starts[row]
+    keep = pos < k
+    # Plain KMV has no threshold semantics; use PAD-1 so τ_pair never binds.
+    thr = np.full(m, PAD - np.uint32(1), dtype=np.uint32)
+    # Truncation preserves the (row, hash) order — skip pack_csr's sort.
+    return SketchArena.from_pack(pack_csr(
+        h[keep], row[keep], m, thr, batch.sizes, capacity=k,
+        presorted=True))
+
+
+def build_kmv_oracle(records: Sequence[np.ndarray], budget: int,
+                     seed: int = 0) -> PackedSketches:
+    """The seed-era per-record builder — test oracle for build_kmv."""
     from repro.core.arena import SketchArena
 
     m = len(records)
@@ -31,7 +73,6 @@ def build_kmv(records: Sequence[np.ndarray], budget: int, seed: int = 0) -> Pack
         h = np.sort(hash_u32_np(np.asarray(rec), seed=seed))
         rows.append(h[:k])
         sizes[i] = len(rec)
-    # Plain KMV has no threshold semantics; use PAD-1 so τ_pair never binds.
     thr = np.full(m, PAD - np.uint32(1), dtype=np.uint32)
     return SketchArena.from_pack(pack_rows(rows, thr, sizes, capacity=k))
 

@@ -67,16 +67,19 @@ def build_lshe(
     num_partitions: int = 32,
     seed: int = 0,
 ) -> LSHEnsemble:
+    """Build the ensemble. The signature matrix — the entire
+    construction cost (§V-E) — comes from the vectorized batched
+    MinHash (:func:`repro.core.minhash.build_signatures`), not the
+    seed-era per-record × per-function loop."""
     sizes = np.asarray([len(r) for r in records], dtype=np.int32)
     order = np.argsort(sizes, kind="stable")
     m = len(records)
     num_partitions = max(1, min(num_partitions, m))
     # Equal-depth partitioning (optimal per [44] §4).
     bounds = np.linspace(0, m, num_partitions + 1).astype(np.int64)
-    uppers = np.asarray(
-        [sizes[order[max(b - 1, 0)]] if b > 0 else 0 for b in bounds[1:]],
-        dtype=np.int64,
-    )
+    ends = bounds[1:]
+    uppers = np.where(
+        ends > 0, sizes[order[np.maximum(ends - 1, 0)]], 0).astype(np.int64)
     sigs = build_signatures(records, num_hashes, seed=seed)
     return LSHEnsemble(
         signatures=sigs, sizes=sizes, order=order,

@@ -30,6 +30,57 @@ from repro.core.hashing import PAD, hash_u32_np
 
 
 @dataclasses.dataclass
+class RaggedBatch:
+    """A record batch ingested once into CSR form (flat ids + offsets).
+
+    The vectorized construction pipeline never walks records in Python:
+    every per-record quantity becomes a segment op over ``ids`` keyed by
+    ``offsets`` (frequencies = bincount, buffer split = sorted-search,
+    packing = lexsort + scatter). ``ids`` is record-major: record i owns
+    ``ids[offsets[i]:offsets[i+1]]``.
+    """
+
+    ids: np.ndarray       # int64[N] flat element ids, record-major
+    offsets: np.ndarray   # int64[m+1] row starts (offsets[-1] == N)
+
+    @classmethod
+    def from_records(cls, records: Sequence[np.ndarray]) -> "RaggedBatch":
+        try:
+            # Fast path: records already 1-D arrays — one concatenate,
+            # no per-record asarray round-trip.
+            sizes = np.fromiter((len(r) for r in records), np.int64,
+                                count=len(records))
+            ids = (np.concatenate(records).astype(np.int64, copy=False)
+                   if len(records) and sizes.sum() else np.zeros(0, np.int64))
+            if ids.ndim != 1:
+                raise ValueError
+        except (ValueError, TypeError):
+            arrs = [np.asarray(r, dtype=np.int64).reshape(-1)
+                    for r in records]
+            sizes = np.asarray([len(a) for a in arrs], dtype=np.int64)
+            ids = (np.concatenate(arrs) if arrs else np.zeros(0, np.int64))
+        offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+        return cls(ids=ids, offsets=offsets)
+
+    @property
+    def num_records(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def total(self) -> int:
+        return int(self.offsets[-1])
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.diff(self.offsets).astype(np.int32)
+
+    def row_index(self) -> np.ndarray:
+        """int64[N]: the record id owning each flat position."""
+        return np.repeat(np.arange(self.num_records, dtype=np.int64),
+                         np.diff(self.offsets))
+
+
+@dataclasses.dataclass
 class PackedSketches:
     """Device-ready GB-KMV index (or a single-query slice of one)."""
 
@@ -99,9 +150,7 @@ def pack_rows(
     """
     m = len(hash_rows)
     max_len = max((len(r) for r in hash_rows), default=0)
-    cap = capacity if capacity is not None else max_len
-    cap = max(cap, 1)
-    cap = -(-cap // pad_to_multiple) * pad_to_multiple  # round up
+    cap = _resolve_capacity(max_len, capacity, pad_to_multiple)
 
     values = np.full((m, cap), PAD, dtype=np.uint32)
     lengths = np.zeros(m, dtype=np.int32)
@@ -126,13 +175,159 @@ def pack_rows(
     )
 
 
-def make_bitmaps(records: Sequence[np.ndarray], top_elems: np.ndarray) -> np.ndarray:
-    """Per-record bitmap over the top-r frequent elements.
+def _resolve_capacity(max_len: int, capacity: int | None,
+                      pad_to_multiple: int) -> int:
+    """The shared pack width rule: requested capacity (or the longest
+    row), floored at 1, rounded up to ``pad_to_multiple``."""
+    cap = capacity if capacity is not None else max_len
+    cap = max(cap, 1)
+    return -(-cap // pad_to_multiple) * pad_to_multiple
+
+
+def pack_csr(
+    hashes: np.ndarray,
+    row: np.ndarray,
+    m: int,
+    thresholds: np.ndarray,
+    sizes: np.ndarray,
+    bitmaps: np.ndarray | None = None,
+    capacity: int | None = None,
+    pad_to_multiple: int = 8,
+    presorted: bool = False,
+) -> PackedSketches:
+    """Vectorized twin of :func:`pack_rows` over a flat (hash, row) list.
+
+    ``hashes[k]`` belongs to record ``row[k]``; neither needs any
+    pre-sorting — one u64 key sort orders the whole batch (row-major,
+    hashes ascending within a row) and one scatter writes the value
+    matrix. Callers whose stream already has that order pass
+    ``presorted=True`` to skip the sort. Bit-identical to packing the
+    per-record lists through ``pack_rows``, including the
+    capacity-overflow rule (rows longer than the capacity keep their
+    smallest values and lower their effective threshold to the largest
+    kept value).
+    """
+    hashes = np.asarray(hashes, dtype=np.uint32)
+    row = np.asarray(row, dtype=np.int64)
+    if not presorted:
+        # One u64 key sort realizes (row asc, hash asc) and decomposes
+        # back — same order a stable lexsort gives, at single-sort cost.
+        key = np.sort((row.astype(np.uint64) << np.uint64(32))
+                      | hashes.astype(np.uint64))
+        hashes = (key & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        row = (key >> np.uint64(32)).astype(np.int64)
+
+    counts = np.bincount(row, minlength=m).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    cap = _resolve_capacity(int(counts.max()) if m else 0, capacity,
+                            pad_to_multiple)
+
+    thr = np.asarray(thresholds, dtype=np.uint32).copy()
+    over = counts > cap
+    if over.any():
+        # Effective threshold drops to the cap-th smallest kept value.
+        thr[over] = hashes[starts[:-1][over] + cap - 1]
+
+    pos = np.arange(len(hashes), dtype=np.int64) - starts[row]
+    keep = pos < cap
+    values = np.full((m, cap), PAD, dtype=np.uint32)
+    values[row[keep], pos[keep]] = hashes[keep]
+    lengths = np.minimum(counts, cap).astype(np.int32)
+
+    if bitmaps is None:
+        bitmaps = np.zeros((m, 0), dtype=np.uint32)
+    return PackedSketches(
+        values=values,
+        lengths=lengths,
+        thresh=thr,
+        buf=np.asarray(bitmaps, dtype=np.uint32),
+        sizes=np.asarray(sizes, dtype=np.int32),
+    )
+
+
+def top_membership(ids: np.ndarray, top_elems: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """(is_top bool[N], bit j int64[N]) of flat ids vs the top-r set.
+
+    Sorted-search (or dense-table) membership — the vectorized
+    replacement for the per-element Python ``set`` test. ``bit[k]`` is
+    only meaningful where ``is_top[k]``; bit j is the *frequency-order*
+    position of the element in ``top_elems`` (the buffer-bit layout
+    make_bitmaps uses).
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    top = np.asarray(top_elems, dtype=np.int64)
+    if len(top) == 0 or len(ids) == 0:
+        return np.zeros(len(ids), bool), np.zeros(len(ids), np.int64)
+    max_id = int(top.max())
+    if 0 <= int(top.min()) and max_id < max(4 * len(ids), 1 << 22):
+        # Dense-universe fast path: one gather per element beats a
+        # log(r) binary search. Table bytes are bounded by ~8×N.
+        table = np.full(max_id + 2, -1, np.int64)
+        table[top] = np.arange(len(top), dtype=np.int64)
+        if int(ids.min()) >= 0 and int(ids.max()) <= max_id:
+            bit = table[ids]
+        else:
+            safe = np.where((ids >= 0) & (ids <= max_id), ids, max_id + 1)
+            bit = table[safe]
+        return bit >= 0, bit
+    sort_idx = np.argsort(top, kind="stable")
+    sorted_top = top[sort_idx]
+    pos = np.searchsorted(sorted_top, ids)
+    ok = pos < len(top)
+    is_top = np.zeros(len(ids), bool)
+    is_top[ok] = sorted_top[pos[ok]] == ids[ok]
+    bit = np.zeros(len(ids), np.int64)
+    bit[is_top] = sort_idx[pos[is_top]]
+    return is_top, bit
+
+
+def make_bitmaps(records: Sequence[np.ndarray], top_elems: np.ndarray,
+                 membership: tuple[np.ndarray, np.ndarray] | None = None
+                 ) -> np.ndarray:
+    """Per-record bitmap over the top-r frequent elements (vectorized).
 
     ``top_elems[j]`` is the element id owning bit ``j``. Returns
     ``uint32[m, ceil(r/32)]`` (r rounded up to a word). Word layout: bit j
-    lives in word ``j // 32`` at position ``j % 32``.
+    lives in word ``j // 32`` at position ``j % 32``. Accepts either a
+    record list or a :class:`RaggedBatch`; ``membership`` passes a
+    precomputed :func:`top_membership` of the batch's flat ids so build
+    pipelines that already split on it don't pay the pass twice.
     """
+    batch = (records if isinstance(records, RaggedBatch)
+             else RaggedBatch.from_records(records))
+    r = len(top_elems)
+    words = max(-(-r // 32), 1) if r else 0
+    m = batch.num_records
+    out = np.zeros((m, words), dtype=np.uint32)
+    if r == 0 or batch.total == 0:
+        return out
+    is_top, bit = (membership if membership is not None
+                   else top_membership(batch.ids, top_elems))
+    rows = batch.row_index()[is_top]
+    j = bit[is_top]
+    # Buffered bool scatter (duplicates just re-set True), then one
+    # vectorized bit-pack — far cheaper than an unbuffered bitwise_or.at.
+    # Chunk rows so the [chunk, words*32] bool matrix stays small.
+    shifts = (np.uint32(1) << np.arange(32, dtype=np.uint32))
+    chunk = max(1, (1 << 22) // max(words * 32, 1))
+    # rows comes off row_index() and is already ascending; searchsorted
+    # below relies on that record-major order.
+    lo_idx = 0
+    for lo in range(0, m, chunk):
+        hi = min(lo + chunk, m)
+        hi_idx = np.searchsorted(rows, hi, side="left")
+        bits = np.zeros((hi - lo, words * 32), dtype=bool)
+        bits[rows[lo_idx:hi_idx] - lo, j[lo_idx:hi_idx]] = True
+        out[lo:hi] = (bits.reshape(hi - lo, words, 32)
+                      * shifts[None, None, :]).sum(axis=2, dtype=np.uint32)
+        lo_idx = hi_idx
+    return out
+
+
+def make_bitmaps_oracle(records: Sequence[np.ndarray],
+                        top_elems: np.ndarray) -> np.ndarray:
+    """The seed-era per-element loop — the test oracle for make_bitmaps."""
     r = len(top_elems)
     words = max(-(-r // 32), 1) if r else 0
     m = len(records)

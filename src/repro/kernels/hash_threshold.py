@@ -1,10 +1,24 @@
 """Pallas TPU kernel: fused fingerprint hash + global-τ filter
-(GB-KMV construction hot loop, Algorithm 1 line 6).
+(GB-KMV construction hot loop, Algorithm 1 line 6) — and the fused
+device-path sketch build on top of it.
 
 Element ids stream through in lane-aligned 2D tiles; each tile is mixed
 (murmur3 fmix32) and compared against the global threshold in registers —
 one HBM read (ids) and two writes (hashes, keep-mask) per element, no
 intermediate materialization.
+
+:func:`fused_build_columns` is the construction pipeline's device path:
+one jitted hash→τ-select→lexsort stage (the Pallas kernel or its
+``hash_u32`` jnp twin does the mixing; τ comes from ``jnp.sort`` in
+exact mode or the two-level ``histogram_tau`` shared with the
+distributed reduction), then one jitted scatter-pack stage that writes
+the packed sketch columns. The only host crossing between the two is
+the per-row count vector, which fixes the static pack width — every
+per-element quantity stays on device, and the columns come back as
+device-resident jnp arrays ready to live in a
+:class:`repro.core.arena.SketchArena`. Bit-identical to the host
+``pack_csr`` pipeline (same hashes, same τ rule, same stable sort, same
+capacity-overflow thresholds).
 """
 
 from __future__ import annotations
@@ -13,7 +27,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.core.hashing import PAD, hash_u32
 
 LANES = 128
 
@@ -59,3 +76,162 @@ def hash_threshold(ids2d, seed, tau, *, block_rows: int = 8, interpret: bool = F
         ],
         interpret=interpret,
     )(seed_arr, tau_arr, ids2d)
+
+
+# ---------------------------------------------------------------------------
+# Fused device-path sketch construction (hash → τ → sort → pack)
+# ---------------------------------------------------------------------------
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _hash_flat(ids, seed, *, use_pallas: bool, interpret: bool):
+    """u32[N] fingerprints of a flat id stream (Pallas kernel or jnp twin).
+
+    The Pallas spelling pads to the [R, 128] lane view the kernel wants
+    and slices back; padding lanes hash garbage that never escapes.
+    """
+    n = ids.shape[0]
+    if not use_pallas:
+        return hash_u32(ids, seed=seed)
+    rows = max(-(-n // LANES), 1)
+    rows = -(-rows // 8) * 8
+    flat = jnp.zeros(rows * LANES, jnp.uint32).at[:n].set(
+        ids.astype(jnp.uint32))
+    h2d, _ = hash_threshold(flat.reshape(rows, LANES), seed,
+                            jnp.uint32(PAD), interpret=interpret)
+    return h2d.reshape(-1)[:n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "budget", "tau_mode", "filter_tau", "use_pallas",
+                     "interpret"))
+def _fused_hash_sort(ids, row, seed, *, m: int, budget: int, tau_mode: str,
+                     filter_tau: bool, use_pallas: bool, interpret: bool):
+    """Stage 1: hash every element, select τ, stable-sort to row-major.
+
+    Returns (hs, rs, counts, starts, tau): hashes/rows sorted by
+    (row asc, hash asc) with τ-dropped elements parked on sentinel row
+    ``m`` at the tail, per-row kept counts, their exclusive prefix sum,
+    and the selected threshold. ``filter_tau=False`` (plain-KMV mode)
+    keeps everything and pins τ at PAD-1 — positional truncation happens
+    in stage 2.
+    """
+    n = ids.shape[0]
+    h = _hash_flat(ids, seed, use_pallas=use_pallas, interpret=interpret)
+    if not filter_tau or budget >= n:
+        tau = jnp.uint32(PAD - np.uint32(1))
+        keep = jnp.ones(n, bool)
+    else:
+        if tau_mode == "histogram":
+            from repro.sketchindex.build import histogram_tau
+
+            tau = histogram_tau(h, budget)
+        else:
+            # Exact: the budget-th smallest hash, same as np.partition.
+            tau = jnp.sort(h)[budget - 1]
+        keep = h <= tau
+    rkey = jnp.where(keep, row.astype(jnp.int32), jnp.int32(m))
+    hkey = jnp.where(keep, h, jnp.uint32(PAD))
+    order = jnp.lexsort((hkey, rkey))
+    rs, hs = rkey[order], hkey[order]
+    counts = jnp.zeros(m + 1, jnp.int32).at[rs].add(1)[:m]
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    return hs, rs, counts, starts, tau
+
+
+@functools.partial(jax.jit, static_argnames=("m", "cap", "limit", "lower_thresh"))
+def _fused_pack(hs, rs, counts, starts, tau, *, m: int, cap: int, limit: int,
+                lower_thresh: bool):
+    """Stage 2: scatter the row-sorted hashes into packed [m, cap] columns.
+
+    ``limit`` is the per-row kept length (== cap for τ-mode, == k for
+    plain KMV where cap is k rounded up to the pad multiple).
+    ``lower_thresh`` applies the capacity-overflow rule: a row with more
+    kept hashes than ``cap`` drops its effective threshold to the
+    largest value it packs (pack_csr's exact semantics).
+    """
+    n = hs.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32) - starts[rs]
+    sel = (rs < m) & (pos < limit)
+    tr = jnp.where(sel, rs, jnp.int32(m))        # sentinel row, sliced off
+    tp = jnp.where(sel, pos, 0)
+    values = jnp.full((m + 1, cap), jnp.uint32(PAD))
+    values = values.at[tr, tp].set(jnp.where(sel, hs, jnp.uint32(PAD)))[:m]
+    lengths = jnp.minimum(counts, limit).astype(jnp.int32)
+    if lower_thresh:
+        idx = jnp.clip(starts[:m] + (cap - 1), 0, n - 1)
+        thresh = jnp.where(counts > cap, hs[idx],
+                           jnp.broadcast_to(tau, (m,)))
+    else:
+        thresh = jnp.broadcast_to(tau, (m,))
+    return values, lengths, thresh.astype(jnp.uint32)
+
+
+def fused_build_columns(batch, tail_mask, budget: int, *, seed: int = 0,
+                        capacity: int | None = None, tau_mode: str = "exact",
+                        bitmaps=None, backend: str = "jnp",
+                        row_cap: int | None = None,
+                        interpret: bool | None = None):
+    """Device-path sketch construction: (PackedSketches, τ).
+
+    ``batch`` is a :class:`repro.core.sketches.RaggedBatch`; ``tail_mask``
+    selects the hashed (non-buffered) elements. ``row_cap`` switches to
+    plain-KMV semantics (keep the k smallest per row, τ never binds).
+    The returned pack's columns are jnp arrays already resident on the
+    default device — :class:`SketchArena` adopts them without a copy —
+    and are bit-identical to the host ``pack_csr`` pipeline's output.
+    """
+    from repro.core.gkmv import TAU_MODES
+    from repro.core.sketches import PackedSketches, _resolve_capacity, pack_csr
+
+    if tau_mode not in TAU_MODES:
+        raise ValueError(f"tau_mode must be one of {TAU_MODES}, "
+                         f"got {tau_mode!r}")
+    if interpret is None:
+        interpret = not _on_tpu()
+    tail_mask = np.asarray(tail_mask, bool)
+    ids = np.asarray(batch.ids)[tail_mask]
+    row = batch.row_index()[tail_mask]
+    m, n = batch.num_records, len(ids)
+    sizes = batch.sizes
+
+    if m == 0 or n == 0:
+        thr_fill = np.uint32(PAD - np.uint32(1))
+        pack = pack_csr(np.zeros(0, np.uint32), np.zeros(0, np.int64), m,
+                        np.full(m, thr_fill, np.uint32), sizes,
+                        bitmaps=bitmaps,
+                        capacity=row_cap if row_cap is not None else capacity)
+        return pack, thr_fill
+
+    # uint32 id view with the same wrap rule as hash_u32_np.
+    ids32 = jnp.asarray((ids.astype(np.uint64) & np.uint64(0xFFFFFFFF))
+                        .astype(np.uint32))
+    hs, rs, counts, starts, tau = _fused_hash_sort(
+        ids32, jnp.asarray(row, jnp.int32), jnp.uint32(seed), m=m,
+        budget=int(budget), tau_mode=tau_mode, filter_tau=row_cap is None,
+        use_pallas=(backend == "pallas"), interpret=bool(interpret))
+
+    # The one host crossing: per-row counts fix the static pack width.
+    counts_h = np.asarray(counts)
+    if row_cap is not None:
+        cap = _resolve_capacity(int(row_cap), None, 8)
+        limit, lower = int(row_cap), False
+    else:
+        cap = _resolve_capacity(int(counts_h.max()) if m else 0, capacity, 8)
+        limit, lower = cap, True
+    values, lengths, thresh = _fused_pack(
+        hs, rs, counts, starts, tau, m=m, cap=cap, limit=limit,
+        lower_thresh=lower)
+
+    if bitmaps is None:
+        buf = jnp.zeros((m, 0), jnp.uint32)
+    else:
+        buf = jnp.asarray(np.asarray(bitmaps, np.uint32))
+    pack = PackedSketches(values=values, lengths=lengths, thresh=thresh,
+                          buf=buf, sizes=jnp.asarray(sizes, jnp.int32))
+    return pack, np.uint32(tau)

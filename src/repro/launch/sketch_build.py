@@ -30,6 +30,19 @@ def main():
     ap.add_argument("--buffer", default="auto")
     ap.add_argument("--out", default="reports/indexes")
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--build-backend", default="numpy",
+                    choices=("numpy", "jnp", "pallas"),
+                    help="construction path: host vectorized (numpy) or "
+                         "the fused device hash→τ→pack computation")
+    ap.add_argument("--tau-mode", default="exact",
+                    choices=("exact", "histogram"),
+                    help="τ selector: exact partition, or the two-level "
+                         "histogram refine (within 2^8 of exact — the "
+                         "distributed reduction's semantics)")
+    ap.add_argument("--eager-postings", action="store_true",
+                    help="encode the block-compressed postings from the "
+                         "packed columns at build time (build → query "
+                         "with no first-query inversion)")
     args = ap.parse_args()
 
     recs = datasets.load(args.dataset, scale=args.scale)
@@ -52,13 +65,20 @@ def main():
           f"2 psums of 16KB — node-count independent)")
 
     r = args.buffer if args.buffer == "auto" else int(args.buffer)
+    build_backend = None if args.build_backend == "numpy" else args.build_backend
     t0 = time.time()
-    index = api.get_engine("gbkmv").build(recs, budget, r=r)
+    index = api.get_engine("gbkmv").build(
+        recs, budget, r=r, build_backend=build_backend,
+        tau_mode=args.tau_mode,
+        postings="eager" if args.eager_postings else "lazy")
     build_s = time.time() - t0
     s = index.core.sketches
     print(f"[build] m={len(recs)} elements={total} → sketch "
           f"{index.nbytes()/1e6:.2f}MB (cap={s.capacity}, buffer r="
-          f"{index.core.buffer_bits}) in {build_s:.2f}s")
+          f"{index.core.buffer_bits}) in {build_s:.2f}s "
+          f"({len(recs)/max(build_s, 1e-9):,.0f} rec/s, "
+          f"{total/max(build_s, 1e-9):,.0f} elem/s; "
+          f"path={args.build_backend}, tau={args.tau_mode})")
 
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, f"{args.dataset}.npz")

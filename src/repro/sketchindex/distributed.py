@@ -91,30 +91,14 @@ def to_device_index(index, mesh: Mesh) -> DeviceIndex:
 
 
 def batch_queries(index, queries) -> PackedSketches:
-    """Sketch a list of query id-arrays into one replicated query pack."""
-    from repro.core.gbkmv import sketch_query
+    """Sketch a list of query id-arrays into one replicated query pack.
 
-    packs = [sketch_query(index, np.asarray(q)) for q in queries]
-    cap = max(p.values.shape[1] for p in packs)
-    w = max(p.buf.shape[1] for p in packs)
+    One vectorized pass for the whole batch (CSR ingest + one hash pass +
+    one lexsort-pack) — ``repro.core.gbkmv.sketch_query_batch``, the same
+    packer the api query path uses."""
+    from repro.core.gbkmv import sketch_query_batch
 
-    def padcat(field, fill, width):
-        rows = []
-        for p in packs:
-            a = np.asarray(getattr(p, field))
-            if a.ndim == 2 and a.shape[1] < width:
-                a = np.pad(a, ((0, 0), (0, width - a.shape[1])),
-                           constant_values=fill)
-            rows.append(a)
-        return np.concatenate(rows, axis=0)
-
-    return PackedSketches(
-        values=padcat("values", PAD, cap),
-        lengths=padcat("lengths", 0, 0),
-        thresh=padcat("thresh", 0, 0),
-        buf=padcat("buf", 0, w),
-        sizes=padcat("sizes", 0, 0),
-    )
+    return sketch_query_batch(index, [np.asarray(q) for q in queries])
 
 
 def _scores_jnp(values, lengths, thresh, buf, q_values, q_thresh, q_buf, q_sizes):

@@ -14,6 +14,12 @@ The buffer's top-r element set is frozen between rebuilds (new elements
 hash into the G-KMV tail); a frequency drift counter triggers a full
 rebuild when the frozen set no longer covers the head mass — the same
 amortized-rebuild pattern production inverted indexes use.
+
+The insert path is vectorized end-to-end: new records ingest once into a
+ragged CSR batch (one hash pass, sorted-search buffer membership), the
+old rows' kept hashes flatten straight out of the packed columns, and
+the repack is one lexsort+scatter (``pack_csr``) — no per-record Python
+on either side of the τ-retightening.
 """
 
 from __future__ import annotations
@@ -23,8 +29,9 @@ import dataclasses
 import numpy as np
 
 from repro.core.gbkmv import GBKMVIndex
-from repro.core.hashing import PAD, hash_u32_np
-from repro.core.sketches import PackedSketches, make_bitmaps, pack_rows
+from repro.core.hashing import hash_u32_np
+from repro.core.sketches import (PackedSketches, RaggedBatch, make_bitmaps,
+                                 pack_csr, top_membership)
 
 
 @dataclasses.dataclass
@@ -40,6 +47,18 @@ def _kept_hash_rows(s: PackedSketches) -> list[np.ndarray]:
     return [vals[i, : lens[i]] for i in range(s.num_records)]
 
 
+def _flat_kept(s: PackedSketches) -> tuple[np.ndarray, np.ndarray]:
+    """All live hashes of a packed index as flat (hash, row) arrays —
+    row-major, ascending within each row (the packed order)."""
+    vals = np.asarray(s.values)
+    lens = np.asarray(s.lengths)
+    live = np.arange(s.capacity, dtype=np.int64)[None, :] < lens[:, None]
+    h = vals[live]
+    row = np.broadcast_to(
+        np.arange(s.num_records, dtype=np.int64)[:, None], vals.shape)[live]
+    return h.astype(np.uint32), row
+
+
 def insert_records(
     index: GBKMVIndex,
     new_records: list[np.ndarray],
@@ -49,63 +68,58 @@ def insert_records(
     """Insert ``new_records`` keeping total slots ≤ ``budget``.
 
     Steps (all on kept hashes only — no raw-data access for old rows):
-      1. hash + buffer-split the new records at the CURRENT τ / top-r;
+      1. hash + buffer-split the new records at the CURRENT τ / top-r
+         (one CSR batch: one hash pass, sorted-search membership);
       2. if the total kept hashes exceed the tail budget, re-select
          τ' = budget-th smallest kept hash and refilter every row;
-      3. repack. Rows keep per-row effective thresholds (min(τ', old)).
+      3. repack (one lexsort+scatter). Rows keep per-row effective
+         thresholds (min(τ', old)).
     """
     stats = stats or DynamicStats()
     s = index.sketches
-    top = index.top_elems
-    top_set = set(int(e) for e in np.asarray(top))
+    top = np.asarray(index.top_elems)
     r = index.buffer_bits
     m_old = s.num_records
 
     # 1. new rows: split buffer head / hashed tail, filter at current τ.
-    new_tails, new_kept, new_sizes = [], [], []
-    drift_hits = 0
-    drift_total = 0
-    for rec in new_records:
-        rec = np.asarray(rec)
-        if top_set:
-            mask = np.asarray([int(e) not in top_set for e in rec], bool)
-            tail = rec[mask]
-            drift_hits += int(mask.sum())
-            drift_total += len(rec)
-        else:
-            tail = rec
-            drift_total += len(rec)
-            drift_hits += len(rec)
-        h = np.sort(hash_u32_np(tail, seed=index.seed))
-        new_tails.append(tail)
-        new_kept.append(h[h <= index.tau])
-        new_sizes.append(len(rec))
+    batch = RaggedBatch.from_records([np.asarray(rec) for rec in new_records])
+    if len(top):
+        is_top, _ = top_membership(batch.ids, top)
+        tail_mask = ~is_top
+    else:
+        tail_mask = np.ones(batch.total, bool)
+    drift_hits = int(tail_mask.sum())
+    drift_total = batch.total
 
-    old_rows = _kept_hash_rows(s)
-    all_rows = old_rows + new_kept
-    m = len(all_rows)
+    h_new = hash_u32_np(batch.ids, seed=index.seed)
+    keep_new = tail_mask & (h_new <= index.tau)
+    new_h = h_new[keep_new]
+    new_row = batch.row_index()[keep_new] + m_old
+
+    old_h, old_row = _flat_kept(s)
+    m = m_old + batch.num_records
 
     # 2. budget check on the tail (buffer words charged per record).
     words = -(-r // 32) if r else 0
     tail_budget = max(budget - m * words, m)
-    total_kept = sum(len(x) for x in all_rows)
+    total_kept = len(old_h) + len(new_h)
     old_thr = np.asarray(s.thresh)
     new_thr = np.concatenate(
-        [old_thr, np.full(len(new_records), index.tau, np.uint32)])
+        [old_thr, np.full(batch.num_records, index.tau, np.uint32)])
     tau = np.uint32(index.tau)
+    flat_h = np.concatenate([old_h, new_h])
+    flat_row = np.concatenate([old_row, new_row])
     if total_kept > tail_budget:
-        allh = np.concatenate([r_ for r_ in all_rows if len(r_)]) \
-            if total_kept else np.zeros(0, np.uint32)
-        tau = np.uint32(np.partition(allh, tail_budget - 1)[tail_budget - 1])
-        all_rows = [r_[r_ <= tau] for r_ in all_rows]
+        tau = np.uint32(np.partition(flat_h, tail_budget - 1)[tail_budget - 1])
+        keep = flat_h <= tau
+        flat_h, flat_row = flat_h[keep], flat_row[keep]
         new_thr = np.minimum(new_thr, tau)
         stats.tau_retightens += 1
 
     # 3. repack (buffer bitmaps: old rows copied, new rows computed).
-    sizes = np.concatenate(
-        [np.asarray(s.sizes), np.asarray(new_sizes, np.int32)])
+    sizes = np.concatenate([np.asarray(s.sizes), batch.sizes])
     if r and len(top):
-        new_maps = make_bitmaps(new_records, np.asarray(top))
+        new_maps = make_bitmaps(batch, top)
         bitmaps = np.concatenate([np.asarray(s.buf), new_maps], axis=0)
     else:
         bitmaps = np.zeros((m, s.buf.shape[1]), np.uint32)
@@ -113,8 +127,8 @@ def insert_records(
             bitmaps[:m_old] = np.asarray(s.buf)
     from repro.core.arena import SketchArena
 
-    packed = SketchArena.from_pack(pack_rows(all_rows, new_thr, sizes,
-                                             bitmaps=bitmaps))
+    packed = SketchArena.from_pack(pack_csr(
+        flat_h, flat_row, m, new_thr, sizes, bitmaps=bitmaps))
     # Carry cached postings (global + per-shard) forward incrementally:
     # τ-truncation + append on the BLOCKED stores — key prefix slices
     # plus re-encoding only the rows the new records touch, never a

@@ -1,0 +1,361 @@
+"""Vectorized construction pipeline vs the seed-era per-record oracles.
+
+The contract of the fast build path is BIT-IDENTITY: same values /
+lengths / thresh / buf / sizes, same postings blocks, same query
+results — across the three sketch engines, the host and device
+(numpy / jnp / pallas) construction paths, and the degenerate shapes
+(empty records, capacity overflow, r=0). τ-selection gets its own
+checks: exact mode is bit-equal to the oracle's partition; histogram
+mode lands on the documented 2^8-wide bin bound.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import gbkmv, gkmv, kmv, lshe, minhash
+from repro.core.gkmv import select_global_threshold, select_tau_flat
+from repro.core.hashing import (PAD, minhash_signature_np,
+                                minhash_signature_oracle)
+from repro.core.sketches import (RaggedBatch, make_bitmaps,
+                                 make_bitmaps_oracle, pack_csr, pack_rows)
+from repro.data.synth import generate_dataset
+from repro.planner.postings import build_postings, postings_equal
+
+BUILD_BACKENDS = ("numpy", "jnp", "pallas")
+
+
+def _dataset(seed=11, m=60):
+    return generate_dataset(m, 900, alpha_freq=0.9, alpha_size=1.0,
+                            size_min=4, size_max=40, seed=seed)
+
+
+def assert_packs_equal(fast, oracle):
+    for field in ("values", "lengths", "thresh", "buf", "sizes"):
+        a = np.asarray(getattr(fast, field))
+        b = np.asarray(getattr(oracle, field))
+        assert a.shape == b.shape, (field, a.shape, b.shape)
+        assert np.array_equal(a, b), field
+        assert a.dtype == b.dtype, field
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: 3 engines × build backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BUILD_BACKENDS)
+def test_gbkmv_fast_matches_oracle(backend):
+    recs = _dataset()
+    budget = int(sum(len(r) for r in recs) * 0.2)
+    bb = None if backend == "numpy" else backend
+    fast = gbkmv.build_gbkmv(recs, budget, r="auto", seed=5, build_backend=bb)
+    oracle = gbkmv.build_gbkmv_oracle(recs, budget, r="auto", seed=5)
+    assert int(fast.tau) == int(oracle.tau)
+    assert fast.buffer_bits == oracle.buffer_bits
+    assert np.array_equal(fast.top_elems, oracle.top_elems)
+    assert_packs_equal(fast.sketches, oracle.sketches)
+
+
+@pytest.mark.parametrize("backend", BUILD_BACKENDS)
+def test_gkmv_fast_matches_oracle(backend):
+    recs = _dataset(seed=12)
+    budget = int(sum(len(r) for r in recs) * 0.15)
+    bb = None if backend == "numpy" else backend
+    fast = gkmv.build_gkmv(recs, budget, seed=2, build_backend=bb)
+    oracle = gkmv.build_gkmv_oracle(recs, budget, seed=2)
+    assert_packs_equal(fast, oracle)
+
+
+@pytest.mark.parametrize("backend", BUILD_BACKENDS)
+def test_kmv_fast_matches_oracle(backend):
+    recs = _dataset(seed=13)
+    budget = int(sum(len(r) for r in recs) * 0.15)
+    bb = None if backend == "numpy" else backend
+    fast = kmv.build_kmv(recs, budget, seed=1, build_backend=bb)
+    oracle = kmv.build_kmv_oracle(recs, budget, seed=1)
+    assert_packs_equal(fast, oracle)
+
+
+@pytest.mark.parametrize("backend", ("numpy", "jnp"))
+def test_postings_blocks_identical_after_fast_build(backend):
+    """The blocked postings encode from the packed columns — fast and
+    oracle builds must produce block-for-block equal stores."""
+    recs = _dataset(seed=14)
+    budget = int(sum(len(r) for r in recs) * 0.2)
+    bb = None if backend == "numpy" else backend
+    fast = gbkmv.build_gbkmv(recs, budget, r=32, seed=4, build_backend=bb)
+    oracle = gbkmv.build_gbkmv_oracle(recs, budget, r=32, seed=4)
+    assert postings_equal(build_postings(fast.sketches),
+                          build_postings(oracle.sketches))
+
+
+# ---------------------------------------------------------------------------
+# Degenerate shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BUILD_BACKENDS)
+def test_empty_and_degenerate_records(backend):
+    recs = [np.zeros(0, np.int64), np.asarray([7, 9, 123]),
+            np.zeros(0, np.int64), np.asarray([5]), np.asarray([7])]
+    bb = None if backend == "numpy" else backend
+    for budget in (3, 1000):
+        fast = gbkmv.build_gbkmv(recs, budget, r=8, seed=0, build_backend=bb)
+        oracle = gbkmv.build_gbkmv_oracle(recs, budget, r=8, seed=0)
+        assert_packs_equal(fast.sketches, oracle.sketches)
+        assert int(fast.tau) == int(oracle.tau)
+        f2 = gkmv.build_gkmv(recs, budget, seed=0, build_backend=bb)
+        o2 = gkmv.build_gkmv_oracle(recs, budget, seed=0)
+        assert_packs_equal(f2, o2)
+        f3 = kmv.build_kmv(recs, budget, seed=0, build_backend=bb)
+        o3 = kmv.build_kmv_oracle(recs, budget, seed=0)
+        assert_packs_equal(f3, o3)
+
+
+def test_all_records_empty():
+    recs = [np.zeros(0, np.int64)] * 4
+    fast = gbkmv.build_gbkmv(recs, 16, r=0, seed=0)
+    oracle = gbkmv.build_gbkmv_oracle(recs, 16, r=0, seed=0)
+    assert_packs_equal(fast.sketches, oracle.sketches)
+    assert_packs_equal(gkmv.build_gkmv(recs, 16),
+                       gkmv.build_gkmv_oracle(recs, 16))
+
+
+def test_zero_buffer_bits():
+    recs = _dataset(seed=15, m=20)
+    budget = int(sum(len(r) for r in recs) * 0.3)
+    fast = gbkmv.build_gbkmv(recs, budget, r=0, seed=3)
+    oracle = gbkmv.build_gbkmv_oracle(recs, budget, r=0, seed=3)
+    assert fast.sketches.buf.shape == oracle.sketches.buf.shape
+    assert_packs_equal(fast.sketches, oracle.sketches)
+
+
+@pytest.mark.parametrize("backend", BUILD_BACKENDS)
+def test_capacity_overflow_rows(backend):
+    """Rows longer than the capacity truncate to their smallest values
+    and lower their effective threshold — identically on every path."""
+    recs = _dataset(seed=16, m=30)
+    budget = 10**9            # τ = PAD-1: every hash kept → rows overflow
+    bb = None if backend == "numpy" else backend
+    fast = gkmv.build_gkmv(recs, budget, seed=7, capacity=5, build_backend=bb)
+    oracle = gkmv.build_gkmv_oracle(recs, budget, seed=7, capacity=5)
+    assert (np.asarray(oracle.thresh) != np.uint32(PAD - np.uint32(1))).any()
+    assert_packs_equal(fast, oracle)
+    f2 = gbkmv.build_gbkmv(recs, budget, r=16, seed=7, capacity=5,
+                           build_backend=bb)
+    o2 = gbkmv.build_gbkmv_oracle(recs, budget, r=16, seed=7, capacity=5)
+    assert_packs_equal(f2.sketches, o2.sketches)
+
+
+def test_pack_csr_matches_pack_rows():
+    rng = np.random.default_rng(0)
+    rows = [np.sort(rng.integers(0, 2**32, size=n).astype(np.uint32))
+            for n in (0, 3, 17, 1, 0, 8)]
+    thr = np.full(len(rows), PAD - np.uint32(1), np.uint32)
+    sizes = np.asarray([len(r) for r in rows], np.int32)
+    flat = np.concatenate(rows).astype(np.uint32)
+    row_ids = np.repeat(np.arange(len(rows)), [len(r) for r in rows])
+    for cap in (None, 4):
+        a = pack_csr(flat, row_ids, len(rows), thr, sizes, capacity=cap)
+        b = pack_rows(rows, thr, sizes, capacity=cap)
+        assert_packs_equal(a, b)
+
+
+def test_make_bitmaps_matches_oracle():
+    recs = _dataset(seed=17, m=25)
+    top = np.unique(np.concatenate(recs))[:40][::-1]     # arbitrary order
+    assert np.array_equal(make_bitmaps(recs, top),
+                          make_bitmaps_oracle(recs, top))
+    assert np.array_equal(make_bitmaps(RaggedBatch.from_records(recs), top),
+                          make_bitmaps_oracle(recs, top))
+
+
+# ---------------------------------------------------------------------------
+# τ-selection: exact bit-equality + the documented histogram bound
+# ---------------------------------------------------------------------------
+
+
+def test_tau_exact_matches_oracle_selector():
+    rng = np.random.default_rng(4)
+    rows = [rng.integers(0, 2**32, size=n).astype(np.uint32)
+            for n in (5, 0, 40, 13)]
+    flat = np.concatenate([r for r in rows if len(r)])
+    for budget in (1, 7, 30, 57, 58, 1000):
+        assert select_tau_flat(flat, budget) == \
+            select_global_threshold(rows, budget)
+
+
+def test_tau_histogram_within_documented_bound():
+    """τ_hist is the upper bound of the 2^8-wide bin holding the exact
+    τ: τ_hist == (τ_exact | 0xFF) whenever the budget binds."""
+    rng = np.random.default_rng(9)
+    flat = rng.integers(0, 2**32, size=5000).astype(np.uint32)
+    for budget in (1, 10, 499, 4999):
+        te = int(select_tau_flat(flat, budget))
+        th = int(select_tau_flat(flat, budget, tau_mode="histogram"))
+        assert th == (te | 0xFF)
+        assert te <= th <= te + 255
+    # Budget beyond the data: both keep everything.
+    assert select_tau_flat(flat, 10**9, tau_mode="histogram") == \
+        np.uint32(PAD - np.uint32(1))
+
+
+def test_tau_mode_rejects_unknown():
+    with pytest.raises(ValueError):
+        select_tau_flat(np.zeros(4, np.uint32), 2, tau_mode="approx")
+
+
+def test_postings_arg_rejected_before_building():
+    recs = [np.asarray([1, 2, 3])]
+    for engine in ("gbkmv", "gkmv", "kmv"):
+        with pytest.raises(ValueError, match="postings"):
+            api.get_engine(engine).build(recs, 8, postings="eagre")
+
+
+def test_query_buffer_wider_than_index_raises():
+    recs = _dataset(seed=23, m=20)
+    budget = int(sum(len(r) for r in recs) * 0.3)
+    idx = gbkmv.build_gbkmv(recs, budget, r=48, seed=1)
+    # Corrupt the invariant: more top elements than the packed width.
+    idx.top_elems = np.unique(np.concatenate(recs))[:40]
+    idx.sketches.buf = np.asarray(idx.sketches.buf)[:, :1]
+    with pytest.raises(ValueError, match="buffer"):
+        gbkmv.sketch_query(idx, recs[0])
+
+
+# ---------------------------------------------------------------------------
+# Query sketching + end-to-end pruned-path identity
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_query_batch_matches_oracle():
+    recs = _dataset(seed=18)
+    budget = int(sum(len(r) for r in recs) * 0.2)
+    idx = gbkmv.build_gbkmv(recs, budget, r=32, seed=1)
+    queries = [recs[0], np.zeros(0, np.int64), recs[7][:3], recs[11]]
+    qb = gbkmv.sketch_query_batch(idx, queries)
+    assert qb.num_records == len(queries)
+    for g, q in enumerate(queries):
+        qo = gkmv.sketch_query_oracle(
+            np.asarray(q), idx.tau, seed=idx.seed,
+            capacity=idx.sketches.capacity, top_elems=idx.top_elems)
+        assert np.array_equal(np.asarray(qb.values)[g],
+                              np.asarray(qo.values)[0])
+        assert int(qb.lengths[g]) == int(qo.lengths[0])
+        assert int(qb.thresh[g]) == int(qo.thresh[0])
+        assert int(qb.sizes[g]) == int(qo.sizes[0])
+        w = min(qb.buf.shape[1], qo.buf.shape[1])
+        assert np.array_equal(np.asarray(qb.buf)[g, :w],
+                              np.asarray(qo.buf)[0, :w])
+
+
+@pytest.mark.parametrize("engine", ("gbkmv", "gkmv", "kmv"))
+def test_pruned_batch_query_identical_to_oracle_built_index(engine):
+    """build → batch_query(plan="pruned") returns bit-identical hits
+    whether the index came from the vectorized or the per-record path."""
+    recs = _dataset(seed=19)
+    budget = int(sum(len(r) for r in recs) * 0.2)
+    fast = api.get_engine(engine).build(recs, budget, seed=2,
+                                        backend="numpy")
+    if engine == "gbkmv":
+        core = gbkmv.build_gbkmv_oracle(recs, budget, r="auto", seed=2)
+        oracle = api.get_engine(engine).wrap(core, budget=budget,
+                                             backend="numpy")
+    elif engine == "gkmv":
+        oracle = api.get_engine(engine).wrap(
+            gkmv.build_gkmv_oracle(recs, budget, seed=2), seed=2,
+            backend="numpy")
+    else:
+        oracle = api.get_engine(engine).wrap(
+            kmv.build_kmv_oracle(recs, budget, seed=2), seed=2,
+            backend="numpy")
+    queries = [recs[3], recs[9], recs[20][:5]]
+    for t in (0.3, 0.7):
+        a = fast.batch_query(queries, t, plan="pruned")
+        b = oracle.batch_query(queries, t, plan="pruned")
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+
+
+def test_device_built_index_queries_and_saves(tmp_path):
+    """Device-resident columns flow through postings, pruned queries and
+    the npz round-trip unchanged."""
+    recs = _dataset(seed=20, m=40)
+    budget = int(sum(len(r) for r in recs) * 0.2)
+    idx = api.get_engine("gbkmv").build(recs, budget, seed=1,
+                                        build_backend="jnp",
+                                        postings="eager")
+    ref = api.get_engine("gbkmv").build(recs, budget, seed=1)
+    q = [recs[2], recs[5]]
+    for t in (0.4, 0.8):
+        for a, b in zip(idx.batch_query(q, t, plan="pruned"),
+                        ref.batch_query(q, t, plan="pruned")):
+            assert np.array_equal(a, b)
+    path = str(tmp_path / "dev.npz")
+    idx.save(path)
+    loaded = api.load_index(path)
+    assert_packs_equal(loaded.core.sketches, ref.core.sketches)
+
+
+# ---------------------------------------------------------------------------
+# MinHash / LSH-E vectorization
+# ---------------------------------------------------------------------------
+
+
+def test_minhash_signature_batched_matches_oracle():
+    rng = np.random.default_rng(2)
+    for n in (0, 1, 37):
+        ids = rng.integers(0, 10**6, size=n)
+        assert np.array_equal(minhash_signature_np(ids, 19, seed=3),
+                              minhash_signature_oracle(ids, 19, seed=3))
+
+
+def test_build_signatures_vectorized_matches_oracle():
+    recs = _dataset(seed=21, m=30)
+    recs[4] = np.zeros(0, np.int64)            # empty row mid-batch
+    recs[-1] = np.zeros(0, np.int64)           # trailing empty row
+    k = 70                                     # > chunk: exercises chunking
+    assert np.array_equal(minhash.build_signatures(recs, k, seed=5),
+                          minhash.build_signatures_oracle(recs, k, seed=5))
+
+
+def test_lshe_build_uses_vectorized_signatures():
+    recs = _dataset(seed=22, m=30)
+    ens = lshe.build_lshe(recs, num_hashes=32, seed=1)
+    assert np.array_equal(
+        ens.signatures, minhash.build_signatures_oracle(recs, 32, seed=1))
+    # Query path is unchanged semantically.
+    hits = lshe.query_lshe(ens, recs[3], 0.5, seed=1)
+    assert 3 in hits
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: τ-selection
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("ci_build", max_examples=30, deadline=None)
+    settings.load_profile("ci_build")
+
+    @given(hashes=st.lists(st.integers(0, 2**32 - 1), min_size=1,
+                           max_size=200),
+           budget=st.integers(1, 250))
+    def test_tau_property(hashes, budget):
+        flat = np.asarray(hashes, np.uint32)
+        te = int(select_tau_flat(flat, budget))
+        th = int(select_tau_flat(flat, budget, tau_mode="histogram"))
+        if budget >= len(flat):
+            assert te == th == int(PAD - np.uint32(1))
+            return
+        # Exact mode: bit-equal to the sorted-order statistic...
+        assert te == int(np.sort(flat)[budget - 1])
+        # ...and the per-row oracle selector.
+        assert te == int(select_global_threshold([flat], budget))
+        # Histogram mode: the documented 2^8 bin bound, never below exact.
+        assert th == (te | 0xFF) and te <= th <= te + 255
+except ImportError:                             # pragma: no cover
+    pass
