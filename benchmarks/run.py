@@ -20,6 +20,7 @@ from benchmarks import (
     bench_construction,
     bench_kernels,
     bench_planner,
+    bench_serving,
     bench_sketch_ablation,
     bench_space_accuracy,
     bench_threshold,
@@ -41,6 +42,7 @@ SUITES = [
     ("kernel_microbench", bench_kernels),
     ("planner", bench_planner),
     ("build", bench_build),
+    ("serving", bench_serving),
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -49,6 +51,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_ARTIFACTS = {
     "planner": os.path.join(REPO_ROOT, "BENCH_PLANNER.json"),
     "build": os.path.join(REPO_ROOT, "BENCH_BUILD.json"),
+    "serving": os.path.join(REPO_ROOT, "BENCH_SERVING.json"),
 }
 
 
@@ -112,6 +115,10 @@ def main():
                 kwargs["backend"] = args.backend
                 if args.check_baseline:
                     kwargs["baseline"] = JSON_ARTIFACTS["build"]
+            if name == "serving":
+                kwargs["backend"] = args.backend
+                if args.check_baseline:
+                    kwargs["baseline"] = JSON_ARTIFACTS["serving"]
             rows = mod.run(quick=not args.full, **kwargs)
             _print_rows(rows)
             print(f"  [{time.time()-t0:.1f}s] → reports/bench/{name}.csv")

@@ -3,6 +3,15 @@ index (the paper's serving path) OR LM prefill+decode, by family.
 
 ``python -m repro.launch.serve --mode sketch --dataset NETFLIX``
 ``python -m repro.launch.serve --mode lm --arch qwen3-0.6b --reduced``
+
+DEPRECATED for ``--mode sketch``: the sketch path is now a thin shim
+over the service layer (``repro.service.launch`` — HTTP endpoints,
+admission control, metrics). Use
+
+    PYTHONPATH=src python -m repro.service.launch [--port ... --rounds N]
+
+directly; this entry point forwards the shared flags and will be
+removed once downstream scripts migrate.
 """
 
 from __future__ import annotations
@@ -14,39 +23,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import api
 from repro.configs import registry
-from repro.data import datasets, synth
-from repro.launch.mesh import make_mesh
 from repro.models import transformer as tfm
-from repro.sketchindex import ShardedIndex
 
 
 def serve_sketch(args):
-    mesh = make_mesh(tuple(int(x) for x in args.mesh.split("x")),
-                     ("data", "model"))
-    recs = datasets.load(args.dataset, scale=args.scale)
-    total = sum(len(r) for r in recs)
-    index = api.get_engine("gbkmv").build(recs, int(total * 0.1), seed=0,
-                                          backend=args.backend)
-    sharded = ShardedIndex(index, mesh, backend=args.backend)
-    queries = synth.make_query_workload(recs, args.batch * args.rounds)
-    print(f"[serve] {args.dataset}: m={len(recs)} index={index.nbytes()/1e6:.1f}MB "
-          f"buffer_bits={index.core.buffer_bits}")
+    """Shim → ``repro.service.launch`` smoke mode (real HTTP stack)."""
+    from repro.service import launch as service_launch
 
-    lat = []
-    for r in range(args.rounds):
-        qs = queries[r * args.batch:(r + 1) * args.batch]
-        t0 = time.time()
-        results = sharded.serve_batch(qs, 0.5, args.topk)
-        lat.append(time.time() - t0)
-        if r == 0:
-            print(f"[serve] round0 top1 scores: "
-                  f"{[round(float(x['topk_scores'][0]), 3) for x in results[:4]]}")
-    lat = np.asarray(lat) * 1e3
-    print(f"[serve] batched {args.batch} queries/round: "
-          f"p50={np.percentile(lat, 50):.1f}ms p99={np.percentile(lat, 99):.1f}ms "
-          f"({args.batch / (np.mean(lat) / 1e3):.0f} q/s)")
+    print("[serve] DEPRECATED: --mode sketch now delegates to "
+          "repro.service.launch (HTTP service layer); invoke it directly "
+          "for the full flag surface.")
+    argv = ["--dataset", args.dataset, "--scale", str(args.scale),
+            "--mesh", args.mesh, "--backend", args.backend,
+            "--batch", str(args.batch), "--rounds", str(max(args.rounds, 1)),
+            "--topk", str(args.topk),
+            "--max-inflight", str(args.max_inflight),
+            "--port", str(args.port)]
+    if args.rate_limit is not None:
+        argv += ["--rate-limit", str(args.rate_limit)]
+    service_launch.main(argv)
 
 
 def serve_lm(args):
@@ -86,6 +82,10 @@ def main():
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--backend", default="jnp",
                     choices=("numpy", "jnp", "pallas"))
+    # Service-layer passthrough flags (sketch mode shim).
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--max-inflight", type=int, default=256)
+    ap.add_argument("--rate-limit", type=float, default=None)
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--seq", type=int, default=32)

@@ -1,0 +1,21 @@
+"""Production serving layer: HTTP service + admission control + metrics
+in front of the sharded GB-KMV index.
+
+    index   = api.get_engine("gbkmv").build(records, budget)
+    sharded = ShardedIndex(index, mesh)
+    server  = AsyncSketchServer(sharded, max_inflight=256)
+    app     = ServiceApp(server, auth_token="s3cret", rate_limit=500)
+    with ServiceHandle(app, port=8080):
+        ...                      # /ingest /query /topk /healthz /metrics
+
+See docs/SERVING.md for the endpoint and metrics reference, and
+``python -m repro.service.launch --help`` for the CLI entry point.
+"""
+
+from repro.service.app import (  # noqa: F401
+    ServiceApp, ServiceHandle, make_http_server)
+from repro.service.client import ServiceClient, ServiceError  # noqa: F401
+from repro.service.metrics import Metrics, parse_prometheus  # noqa: F401
+from repro.service.middleware import AuthToken, TokenBucket  # noqa: F401
+from repro.service.server import (  # noqa: F401
+    AsyncSketchServer, Overloaded, Pending)

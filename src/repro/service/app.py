@@ -1,0 +1,355 @@
+"""HTTP front for the async sketch server — stdlib only.
+
+Endpoints (JSON in/out unless noted):
+
+    POST /query    {"q": [ids], "threshold": 0.5, "deadline_ms"?: int}
+                   → {"rid", "hits": [...], "expired": bool}
+    POST /topk     {"q": [ids], "k": 10, "deadline_ms"?: int}
+                   → {"rid", "ids": [...], "scores": [...]}
+    POST /ingest   NDJSON stream (one JSON id-array per line) or
+                   {"records": [[...], ...]} → {"ingested", "chunks"}
+    GET  /healthz  → {"status": "ok", "records", "inflight"}   (open)
+    GET  /metrics  → Prometheus text format                    (open)
+
+Middleware runs before admission: bearer-token auth (401) and a
+token-bucket rate limit (429 + Retry-After). A full admission queue also
+answers 429 with a Retry-After derived from measured flush latency — the
+load-shed half of graceful degradation.
+
+The `/ingest` endpoint **streams**: NDJSON lines are parsed incrementally
+and handed to the flush loop in chunks of ``ingest_chunk`` records, so a
+record batch far larger than one flush never materializes on host —
+at most one chunk of parsed records is alive at a time (the carried-over
+streaming-RaggedBatch item: each chunk becomes one CSR ingest downstream).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from repro.service.metrics import Metrics
+from repro.service.middleware import AuthToken, TokenBucket
+from repro.service.server import AsyncSketchServer, Overloaded
+
+
+class Response:
+    def __init__(self, status: int, body, content_type: str = "application/json",
+                 headers: dict | None = None):
+        self.status = status
+        self.headers = dict(headers or {})
+        self.content_type = content_type
+        if isinstance(body, (dict, list)):
+            body = json.dumps(body).encode()
+        elif isinstance(body, str):
+            body = body.encode()
+        self.body = body
+
+
+def _json_error(status: int, message: str, **headers) -> Response:
+    return Response(status, {"error": message}, headers=headers)
+
+
+def _iter_body(rfile, headers, max_chunk: int = 1 << 16):
+    """Yield raw body bytes without materializing the request:
+    Content-Length bodies stream in ``max_chunk`` pieces, and
+    ``Transfer-Encoding: chunked`` is decoded incrementally."""
+    if headers.get("Transfer-Encoding", "").lower() == "chunked":
+        while True:
+            size_line = rfile.readline(64).strip()
+            size = int(size_line.split(b";")[0], 16) if size_line else 0
+            if size == 0:
+                rfile.readline()                       # trailing CRLF
+                return
+            remaining = size
+            while remaining:
+                piece = rfile.read(min(remaining, max_chunk))
+                if not piece:
+                    return
+                remaining -= len(piece)
+                yield piece
+            rfile.readline()                           # chunk CRLF
+        return
+    remaining = int(headers.get("Content-Length", 0) or 0)
+    while remaining > 0:
+        piece = rfile.read(min(remaining, max_chunk))
+        if not piece:
+            return
+        remaining -= len(piece)
+        yield piece
+
+
+def _iter_lines(chunks):
+    buf = b""
+    for piece in chunks:
+        buf += piece
+        while True:
+            nl = buf.find(b"\n")
+            if nl < 0:
+                break
+            yield buf[:nl]
+            buf = buf[nl + 1:]
+    if buf.strip():
+        yield buf
+
+
+class ServiceApp:
+    """Routing + middleware + metrics over an :class:`AsyncSketchServer`."""
+
+    def __init__(self, server: AsyncSketchServer, *,
+                 auth_token: str | None = None,
+                 rate_limit: float | None = None, burst: int | None = None,
+                 ingest_chunk: int = 256, result_timeout: float = 60.0,
+                 clock=time.monotonic):
+        self.server = server
+        self.auth = AuthToken(auth_token)
+        self.bucket = TokenBucket(rate_limit, burst, clock=clock)
+        self.ingest_chunk = int(ingest_chunk)
+        self.result_timeout = float(result_timeout)
+        self.clock = clock
+        self.metrics = Metrics()
+        self._wire_metrics()
+
+    def _wire_metrics(self):
+        m, srv = self.metrics, self.server
+        stats = srv.stats
+        m.register_histogram(
+            "service_queue_wait_seconds", stats.queue_wait_hist,
+            help="Per-request wait from admission to flush")
+        m.register_histogram(
+            "service_flush_latency_seconds", stats.flush_latency_hist,
+            help="Device execution latency per flush")
+        for reason, fn in (("full", lambda: stats.flushes_full),
+                           ("deadline", lambda: stats.flushes_deadline),
+                           ("expired", lambda: stats.flushes_expired)):
+            m.set_counter_fn("service_flush_total", fn, {"reason": reason},
+                             help="Flushes by trigger reason")
+        m.set_counter_fn("service_shed_total", lambda: srv.shed,
+                         help="Requests refused at the admission queue")
+        m.set_counter_fn("service_expired_total",
+                         lambda: srv.expired_served,
+                         help="Requests answered past their deadline "
+                              "(dense fallback path)")
+        m.set_counter_fn("service_records_ingested_total",
+                         lambda: srv.records_ingested,
+                         help="Records ingested through /ingest")
+        m.set_gauge("service_inflight", lambda: srv.inflight,
+                    help="Admission queue depth")
+        m.set_gauge("service_mean_batch_occupancy",
+                    lambda: stats.mean_batch,
+                    help="Mean requests per flush")
+        # Re-resolve the arena per scrape: ingest swaps the host index
+        # (and its arena) underneath the ShardedIndex.
+        def _sketch_b():
+            a = self._arena()
+            return a.sketch_nbytes() if a is not None else 0
+
+        def _post_b():
+            a = self._arena()
+            return (a.postings_nbytes()
+                    if a is not None and getattr(a, "_post", None) is not None
+                    else 0)
+
+        m.set_gauge("arena_sketch_nbytes", _sketch_b,
+                    help="Packed sketch column bytes")
+        m.set_gauge("arena_postings_nbytes", _post_b,
+                    help="Block-compressed postings bytes (0 until first "
+                         "planned query builds them)")
+
+    def _arena(self):
+        """The live sketch arena, re-resolved per call — ingest swaps the
+        host index under the ShardedIndex."""
+        idx = self.server.index
+        host = getattr(idx, "host", None) or getattr(idx, "core", None)
+        sk = getattr(host, "sketches", None)
+        return sk if sk is not None and hasattr(sk, "sketch_nbytes") else None
+
+    @property
+    def num_records(self) -> int:
+        idx = self.server.index
+        return int(getattr(idx, "num_records", 0))
+
+    # -- request handling --------------------------------------------------
+
+    def handle(self, method: str, path: str, headers, rfile) -> Response:
+        """One request → one response. ``headers`` is mapping-like;
+        ``rfile`` a binary stream positioned at the body."""
+        endpoint = path.split("?")[0].rstrip("/") or "/"
+        t0 = self.clock()
+        resp = self._route(method, endpoint, headers, rfile)
+        self.metrics.inc(
+            "service_requests_total",
+            {"endpoint": endpoint.lstrip("/") or "root",
+             "status": str(resp.status)},
+            help="Requests by endpoint and HTTP status")
+        self.metrics.observe(
+            "service_request_latency_seconds", self.clock() - t0,
+            {"endpoint": endpoint.lstrip("/") or "root"},
+            help="End-to-end in-service latency")
+        return resp
+
+    def _route(self, method: str, endpoint: str, headers, rfile) -> Response:
+        if endpoint == "/healthz":
+            return Response(200, {"status": "ok",
+                                  "records": self.num_records,
+                                  "inflight": self.server.inflight})
+        if endpoint == "/metrics":
+            return Response(200, self.metrics.render(),
+                            content_type="text/plain; version=0.0.4")
+        if endpoint not in ("/query", "/topk", "/ingest"):
+            return _json_error(404, f"no route {endpoint!r}")
+        if method != "POST":
+            return _json_error(405, f"{endpoint} is POST-only")
+        if not self.auth.allows(headers):
+            return _json_error(401, "missing or invalid auth token")
+        if not self.bucket.allow():
+            ra = self.bucket.retry_after()
+            return _json_error(429, "rate limit exceeded",
+                               **{"Retry-After": f"{ra:.3f}"})
+        try:
+            if endpoint == "/ingest":
+                return self._ingest(headers, rfile)
+            body = json.loads(b"".join(_iter_body(rfile, headers)) or b"{}")
+            if endpoint == "/query":
+                return self._query(body)
+            return self._topk(body)
+        except Overloaded as e:
+            return _json_error(429, str(e),
+                               **{"Retry-After": f"{e.retry_after:.3f}"})
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            return _json_error(400, f"bad request: {e}")
+
+    @staticmethod
+    def _deadline_s(body) -> float | None:
+        ms = body.get("deadline_ms")
+        return None if ms is None else float(ms) / 1e3
+
+    def _query(self, body) -> Response:
+        p = self.server.submit_query(
+            np.asarray(body["q"], np.int64),
+            threshold=float(body.get("threshold", 0.5)),
+            deadline=self._deadline_s(body))
+        res = self.server.result(p, timeout=self.result_timeout)
+        return Response(200, {"rid": p.rid,
+                              "hits": np.asarray(res["hits"]).tolist(),
+                              "expired": p.expired})
+
+    def _topk(self, body) -> Response:
+        p = self.server.submit_topk(
+            np.asarray(body["q"], np.int64), k=int(body.get("k", 10)),
+            deadline=self._deadline_s(body))
+        res = self.server.result(p, timeout=self.result_timeout)
+        return Response(200, {
+            "rid": p.rid,
+            "ids": np.asarray(res["topk_ids"]).tolist(),
+            "scores": [float(s) for s in res["topk_scores"]],
+            "expired": p.expired})
+
+    def _ingest(self, headers, rfile) -> Response:
+        ctype = headers.get("Content-Type", "")
+        if "json" in ctype and "ndjson" not in ctype:
+            body = json.loads(b"".join(_iter_body(rfile, headers)) or b"{}")
+            lines = (json.dumps(r).encode() for r in body.get("records", []))
+        else:
+            lines = _iter_lines(_iter_body(rfile, headers))
+        chunk: list[np.ndarray] = []
+        pending = []
+        total = 0
+        for line in lines:
+            if not line.strip():
+                continue
+            chunk.append(np.asarray(json.loads(line), np.int64))
+            if len(chunk) >= self.ingest_chunk:
+                pending.append(self._submit_ingest_chunk(chunk))
+                total += len(chunk)
+                chunk = []
+        if chunk:
+            pending.append(self._submit_ingest_chunk(chunk))
+            total += len(chunk)
+        for p in pending:
+            self.server.result(p, timeout=self.result_timeout)
+        return Response(200, {"ingested": total, "chunks": len(pending)})
+
+    def _submit_ingest_chunk(self, chunk):
+        """Admit one chunk, waiting out transient overload: an ingest
+        stream mid-flight can't be half-dropped, so backpressure here is
+        wait-and-retry, bounded by ``result_timeout``."""
+        give_up = time.monotonic() + self.result_timeout
+        while True:
+            try:
+                return self.server.submit_ingest(chunk)
+            except Overloaded as e:
+                if time.monotonic() >= give_up:
+                    raise
+                time.sleep(min(e.retry_after, 0.05))
+
+
+# -- stdlib HTTP plumbing ----------------------------------------------------
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    app: ServiceApp = None          # set by make_http_server
+
+    def _respond(self):
+        try:
+            resp = self.app.handle(self.command, self.path, self.headers,
+                                   self.rfile)
+        except Exception as e:      # a handler crash must not kill the conn
+            resp = _json_error(500, f"internal error: {type(e).__name__}: {e}")
+        self.send_response(resp.status)
+        self.send_header("Content-Type", resp.content_type)
+        self.send_header("Content-Length", str(len(resp.body)))
+        for k, v in resp.headers.items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(resp.body)
+
+    do_GET = do_POST = do_PUT = _respond
+
+    def log_message(self, fmt, *args):  # noqa: A003 - quiet by default
+        if getattr(self.app, "verbose", False):
+            super().log_message(fmt, *args)
+
+
+def make_http_server(app: ServiceApp, host: str = "127.0.0.1",
+                     port: int = 0) -> ThreadingHTTPServer:
+    """Bind a threading HTTP server (port 0 = ephemeral; the bound port
+    is ``httpd.server_address[1]``). Caller owns ``serve_forever`` /
+    ``shutdown`` and the flush worker's ``start()``/``stop()``."""
+    handler = type("BoundHandler", (_Handler,), {"app": app})
+    httpd = ThreadingHTTPServer((host, port), handler)
+    httpd.daemon_threads = True
+    return httpd
+
+
+class ServiceHandle:
+    """In-process service for tests and the load harness: flush worker +
+    HTTP listener on an ephemeral port, context-managed."""
+
+    def __init__(self, app: ServiceApp, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.app = app
+        self.httpd = make_http_server(app, host, port)
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever, name="http-listener",
+            daemon=True)
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return self.httpd.server_address[:2]
+
+    def __enter__(self) -> "ServiceHandle":
+        self.app.server.start()
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        self.app.server.stop()
+        return False

@@ -1,0 +1,126 @@
+"""Minimal stdlib HTTP client for the service — used by the load
+harness, the CI smoke job, and the endpoint round-trip tests. One
+persistent ``http.client`` connection per instance (callers wanting
+concurrency open one client per worker thread)."""
+
+from __future__ import annotations
+
+import http.client
+import json
+
+import numpy as np
+
+
+class ServiceError(RuntimeError):
+    def __init__(self, status: int, body: dict, retry_after: float = 0.0):
+        super().__init__(f"HTTP {status}: {body}")
+        self.status = status
+        self.body = body
+        self.retry_after = retry_after
+
+
+class ServiceClient:
+    def __init__(self, host: str, port: int, token: str | None = None,
+                 timeout: float = 60.0):
+        self.host, self.port, self.token = host, port, token
+        self.timeout = timeout
+        self._conn: http.client.HTTPConnection | None = None
+
+    def _connection(self) -> http.client.HTTPConnection:
+        if self._conn is None:
+            self._conn = http.client.HTTPConnection(
+                self.host, self.port, timeout=self.timeout)
+        return self._conn
+
+    def close(self):
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
+
+    def _headers(self, extra: dict | None = None) -> dict:
+        h = {"Content-Type": "application/json"}
+        if self.token:
+            h["Authorization"] = f"Bearer {self.token}"
+        h.update(extra or {})
+        return h
+
+    def request(self, method: str, path: str, body: bytes | None = None,
+                headers: dict | None = None) -> tuple[int, bytes, dict]:
+        """(status, raw body, response headers) — one retry on a stale
+        keep-alive connection."""
+        for attempt in (0, 1):
+            conn = self._connection()
+            try:
+                conn.request(method, path, body=body,
+                             headers=self._headers(headers))
+                r = conn.getresponse()
+                return r.status, r.read(), dict(r.getheaders())
+            except (http.client.HTTPException, ConnectionError, OSError):
+                self.close()
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    def _call(self, method: str, path: str, payload: dict | None = None,
+              raw_body: bytes | None = None, headers: dict | None = None):
+        body = raw_body if raw_body is not None else (
+            json.dumps(payload).encode() if payload is not None else None)
+        status, raw, rhead = self.request(method, path, body, headers)
+        try:
+            data = json.loads(raw) if raw else {}
+        except json.JSONDecodeError:
+            data = {"raw": raw.decode(errors="replace")}
+        if status != 200:
+            raise ServiceError(status, data,
+                               retry_after=float(rhead.get("Retry-After", 0)))
+        return data
+
+    # -- endpoints ---------------------------------------------------------
+
+    def healthz(self) -> dict:
+        return self._call("GET", "/healthz")
+
+    def metrics_text(self) -> str:
+        status, raw, _ = self.request("GET", "/metrics")
+        if status != 200:
+            raise ServiceError(status, {"raw": raw.decode(errors="replace")})
+        return raw.decode()
+
+    def query(self, q_ids, threshold: float = 0.5,
+              deadline_ms: float | None = None) -> np.ndarray:
+        payload = {"q": np.asarray(q_ids).tolist(), "threshold": threshold}
+        if deadline_ms is not None:
+            payload["deadline_ms"] = deadline_ms
+        return np.asarray(self._call("POST", "/query", payload)["hits"],
+                          np.int64)
+
+    def topk(self, q_ids, k: int = 10) -> tuple[np.ndarray, np.ndarray]:
+        d = self._call("POST", "/topk",
+                       {"q": np.asarray(q_ids).tolist(), "k": k})
+        return (np.asarray(d["ids"], np.int64),
+                np.asarray(d["scores"], np.float32))
+
+    def ingest(self, records, stream: bool = True) -> dict:
+        """NDJSON ingest. ``stream=True`` (default) sends chunked
+        transfer-encoding from a line generator — the full batch never
+        exists as one buffer on either side; the server re-chunks it
+        into flush-sized CSR ingests."""
+        lines = (json.dumps(np.asarray(r).tolist()).encode() + b"\n"
+                 for r in records)
+        headers = self._headers({"Content-Type": "application/x-ndjson"})
+        if not stream:
+            return self._call("POST", "/ingest", raw_body=b"".join(lines),
+                              headers={"Content-Type": "application/x-ndjson"})
+        conn = self._connection()
+        try:
+            conn.request("POST", "/ingest", body=lines, headers=headers,
+                         encode_chunked=True)
+            r = conn.getresponse()
+            status, raw = r.status, r.read()
+        except (http.client.HTTPException, ConnectionError, OSError):
+            self.close()
+            raise
+        data = json.loads(raw) if raw else {}
+        if status != 200:
+            raise ServiceError(status, data)
+        return data

@@ -1,0 +1,128 @@
+"""Prometheus-text-format metrics for the serving layer (stdlib only).
+
+A tiny typed registry — counters, gauges (value or callback), and
+fixed-bucket histograms (``repro.serving.Histogram``) — rendering the
+text exposition format `/metrics` speaks:
+
+    # HELP service_requests_total ...
+    # TYPE service_requests_total counter
+    service_requests_total{endpoint="query",status="200"} 42
+
+Thread-safe under one lock; label sets are sorted tuples of ``(key,
+value)`` pairs so a metric's series render deterministically.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+from repro.serving.histogram import Histogram
+
+
+def _labels_str(labels: dict | None) -> str:
+    if not labels:
+        return ""
+    return ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+
+
+class Metrics:
+    def __init__(self):
+        self._lock = threading.Lock()
+        # name -> (type, help, {labels_str: value|Histogram|callable})
+        self._families: dict[str, tuple[str, str, dict]] = {}
+
+    def _family(self, name: str, typ: str, help_: str) -> dict:
+        fam = self._families.get(name)
+        if fam is None:
+            fam = (typ, help_, {})
+            self._families[name] = fam
+        elif fam[0] != typ:
+            raise ValueError(f"metric {name!r} already registered as {fam[0]}")
+        return fam[2]
+
+    # -- write side --------------------------------------------------------
+
+    def inc(self, name: str, labels: dict | None = None, value: float = 1,
+            help: str = "") -> None:
+        with self._lock:
+            series = self._family(name, "counter", help)
+            key = _labels_str(labels)
+            series[key] = series.get(key, 0) + value
+
+    def set_gauge(self, name: str, value, labels: dict | None = None,
+                  help: str = "") -> None:
+        """``value`` may be a number or a zero-arg callable sampled at
+        render time (live gauges: queue depth, arena bytes)."""
+        with self._lock:
+            self._family(name, "gauge", help)[_labels_str(labels)] = value
+
+    def set_counter_fn(self, name: str, fn: Callable[[], float],
+                       labels: dict | None = None, help: str = "") -> None:
+        """Expose a counter whose value lives elsewhere (e.g. the flush
+        loop's ``BatchStats`` tallies) — sampled at render time."""
+        with self._lock:
+            self._family(name, "counter", help)[_labels_str(labels)] = fn
+
+    def observe(self, name: str, value: float, labels: dict | None = None,
+                help: str = "", bounds=None) -> None:
+        with self._lock:
+            series = self._family(name, "histogram", help)
+            key = _labels_str(labels)
+            h = series.get(key)
+            if h is None:
+                h = series[key] = (Histogram(bounds) if bounds is not None
+                                   else Histogram())
+            h.observe(value)
+
+    def register_histogram(self, name: str, hist: Histogram,
+                           labels: dict | None = None, help: str = "") -> None:
+        """Expose an externally-owned histogram (e.g. the flush loop's
+        ``BatchStats`` distributions) — rendered live, never copied."""
+        with self._lock:
+            self._family(name, "histogram", help)[_labels_str(labels)] = hist
+
+    # -- read side ---------------------------------------------------------
+
+    def get_counter(self, name: str, labels: dict | None = None) -> float:
+        with self._lock:
+            fam = self._families.get(name)
+            return fam[2].get(_labels_str(labels), 0) if fam else 0
+
+    def histogram(self, name: str, labels: dict | None = None
+                  ) -> Histogram | None:
+        with self._lock:
+            fam = self._families.get(name)
+            return fam[2].get(_labels_str(labels)) if fam else None
+
+    def render(self) -> str:
+        with self._lock:
+            lines: list[str] = []
+            for name in sorted(self._families):
+                typ, help_, series = self._families[name]
+                if help_:
+                    lines.append(f"# HELP {name} {help_}")
+                lines.append(f"# TYPE {name} {typ}")
+                for key in sorted(series):
+                    v = series[key]
+                    if isinstance(v, Histogram):
+                        lines.extend(v.to_prometheus(name, key))
+                        continue
+                    if isinstance(v, Callable):
+                        v = v()
+                    brace = f"{{{key}}}" if key else ""
+                    lines.append(f"{name}{brace} {float(v):g}")
+            return "\n".join(lines) + "\n"
+
+
+def parse_prometheus(text: str) -> dict[str, float]:
+    """Inverse of :meth:`Metrics.render` for tests and the load harness:
+    {"name{labels}": value} over every sample line."""
+    out: dict[str, float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        key, _, val = line.rpartition(" ")
+        out[key] = float(val)
+    return out

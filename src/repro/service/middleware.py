@@ -1,0 +1,73 @@
+"""Admission middleware for the HTTP service: auth token + token-bucket
+rate limiting. Both are hooks the app applies before a request touches
+the flush loop — stdlib only, injectable clocks, trivially composable.
+"""
+
+from __future__ import annotations
+
+import hmac
+import threading
+import time
+from typing import Callable
+
+
+class AuthToken:
+    """Static bearer-token check (``Authorization: Bearer <t>`` or
+    ``X-Auth-Token: <t>``). Constant-time comparison; a ``None`` token
+    disables auth (open service)."""
+
+    def __init__(self, token: str | None):
+        self.token = token
+
+    def allows(self, headers) -> bool:
+        if self.token is None:
+            return True
+        got = headers.get("X-Auth-Token", "")
+        if not got:
+            auth = headers.get("Authorization", "")
+            if auth.startswith("Bearer "):
+                got = auth[len("Bearer "):]
+        return bool(got) and hmac.compare_digest(got, self.token)
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s refill, ``burst`` cap.
+
+    ``allow()`` spends one token or refuses; ``retry_after()`` is the
+    time until the next token exists. ``rate=None`` disables limiting.
+    Thread-safe (the HTTP layer calls from per-connection threads).
+    """
+
+    def __init__(self, rate: float | None, burst: int | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.rate = rate
+        self.burst = float(burst if burst is not None
+                           else max(1, int(rate or 1)))
+        self.clock = clock
+        self.tokens = self.burst
+        self.last = clock()
+        self._lock = threading.Lock()
+
+    def _refill(self, now: float) -> None:
+        if self.rate:
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self.last) * self.rate)
+        self.last = now
+
+    def allow(self, n: float = 1.0) -> bool:
+        if self.rate is None:
+            return True
+        with self._lock:
+            now = self.clock()
+            self._refill(now)
+            if self.tokens >= n:
+                self.tokens -= n
+                return True
+            return False
+
+    def retry_after(self, n: float = 1.0) -> float:
+        if self.rate is None:
+            return 0.0
+        with self._lock:
+            deficit = max(0.0, n - self.tokens)
+            return deficit / self.rate if self.rate > 0 else 1.0

@@ -1,0 +1,312 @@
+"""Async flush loop in front of a sharded GB-KMV index.
+
+:class:`repro.serving.SketchServer` executes a flush inline on the
+submitting caller — accumulation *blocks* on the jitted device
+score/topk pipeline. This module is the production refactor: submitters
+only append to a **bounded admission queue** and a dedicated flush
+worker drains it, so micro-batch accumulation overlaps device execution
+(while a batch runs on device, the queue keeps filling for the next
+one). Overload degrades gracefully instead of queueing unboundedly:
+
+* queue full  → :class:`Overloaded` (the HTTP layer answers 429 with a
+  ``Retry-After`` derived from the measured flush latency),
+* request older than its deadline → flushed immediately and answered
+  from the **dense fallback path** (``plan="dense"`` — one predictable
+  index sweep, bit-identical results, no postings-probe variance),
+* shutdown → the queue drains, nothing is dropped.
+
+Everything is injectable-clock deterministic: tests drive the loop with
+:meth:`AsyncSketchServer.step` and a fake clock, production calls
+:meth:`start` for the background worker. Execution and flush accounting
+are shared with the synchronous server (``serving.execute_batch`` /
+``serving.BatchStats``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.serving.batcher import BatchStats, execute_batch
+
+
+class Overloaded(RuntimeError):
+    """Admission queue full — shed with a retry hint (seconds)."""
+
+    def __init__(self, retry_after: float):
+        super().__init__(f"admission queue full; retry after "
+                         f"{retry_after:.3f}s")
+        self.retry_after = retry_after
+
+
+@dataclasses.dataclass(eq=False)
+class Pending:
+    """One admitted request (identity equality — payloads are arrays).
+    Field names mirror ``serving.Request`` so ``execute_batch`` consumes
+    these directly."""
+
+    rid: int
+    kind: str                      # "query" | "topk" | "ingest"
+    q_ids: np.ndarray | None
+    arrival: float
+    threshold: float = 0.5
+    k: int = 0
+    deadline: float | None = None  # absolute clock time, None = no SLO
+    records: list | None = None    # ingest payload
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: dict | None = None
+    error: Exception | None = None
+    expired: bool = False
+
+    def past_deadline(self, now: float) -> bool:
+        return self.deadline is not None and now >= self.deadline
+
+
+class AsyncSketchServer:
+    """Bounded-admission micro-batching server over ``index.serve_batch``.
+
+    ``index`` is anything speaking the ``serve_batch(queries, thresholds,
+    k, plan=)`` protocol (a :class:`repro.sketchindex.ShardedIndex` in
+    production); ingest additionally needs ``index.insert``. The flush
+    worker is the ONLY thread touching the index, so queries and ingest
+    serialize in admission (FIFO) order — a client that ingests then
+    queries observes its own writes.
+    """
+
+    def __init__(self, index, *, max_batch: int = 16, max_wait: float = 0.01,
+                 max_inflight: int = 256, default_deadline: float | None = 0.5,
+                 plan: str = "auto",
+                 clock: Callable[[], float] = time.monotonic):
+        from repro.planner import normalize_plan
+
+        self.index = index
+        self.max_batch = int(max_batch)
+        self.max_wait = float(max_wait)
+        self.max_inflight = int(max_inflight)
+        self.default_deadline = default_deadline
+        self.plan = normalize_plan(plan)
+        self.clock = clock
+        self.stats = BatchStats()
+        self.shed = 0                  # admissions refused (429s)
+        self.expired_served = 0        # requests answered past deadline
+        self.records_ingested = 0
+        self._queue: deque[Pending] = deque()
+        self._cv = threading.Condition()
+        self._next_rid = 0
+        self._thread: threading.Thread | None = None
+        self._stop = False
+
+    # -- admission ---------------------------------------------------------
+
+    @property
+    def inflight(self) -> int:
+        return len(self._queue)
+
+    def retry_after(self) -> float:
+        """Backoff hint for shed requests: the time the current backlog
+        needs to drain at the measured flush latency (floor: one
+        deadline window)."""
+        per_flush = self.stats.flush_latency_hist.mean or self.max_wait
+        backlog_flushes = math.ceil(
+            max(len(self._queue), 1) / max(self.max_batch, 1))
+        return max(self.max_wait, backlog_flushes * per_flush)
+
+    def _admit(self, p: Pending) -> Pending:
+        with self._cv:
+            if len(self._queue) >= self.max_inflight:
+                self.shed += 1
+                raise Overloaded(self.retry_after())
+            self._queue.append(p)
+            self._cv.notify()
+        return p
+
+    def _deadline(self, arrival: float, deadline: float | None):
+        budget = self.default_deadline if deadline is None else deadline
+        return None if budget is None else arrival + float(budget)
+
+    def submit_query(self, q_ids, threshold: float = 0.5,
+                     deadline: float | None = None) -> Pending:
+        now = self.clock()
+        rid, self._next_rid = self._next_rid, self._next_rid + 1
+        return self._admit(Pending(
+            rid=rid, kind="query", q_ids=np.asarray(q_ids), arrival=now,
+            threshold=float(threshold),
+            deadline=self._deadline(now, deadline)))
+
+    def submit_topk(self, q_ids, k: int = 10,
+                    deadline: float | None = None) -> Pending:
+        now = self.clock()
+        rid, self._next_rid = self._next_rid, self._next_rid + 1
+        return self._admit(Pending(
+            rid=rid, kind="topk", q_ids=np.asarray(q_ids), arrival=now,
+            threshold=math.inf, k=int(k),
+            deadline=self._deadline(now, deadline)))
+
+    def submit_ingest(self, records) -> Pending:
+        now = self.clock()
+        rid, self._next_rid = self._next_rid, self._next_rid + 1
+        return self._admit(Pending(
+            rid=rid, kind="ingest", q_ids=None, arrival=now,
+            records=[np.asarray(r) for r in records]))
+
+    # -- flush loop --------------------------------------------------------
+
+    def _gather(self, now: float, force: bool):
+        """Pop the next executable batch (caller holds the lock), or
+        (None, wait_hint). Kinds never mix across an ingest boundary —
+        FIFO order is the consistency model."""
+        if not self._queue:
+            return None, None
+        if self._queue[0].kind == "ingest":
+            batch = []
+            while self._queue and self._queue[0].kind == "ingest" \
+                    and len(batch) < self.max_batch:
+                batch.append(self._queue.popleft())
+            return batch, "ingest"
+        run = 0
+        expired = False
+        for p in self._queue:
+            if p.kind == "ingest" or run >= self.max_batch:
+                break
+            expired |= p.past_deadline(now)
+            run += 1
+        oldest_age = now - self._queue[0].arrival
+        if run >= self.max_batch:
+            reason = "full"
+        elif expired:
+            reason = "expired"
+        elif oldest_age >= self.max_wait or force:
+            reason = "deadline"
+        else:
+            return None, self.max_wait - oldest_age
+        return [self._queue.popleft() for _ in range(run)], reason
+
+    def step(self, block: bool = False, timeout: float | None = None,
+             force: bool = False) -> int:
+        """One flush-loop iteration: gather → execute → complete events.
+        Returns the number of requests answered. ``block`` waits (real
+        time) for a flushable batch; ``force`` flushes a partial batch
+        immediately (drain/test hook)."""
+        deadline = (time.monotonic() + timeout) if (block and timeout) else None
+        with self._cv:
+            while True:
+                batch, hint = self._gather(self.clock(), force)
+                if batch is not None:
+                    break
+                if not block:
+                    return 0
+                wait = hint if hint is not None else 0.05
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return 0
+                    wait = min(wait, remaining)
+                if not self._cv.wait(timeout=wait) and self._stop \
+                        and not self._queue:
+                    return 0
+        # Lock released: submitters keep filling the queue while the
+        # batch executes on device — the overlap this server exists for.
+        if hint == "ingest":
+            self._execute_ingest(batch)
+        else:
+            self._execute_serve(batch, reason=hint)
+        return len(batch)
+
+    def drain(self):
+        """Flush until the queue is empty (shutdown / test barrier)."""
+        while self.step(force=True):
+            pass
+
+    def _complete(self, batch: list[Pending], err: Exception | None = None):
+        for p in batch:
+            if err is not None and p.result is None:
+                p.error = err
+            p.done.set()
+
+    def _execute_serve(self, batch: list[Pending], reason: str):
+        now = self.clock()
+        fresh = [p for p in batch if not p.past_deadline(now)]
+        late = [p for p in batch if p.past_deadline(now)]
+        try:
+            # Deadline-expired requests take the dense fallback: one
+            # predictable sweep, no postings-probe variance, answered
+            # ahead of further accumulation. Results are bit-identical
+            # (the planner's contract) — only the latency path differs.
+            for sub, plan, why in ((late, "dense", "expired"),
+                                   (fresh, self.plan, reason)):
+                if not sub:
+                    continue
+                k = max((p.k for p in sub), default=0)
+                self.stats.record_batch(
+                    [now - p.arrival for p in sub], why)
+                out = execute_batch(self.index, sub, k, plan,
+                                    stats=self.stats, clock=self.clock)
+                for p in sub:
+                    res = out[p.rid]
+                    if p.kind == "topk":
+                        p.result = {
+                            "topk_ids": res["topk_ids"][: p.k],
+                            "topk_scores": res["topk_scores"][: p.k]}
+                    else:
+                        p.result = {"hits": res["hits"]}
+                    p.expired = why == "expired"
+                if why == "expired":
+                    self.expired_served += len(sub)
+            self._complete(batch)
+        except Exception as e:                     # pragma: no cover - guard
+            self._complete(batch, err=e)
+
+    def _execute_ingest(self, batch: list[Pending]):
+        now = self.clock()
+        self.stats.record_batch([now - p.arrival for p in batch], "deadline")
+        for p in batch:
+            try:
+                t0 = self.clock()
+                self.index.insert(p.records)
+                self.stats.flush_latency_hist.observe(self.clock() - t0)
+                self.records_ingested += len(p.records)
+                p.result = {"ingested": len(p.records)}
+            except Exception as e:
+                p.error = e
+            p.done.set()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "AsyncSketchServer":
+        if self._thread is not None:
+            return self
+        self._stop = False
+
+        def loop():
+            while not self._stop:
+                self.step(block=True, timeout=0.1)
+            self.drain()
+
+        self._thread = threading.Thread(target=loop, name="flush-loop",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        if self._thread is None:
+            return
+        self._stop = True
+        with self._cv:
+            self._cv.notify_all()
+        self._thread.join(timeout=10.0)
+        self._thread = None
+        self.drain()
+
+    def result(self, p: Pending, timeout: float | None = 30.0) -> dict:
+        """Wait for a pending request; raises its execution error."""
+        if not p.done.wait(timeout=timeout):
+            raise TimeoutError(f"request {p.rid} not served in {timeout}s")
+        if p.error is not None:
+            raise p.error
+        return p.result

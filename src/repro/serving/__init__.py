@@ -1,1 +1,3 @@
-from repro.serving.batcher import MicroBatcher, Request, SketchServer  # noqa: F401
+from repro.serving.batcher import (  # noqa: F401
+    BatchStats, MicroBatcher, Request, SketchServer, execute_batch)
+from repro.serving.histogram import Histogram  # noqa: F401

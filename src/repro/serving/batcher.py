@@ -21,6 +21,8 @@ from typing import Callable
 
 import numpy as np
 
+from repro.serving.histogram import Histogram
+
 
 @dataclasses.dataclass
 class Request:
@@ -32,20 +34,69 @@ class Request:
 
 @dataclasses.dataclass
 class BatchStats:
+    """Flush accounting + real distributions (fixed-bucket histograms).
+
+    The means survive for quick prints; the histograms are what the
+    service layer's ``/metrics`` endpoint exports — per-request queue
+    wait (submit → flush) and per-flush execution latency — so tail
+    percentiles come from counts, not from a mean that hides them.
+    ``flushes_expired`` counts flushes forced because a request blew its
+    deadline while queued (the async server's dense-fallback path).
+    """
+
     flushes_full: int = 0
     flushes_deadline: int = 0
+    flushes_expired: int = 0
     served: int = 0
     total_wait: float = 0.0
     total_batch: int = 0
+    queue_wait_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    flush_latency_hist: Histogram = dataclasses.field(
+        default_factory=Histogram)
+
+    @property
+    def flushes(self) -> int:
+        return self.flushes_full + self.flushes_deadline + self.flushes_expired
 
     @property
     def mean_batch(self) -> float:
-        n = self.flushes_full + self.flushes_deadline
+        n = self.flushes
         return self.total_batch / n if n else 0.0
 
     @property
     def mean_wait(self) -> float:
         return self.total_wait / self.served if self.served else 0.0
+
+    def record_batch(self, waits, reason: str = "deadline") -> None:
+        """Account one flushed batch: per-request queue waits (seconds)
+        + the flush reason ∈ {"full", "deadline", "expired"}."""
+        waits = np.asarray(waits, np.float64)
+        if reason == "full":
+            self.flushes_full += 1
+        elif reason == "expired":
+            self.flushes_expired += 1
+        else:
+            self.flushes_deadline += 1
+        self.served += len(waits)
+        self.total_wait += float(waits.sum())
+        self.total_batch += len(waits)
+        self.queue_wait_hist.observe_many(waits)
+
+
+def execute_batch(index, batch: list[Request], topk: int, plan: str,
+                  stats: BatchStats | None = None,
+                  clock: Callable[[], float] = time.monotonic) -> dict:
+    """One device execution for a flushed batch: ``index.serve_batch``
+    over the batch's queries/thresholds, flush latency recorded into
+    ``stats``. Returns {rid: result dict} — shared by the synchronous
+    :class:`SketchServer` and the service layer's async flush loop."""
+    t0 = clock()
+    results = index.serve_batch(
+        [r.q_ids for r in batch],
+        np.asarray([r.threshold for r in batch]), topk, plan=plan)
+    if stats is not None:
+        stats.flush_latency_hist.observe(clock() - t0)
+    return {req.rid: res for req, res in zip(batch, results)}
 
 
 class MicroBatcher:
@@ -72,23 +123,25 @@ class MicroBatcher:
             return self.flush(full=False)
         return None
 
-    def flush(self, full: bool = False) -> list[Request]:
+    def flush(self, full: bool = False, reason: str | None = None
+              ) -> list[Request]:
         """Drain and return the pending batch (public — drivers drain
         stragglers through this, not through a private hook)."""
         batch, self.pending = self.pending, []
-        if full:
-            self.stats.flushes_full += 1
-        else:
-            self.stats.flushes_deadline += 1
         now = self.clock()
-        self.stats.served += len(batch)
-        self.stats.total_wait += sum(now - r.arrival for r in batch)
-        self.stats.total_batch += len(batch)
+        self.stats.record_batch([now - r.arrival for r in batch],
+                                reason or ("full" if full else "deadline"))
         return batch
 
 
 class SketchServer:
     """Batcher + sharded GB-KMV index + global top-k, end to end.
+
+    This is the *synchronous, in-process* embedding: submit executes the
+    flush inline when the size bound hits. The production door — an
+    async flush loop with bounded admission, deadlines, and an HTTP
+    front — is :class:`repro.service.AsyncSketchServer`, which shares
+    this module's :func:`execute_batch` and :class:`BatchStats`.
 
     ``index`` may be a host GBKMVIndex, a ``repro.api`` GB-KMV index, or
     an already-placed :class:`repro.sketchindex.ShardedIndex` — device
@@ -144,9 +197,6 @@ class SketchServer:
             self._execute(self.batcher.flush(full=False))
 
     def _execute(self, batch: list[Request]):
-        results = self.index.serve_batch(
-            [r.q_ids for r in batch],
-            np.asarray([r.threshold for r in batch]), self.topk,
-            plan=self.plan)
-        for req, res in zip(batch, results):
-            self.results[req.rid] = res
+        self.results.update(execute_batch(
+            self.index, batch, self.topk, self.plan,
+            stats=self.batcher.stats, clock=self.batcher.clock))

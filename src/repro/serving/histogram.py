@@ -1,0 +1,97 @@
+"""Fixed-bucket latency histograms (numpy counts, Prometheus-exportable).
+
+One primitive shared by the batcher's :class:`BatchStats` (queue-wait and
+flush-latency distributions) and the service layer's request metrics.
+Buckets are fixed at construction — observation is one ``searchsorted``
+per value (or one vectorized pass per batch), merge is elementwise add,
+and the Prometheus text rendering is the standard cumulative ``le``
+series. Quantiles interpolate linearly inside the owning bucket, which
+is exactly the estimate a Prometheus ``histogram_quantile`` would give
+for the same buckets.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Log-spaced seconds: 100µs … 10s. Covers a sub-millisecond device flush
+# through a badly overloaded queue; the +Inf bucket catches the rest.
+DEFAULT_LATENCY_BOUNDS = tuple(
+    float(f"{b:.6g}") for b in np.logspace(-4, 1, 21))
+
+
+class Histogram:
+    """Fixed upper-bound buckets + an implicit +Inf overflow bucket."""
+
+    def __init__(self, bounds=DEFAULT_LATENCY_BOUNDS):
+        self.bounds = np.asarray(bounds, np.float64)
+        if len(self.bounds) == 0 or np.any(np.diff(self.bounds) <= 0):
+            raise ValueError("bounds must be non-empty and increasing")
+        self.counts = np.zeros(len(self.bounds) + 1, np.int64)
+        self.sum = 0.0
+
+    @property
+    def count(self) -> int:
+        return int(self.counts.sum())
+
+    def observe(self, value: float) -> None:
+        # side="left": bucket i holds value <= bounds[i], the Prometheus
+        # ``le`` convention.
+        self.counts[np.searchsorted(self.bounds, value, side="left")] += 1
+        self.sum += float(value)
+
+    def observe_many(self, values) -> None:
+        v = np.asarray(values, np.float64).reshape(-1)
+        if v.size == 0:
+            return
+        idx = np.searchsorted(self.bounds, v, side="left")
+        self.counts += np.bincount(idx, minlength=len(self.counts))
+        self.sum += float(v.sum())
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        if not np.array_equal(self.bounds, other.bounds):
+            raise ValueError("cannot merge histograms with different buckets")
+        self.counts += other.counts
+        self.sum += other.sum
+        return self
+
+    @property
+    def mean(self) -> float:
+        n = self.count
+        return self.sum / n if n else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Estimated q-quantile (0..1) by linear interpolation inside the
+        owning bucket (lower edge 0 for the first, last finite bound for
+        the +Inf bucket — the conservative Prometheus convention)."""
+        n = self.count
+        if n == 0:
+            return 0.0
+        rank = q * n
+        cum = np.cumsum(self.counts)
+        i = int(np.searchsorted(cum, rank, side="left"))
+        i = min(i, len(self.counts) - 1)
+        if i >= len(self.bounds):          # overflow bucket: no upper edge
+            return float(self.bounds[-1])
+        lo = float(self.bounds[i - 1]) if i > 0 else 0.0
+        hi = float(self.bounds[i])
+        below = float(cum[i - 1]) if i > 0 else 0.0
+        inside = float(self.counts[i])
+        frac = (rank - below) / inside if inside else 0.0
+        return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+
+    def to_prometheus(self, name: str, labels: str = "") -> list[str]:
+        """Cumulative ``le`` series + ``_sum``/``_count`` text lines.
+        ``labels`` is a pre-rendered ``key="value"`` list (no braces)."""
+        sep = labels + "," if labels else ""
+        lines = []
+        cum = 0
+        for b, c in zip(self.bounds, self.counts[:-1]):
+            cum += int(c)
+            lines.append(f'{name}_bucket{{{sep}le="{b:g}"}} {cum}')
+        cum += int(self.counts[-1])
+        lines.append(f'{name}_bucket{{{sep}le="+Inf"}} {cum}')
+        brace = f"{{{labels}}}" if labels else ""
+        lines.append(f"{name}_sum{brace} {self.sum:g}")
+        lines.append(f"{name}_count{brace} {cum}")
+        return lines
