@@ -54,17 +54,37 @@ def _json_error(status: int, message: str, **headers) -> Response:
     return Response(status, {"error": message}, headers=headers)
 
 
+# Sanity cap on one chunk-size/trailer line (incl. chunk extensions).
+_MAX_LINE = 8192
+
+
+def _read_line(rfile, what: str) -> bytes:
+    line = rfile.readline(_MAX_LINE)
+    if line and not line.endswith(b"\n"):
+        raise ValueError(f"{what} line too long (> {_MAX_LINE} bytes)")
+    return line
+
+
 def _iter_body(rfile, headers, max_chunk: int = 1 << 16):
     """Yield raw body bytes without materializing the request:
     Content-Length bodies stream in ``max_chunk`` pieces, and
-    ``Transfer-Encoding: chunked`` is decoded incrementally."""
+    ``Transfer-Encoding: chunked`` is decoded incrementally (chunk
+    extensions stripped, trailer headers consumed)."""
     if headers.get("Transfer-Encoding", "").lower() == "chunked":
         while True:
-            size_line = rfile.readline(64).strip()
-            size = int(size_line.split(b";")[0], 16) if size_line else 0
+            size_line = _read_line(rfile, "chunk size")
+            if not size_line:
+                return                                 # peer closed
+            try:
+                size = int(size_line.split(b";")[0].strip() or b"0", 16)
+            except ValueError:
+                raise ValueError(
+                    f"bad chunk size {size_line[:32]!r}") from None
             if size == 0:
-                rfile.readline()                       # trailing CRLF
-                return
+                while True:                            # trailer section
+                    line = _read_line(rfile, "trailer")
+                    if line in (b"", b"\r\n", b"\n"):
+                        return
             remaining = size
             while remaining:
                 piece = rfile.read(min(remaining, max_chunk))
@@ -72,7 +92,7 @@ def _iter_body(rfile, headers, max_chunk: int = 1 << 16):
                     return
                 remaining -= len(piece)
                 yield piece
-            rfile.readline()                           # chunk CRLF
+            rfile.readline(2)                          # chunk-data CRLF
         return
     remaining = int(headers.get("Content-Length", 0) or 0)
     while remaining > 0:
@@ -81,6 +101,44 @@ def _iter_body(rfile, headers, max_chunk: int = 1 << 16):
             return
         remaining -= len(piece)
         yield piece
+
+
+class _Body:
+    """One-shot iterator over the request body that tracks consumption.
+
+    The handler may answer before reading the body (401/404/405/429);
+    on a keep-alive connection the unread bytes would then be parsed as
+    the *next* request line, corrupting the stream — so :meth:`handle`
+    always drains the remainder before responding. A body that can't be
+    decoded (malformed chunking) marks itself ``broken`` and the
+    response carries ``Connection: close`` instead."""
+
+    def __init__(self, rfile, headers):
+        self._iter = self._decode(rfile, headers)
+        self.broken = False
+
+    def _decode(self, rfile, headers):
+        try:
+            yield from _iter_body(rfile, headers)
+        except ValueError:
+            self.broken = True
+            raise
+
+    def __iter__(self):
+        return self._iter
+
+    def drain(self) -> bool:
+        """Consume whatever the handler left unread; False means the
+        stream is undecodable and the connection must be closed."""
+        if self.broken:
+            return False
+        try:
+            for _ in self._iter:
+                pass
+        except (ValueError, OSError):
+            self.broken = True
+            return False
+        return True
 
 
 def _iter_lines(chunks):
@@ -123,9 +181,13 @@ class ServiceApp:
         m.register_histogram(
             "service_flush_latency_seconds", stats.flush_latency_hist,
             help="Device execution latency per flush")
+        m.register_histogram(
+            "service_ingest_latency_seconds", stats.ingest_latency_hist,
+            help="Host insert latency per ingest request")
         for reason, fn in (("full", lambda: stats.flushes_full),
                            ("deadline", lambda: stats.flushes_deadline),
-                           ("expired", lambda: stats.flushes_expired)):
+                           ("expired", lambda: stats.flushes_expired),
+                           ("ingest", lambda: stats.flushes_ingest)):
             m.set_counter_fn("service_flush_total", fn, {"reason": reason},
                              help="Flushes by trigger reason")
         m.set_counter_fn("service_shed_total", lambda: srv.shed,
@@ -180,7 +242,17 @@ class ServiceApp:
         ``rfile`` a binary stream positioned at the body."""
         endpoint = path.split("?")[0].rstrip("/") or "/"
         t0 = self.clock()
-        resp = self._route(method, endpoint, headers, rfile)
+        body = _Body(rfile, headers)
+        try:
+            resp = self._route(method, endpoint, headers, body)
+        except Exception as e:  # a handler crash must not kill the conn
+            resp = _json_error(
+                500, f"internal error: {type(e).__name__}: {e}")
+        # Early errors (401/404/405/429) answer before reading the body;
+        # drain it so leftover bytes don't corrupt the next keep-alive
+        # request. An undecodable body forces a fresh connection instead.
+        if not body.drain():
+            resp.headers["Connection"] = "close"
         self.metrics.inc(
             "service_requests_total",
             {"endpoint": endpoint.lstrip("/") or "root",
@@ -192,7 +264,8 @@ class ServiceApp:
             help="End-to-end in-service latency")
         return resp
 
-    def _route(self, method: str, endpoint: str, headers, rfile) -> Response:
+    def _route(self, method: str, endpoint: str, headers,
+               body: "_Body") -> Response:
         if endpoint == "/healthz":
             return Response(200, {"status": "ok",
                                   "records": self.num_records,
@@ -212,11 +285,11 @@ class ServiceApp:
                                **{"Retry-After": f"{ra:.3f}"})
         try:
             if endpoint == "/ingest":
-                return self._ingest(headers, rfile)
-            body = json.loads(b"".join(_iter_body(rfile, headers)) or b"{}")
+                return self._ingest(headers, body)
+            payload = json.loads(b"".join(body) or b"{}")
             if endpoint == "/query":
-                return self._query(body)
-            return self._topk(body)
+                return self._query(payload)
+            return self._topk(payload)
         except Overloaded as e:
             return _json_error(429, str(e),
                                **{"Retry-After": f"{e.retry_after:.3f}"})
@@ -249,13 +322,14 @@ class ServiceApp:
             "scores": [float(s) for s in res["topk_scores"]],
             "expired": p.expired})
 
-    def _ingest(self, headers, rfile) -> Response:
+    def _ingest(self, headers, body: "_Body") -> Response:
         ctype = headers.get("Content-Type", "")
         if "json" in ctype and "ndjson" not in ctype:
-            body = json.loads(b"".join(_iter_body(rfile, headers)) or b"{}")
-            lines = (json.dumps(r).encode() for r in body.get("records", []))
+            payload = json.loads(b"".join(body) or b"{}")
+            lines = (json.dumps(r).encode()
+                     for r in payload.get("records", []))
         else:
-            lines = _iter_lines(_iter_body(rfile, headers))
+            lines = _iter_lines(body)
         chunk: list[np.ndarray] = []
         pending = []
         total = 0

@@ -51,10 +51,10 @@ class Pending:
     Field names mirror ``serving.Request`` so ``execute_batch`` consumes
     these directly."""
 
-    rid: int
     kind: str                      # "query" | "topk" | "ingest"
     q_ids: np.ndarray | None
     arrival: float
+    rid: int = -1                  # assigned under the lock by _admit
     threshold: float = 0.5
     k: int = 0
     deadline: float | None = None  # absolute clock time, None = no SLO
@@ -122,6 +122,11 @@ class AsyncSketchServer:
             if len(self._queue) >= self.max_inflight:
                 self.shed += 1
                 raise Overloaded(self.retry_after())
+            # rid minted under the lock: submitters run on concurrent HTTP
+            # handler threads, and execute_batch keys results by rid — a
+            # duplicate would hand two requests each other's answers.
+            p.rid = self._next_rid
+            self._next_rid += 1
             self._queue.append(p)
             self._cv.notify()
         return p
@@ -133,26 +138,23 @@ class AsyncSketchServer:
     def submit_query(self, q_ids, threshold: float = 0.5,
                      deadline: float | None = None) -> Pending:
         now = self.clock()
-        rid, self._next_rid = self._next_rid, self._next_rid + 1
         return self._admit(Pending(
-            rid=rid, kind="query", q_ids=np.asarray(q_ids), arrival=now,
+            kind="query", q_ids=np.asarray(q_ids), arrival=now,
             threshold=float(threshold),
             deadline=self._deadline(now, deadline)))
 
     def submit_topk(self, q_ids, k: int = 10,
                     deadline: float | None = None) -> Pending:
         now = self.clock()
-        rid, self._next_rid = self._next_rid, self._next_rid + 1
         return self._admit(Pending(
-            rid=rid, kind="topk", q_ids=np.asarray(q_ids), arrival=now,
+            kind="topk", q_ids=np.asarray(q_ids), arrival=now,
             threshold=math.inf, k=int(k),
             deadline=self._deadline(now, deadline)))
 
     def submit_ingest(self, records) -> Pending:
         now = self.clock()
-        rid, self._next_rid = self._next_rid, self._next_rid + 1
         return self._admit(Pending(
-            rid=rid, kind="ingest", q_ids=None, arrival=now,
+            kind="ingest", q_ids=None, arrival=now,
             records=[np.asarray(r) for r in records]))
 
     # -- flush loop --------------------------------------------------------
@@ -264,12 +266,15 @@ class AsyncSketchServer:
 
     def _execute_ingest(self, batch: list[Pending]):
         now = self.clock()
-        self.stats.record_batch([now - p.arrival for p in batch], "deadline")
+        self.stats.record_batch([now - p.arrival for p in batch], "ingest")
         for p in batch:
             try:
                 t0 = self.clock()
                 self.index.insert(p.records)
-                self.stats.flush_latency_hist.observe(self.clock() - t0)
+                # Host insert latency stays out of flush_latency_hist —
+                # that histogram is the device-flush basis for the 429
+                # Retry-After hint.
+                self.stats.ingest_latency_hist.observe(self.clock() - t0)
                 self.records_ingested += len(p.records)
                 p.result = {"ingested": len(p.records)}
             except Exception as e:

@@ -42,16 +42,24 @@ class BatchStats:
     percentiles come from counts, not from a mean that hides them.
     ``flushes_expired`` counts flushes forced because a request blew its
     deadline while queued (the async server's dense-fallback path).
+    ``flushes_ingest`` counts ingest flushes separately: they never touch
+    the device pipeline, so ``flushes``/``mean_batch`` (device-batch
+    occupancy) and ``flush_latency_hist`` (device execution latency, the
+    429 Retry-After basis) stay serve-only; host insert latency goes to
+    ``ingest_latency_hist``.
     """
 
     flushes_full: int = 0
     flushes_deadline: int = 0
     flushes_expired: int = 0
+    flushes_ingest: int = 0
     served: int = 0
     total_wait: float = 0.0
     total_batch: int = 0
     queue_wait_hist: Histogram = dataclasses.field(default_factory=Histogram)
     flush_latency_hist: Histogram = dataclasses.field(
+        default_factory=Histogram)
+    ingest_latency_hist: Histogram = dataclasses.field(
         default_factory=Histogram)
 
     @property
@@ -69,17 +77,20 @@ class BatchStats:
 
     def record_batch(self, waits, reason: str = "deadline") -> None:
         """Account one flushed batch: per-request queue waits (seconds)
-        + the flush reason ∈ {"full", "deadline", "expired"}."""
+        + the flush reason ∈ {"full", "deadline", "expired", "ingest"}."""
         waits = np.asarray(waits, np.float64)
         if reason == "full":
             self.flushes_full += 1
         elif reason == "expired":
             self.flushes_expired += 1
+        elif reason == "ingest":
+            self.flushes_ingest += 1
         else:
             self.flushes_deadline += 1
         self.served += len(waits)
         self.total_wait += float(waits.sum())
-        self.total_batch += len(waits)
+        if reason != "ingest":             # mean_batch is device occupancy
+            self.total_batch += len(waits)
         self.queue_wait_hist.observe_many(waits)
 
 

@@ -12,6 +12,8 @@ for the same buckets.
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 # Log-spaced seconds: 100µs … 10s. Covers a sub-millisecond device flush
@@ -21,7 +23,12 @@ DEFAULT_LATENCY_BOUNDS = tuple(
 
 
 class Histogram:
-    """Fixed upper-bound buckets + an implicit +Inf overflow bucket."""
+    """Fixed upper-bound buckets + an implicit +Inf overflow bucket.
+
+    Writers (the flush worker) and readers (a concurrent ``/metrics``
+    scrape) share ``_lock``: every read goes through :meth:`snapshot`,
+    so a scrape never sees ``counts`` torn against ``sum``.
+    """
 
     def __init__(self, bounds=DEFAULT_LATENCY_BOUNDS):
         self.bounds = np.asarray(bounds, np.float64)
@@ -29,69 +36,84 @@ class Histogram:
             raise ValueError("bounds must be non-empty and increasing")
         self.counts = np.zeros(len(self.bounds) + 1, np.int64)
         self.sum = 0.0
+        self._lock = threading.Lock()
+
+    def snapshot(self) -> tuple[np.ndarray, float]:
+        """Mutually consistent ``(counts copy, sum)``."""
+        with self._lock:
+            return self.counts.copy(), self.sum
 
     @property
     def count(self) -> int:
-        return int(self.counts.sum())
+        return int(self.snapshot()[0].sum())
 
     def observe(self, value: float) -> None:
         # side="left": bucket i holds value <= bounds[i], the Prometheus
         # ``le`` convention.
-        self.counts[np.searchsorted(self.bounds, value, side="left")] += 1
-        self.sum += float(value)
+        i = np.searchsorted(self.bounds, value, side="left")
+        with self._lock:
+            self.counts[i] += 1
+            self.sum += float(value)
 
     def observe_many(self, values) -> None:
         v = np.asarray(values, np.float64).reshape(-1)
         if v.size == 0:
             return
         idx = np.searchsorted(self.bounds, v, side="left")
-        self.counts += np.bincount(idx, minlength=len(self.counts))
-        self.sum += float(v.sum())
+        add = np.bincount(idx, minlength=len(self.counts))
+        with self._lock:
+            self.counts += add
+            self.sum += float(v.sum())
 
     def merge(self, other: "Histogram") -> "Histogram":
         if not np.array_equal(self.bounds, other.bounds):
             raise ValueError("cannot merge histograms with different buckets")
-        self.counts += other.counts
-        self.sum += other.sum
+        counts, total = other.snapshot()
+        with self._lock:
+            self.counts += counts
+            self.sum += total
         return self
 
     @property
     def mean(self) -> float:
-        n = self.count
-        return self.sum / n if n else 0.0
+        counts, total = self.snapshot()
+        n = int(counts.sum())
+        return total / n if n else 0.0
 
     def quantile(self, q: float) -> float:
         """Estimated q-quantile (0..1) by linear interpolation inside the
         owning bucket (lower edge 0 for the first, last finite bound for
         the +Inf bucket — the conservative Prometheus convention)."""
-        n = self.count
+        counts, _ = self.snapshot()
+        n = int(counts.sum())
         if n == 0:
             return 0.0
         rank = q * n
-        cum = np.cumsum(self.counts)
+        cum = np.cumsum(counts)
         i = int(np.searchsorted(cum, rank, side="left"))
-        i = min(i, len(self.counts) - 1)
+        i = min(i, len(counts) - 1)
         if i >= len(self.bounds):          # overflow bucket: no upper edge
             return float(self.bounds[-1])
         lo = float(self.bounds[i - 1]) if i > 0 else 0.0
         hi = float(self.bounds[i])
         below = float(cum[i - 1]) if i > 0 else 0.0
-        inside = float(self.counts[i])
+        inside = float(counts[i])
         frac = (rank - below) / inside if inside else 0.0
         return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
 
     def to_prometheus(self, name: str, labels: str = "") -> list[str]:
         """Cumulative ``le`` series + ``_sum``/``_count`` text lines.
         ``labels`` is a pre-rendered ``key="value"`` list (no braces)."""
+        counts, total = self.snapshot()
         sep = labels + "," if labels else ""
         lines = []
         cum = 0
-        for b, c in zip(self.bounds, self.counts[:-1]):
+        for b, c in zip(self.bounds, counts[:-1]):
             cum += int(c)
             lines.append(f'{name}_bucket{{{sep}le="{b:g}"}} {cum}')
-        cum += int(self.counts[-1])
+        cum += int(counts[-1])
         lines.append(f'{name}_bucket{{{sep}le="+Inf"}} {cum}')
         brace = f"{{{labels}}}" if labels else ""
-        lines.append(f"{name}_sum{brace} {self.sum:g}")
+        lines.append(f"{name}_sum{brace} {total:g}")
         lines.append(f"{name}_count{brace} {cum}")
         return lines

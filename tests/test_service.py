@@ -3,7 +3,11 @@ under an injectable clock (no threads — fully deterministic), middleware,
 metrics rendering, and live in-process HTTP round-trips asserting the
 service answers bit-identically to the direct index calls."""
 
+import http.client
+import json
 import math
+import socket
+import threading
 
 import numpy as np
 import pytest
@@ -100,6 +104,31 @@ def test_batch_stats_reasons_and_wait_histogram():
     assert s.mean_batch == pytest.approx(4 / 3)
     assert s.queue_wait_hist.count == 4
     assert s.queue_wait_hist.quantile(0.99) > 1.0
+    # Ingest flushes count separately and never skew device occupancy.
+    s.record_batch([0.5, 0.5, 0.5], "ingest")
+    assert s.flushes_ingest == 1 and s.flushes == 3
+    assert s.mean_batch == pytest.approx(4 / 3)
+    assert s.queue_wait_hist.count == 7 and s.served == 7
+
+
+def test_histogram_snapshot_consistent_under_concurrent_writes():
+    """A /metrics scrape must never see counts torn against sum."""
+    h = Histogram(bounds=[1.0, 2.0])
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            h.observe(1.5)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(300):
+            counts, total = h.snapshot()
+            assert total == pytest.approx(int(counts.sum()) * 1.5)
+    finally:
+        stop.set()
+        t.join()
 
 
 # -- async flush loop (deterministic: fake clock, no worker thread) ---------
@@ -156,6 +185,32 @@ def test_async_server_ingest_is_a_fifo_barrier():
     assert srv.result(ing, timeout=0) == {"ingested": 2}
     assert srv.records_ingested == 2 and stub.num_records == 3
     assert q1.done.is_set() and q2.done.is_set()
+    # Ingest accounting stays off the device-flush metrics: two serve
+    # flushes in flush_latency_hist, the insert in ingest_latency_hist.
+    assert srv.stats.flushes_ingest == 1 and srv.stats.flushes == 2
+    assert srv.stats.flush_latency_hist.count == 2
+    assert srv.stats.ingest_latency_hist.count == 1
+
+
+def test_concurrent_submissions_mint_unique_rids():
+    """HTTP handler threads submit concurrently; duplicate rids would
+    hand two requests each other's results via the execute_batch map."""
+    srv = AsyncSketchServer(StubIndex(), max_batch=64, max_wait=10.0,
+                            max_inflight=10_000)
+    pendings, lock = [], threading.Lock()
+
+    def submit_many():
+        mine = [srv.submit_query(np.arange(3)) for _ in range(200)]
+        with lock:
+            pendings.extend(mine)
+
+    threads = [threading.Thread(target=submit_many) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rids = [p.rid for p in pendings]
+    assert len(rids) == 1600 and len(set(rids)) == 1600
 
 
 def test_async_server_mixed_topk_and_query_batch():
@@ -274,6 +329,62 @@ def test_http_routing_errors():
         status, body, _ = cli.request("POST", "/query", body=b"not json")
         assert status == 400 and b"bad request" in body
         cli.close()
+
+
+def test_http_early_error_drains_body_for_keepalive():
+    """401/404/429 answer before reading the POST body; the unread bytes
+    must be drained or they'd be parsed as the next request line on the
+    persistent connection."""
+    with serve_stub(auth_token="tok") as h:
+        conn = http.client.HTTPConnection(*h.address, timeout=10)
+        body = json.dumps({"q": list(range(500))}).encode()
+        for path, want in (("/query", 401), ("/nope", 404), ("/query", 401)):
+            conn.request("POST", path, body=body,
+                         headers={"Content-Type": "application/json"})
+            r = conn.getresponse()
+            assert r.status == want
+            r.read()
+        # Same connection, no reconnect: still a clean request stream.
+        conn.request("GET", "/healthz")
+        r = conn.getresponse()
+        assert r.status == 200 and json.loads(r.read())["status"] == "ok"
+        conn.close()
+
+
+def test_http_rate_limited_connection_stays_usable():
+    with serve_stub(rate_limit=1e-6, burst=1) as h:
+        conn = http.client.HTTPConnection(*h.address, timeout=10)
+        payload = json.dumps({"q": [0, 1, 2]}).encode()
+        hdrs = {"Content-Type": "application/json"}
+        conn.request("POST", "/query", body=payload, headers=hdrs)
+        assert conn.getresponse().read() is not None    # burst spent
+        conn.request("POST", "/query", body=payload, headers=hdrs)
+        r = conn.getresponse()
+        assert r.status == 429 and float(r.getheader("Retry-After")) > 0
+        r.read()
+        conn.request("GET", "/healthz")                 # same connection
+        r = conn.getresponse()
+        assert r.status == 200 and json.loads(r.read())["status"] == "ok"
+        conn.close()
+
+
+def test_http_chunked_extensions_and_trailers():
+    """Chunk-size lines with long extensions and trailer headers after
+    the last chunk are valid chunked framing and must decode."""
+    with serve_stub(ingest_chunk=8) as h:
+        rec = json.dumps([1, 2, 3]).encode() + b"\n"
+        ext = b";name=" + b"x" * 200            # size line far beyond 64B
+        chunked = ((b"%x" % len(rec)) + ext + b"\r\n" + rec + b"\r\n"
+                   + b"0\r\nx-trailer: v\r\n\r\n")
+        req = (b"POST /ingest HTTP/1.1\r\nHost: t\r\n"
+               b"Content-Type: application/x-ndjson\r\n"
+               b"Transfer-Encoding: chunked\r\n\r\n" + chunked)
+        with socket.create_connection(h.address, timeout=10) as s:
+            s.sendall(req)
+            r = http.client.HTTPResponse(s)
+            r.begin()
+            assert r.status == 200
+            assert json.loads(r.read()) == {"ingested": 1, "chunks": 1}
 
 
 def test_http_streaming_ingest_chunks():
