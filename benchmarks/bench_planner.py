@@ -37,6 +37,7 @@ import numpy as np
 from benchmarks.common import write_csv
 from repro import api
 from repro.data.synth import generate_dataset, make_query_workload
+from repro.obs import StageProfiler, attach
 from repro.planner import candidates_for
 from repro.planner.plan import probe_hits_per_query, unpack_query_rows
 
@@ -65,6 +66,19 @@ def _time_path(index, batches, threshold, plan, repeats: int = 3) -> float:
             index.batch_query(b, threshold, plan=plan)
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _stage_splits(index, batches, threshold, plan) -> dict:
+    """Mean per-stage latency (ms) for one pass over the workload, from
+    the obs stage profiler. Untimed and separate from ``_time_path`` on
+    purpose: observing adds device syncs at stage seams, so the QPS
+    gates keep measuring the production (unobserved) path."""
+    prof = StageProfiler()
+    with attach(None, prof):
+        for b in batches:
+            index.batch_query(b, threshold, plan=plan)
+    return {name: round(s["mean_s"] * 1e3, 4)
+            for name, s in sorted(prof.snapshot().items())}
 
 
 def check_baseline(rows, baseline_path: str, backend: str) -> list[str]:
@@ -157,6 +171,7 @@ def run(quick: bool = True, json_out: str | None = None,
         cand_sizes = [len(c.rec_ids) for c in cands]
         dt_dense = _time_path(index, batches, t, "dense")
         dt_pruned = _time_path(index, batches, t, "pruned")
+        stages = _stage_splits(index, batches, t, "pruned")
         rows.append({
             "threshold": t,
             "qps_dense": round(nq / dt_dense, 2),
@@ -169,6 +184,7 @@ def run(quick: bool = True, json_out: str | None = None,
             "mean_skipped_blocks": round(
                 float(np.mean([c.skipped_blocks for c in cands])), 2),
             "mean_hits": float(np.mean([len(d) for d in dense])),
+            "stages_ms": stages,
             "parity": True,
         })
 

@@ -21,6 +21,14 @@ FAILS on parity breakage, on QPS dropping below
 ``QPS_TOLERANCE`` × baseline (direct-QPS-ratio normalized, capped at the
 offered rate), on p99 inflating past ``P99_TOLERANCE`` × baseline
 (same normalization), or on shed rate exceeding ``MAX_SHED_RATE``.
+
+The observability tax is measured and gated every run: a paired
+serve_batch comparison with tracing + stage profiling attached vs the
+default no-op path must cost ≤ ``TRACING_OVERHEAD_CAP`` of QPS (the
+"off is free, on is cheap" contract from docs/OBSERVABILITY.md). The
+load phase itself runs with a live tracer, and the resulting request
+traces are exported as a Chrome trace-event artifact
+(``reports/bench/serving_trace.json`` — load in chrome://tracing).
 """
 
 from __future__ import annotations
@@ -32,10 +40,11 @@ import time
 
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import REPORT_DIR, write_csv
 from repro import api
 from repro.data.synth import generate_dataset, make_query_workload
 from repro.launch.mesh import make_mesh
+from repro.obs import StageProfiler, Tracer, attach
 from repro.sketchindex import ShardedIndex
 from repro.service import (
     AsyncSketchServer, ServiceApp, ServiceClient, ServiceError, ServiceHandle)
@@ -45,6 +54,7 @@ AUTH_TOKEN = "bench-serving-token"
 QPS_TOLERANCE = 0.6        # achieved QPS ≥ 0.6 × normalized baseline
 P99_TOLERANCE = 2.5        # p99 ≤ 2.5 × normalized baseline
 MAX_SHED_RATE = 0.05       # the un-overloaded profile must not shed
+TRACING_OVERHEAD_CAP = 0.05   # tracing+profiling may cost ≤ 5% of QPS
 
 
 def _zipf_ranks(n: int, alpha: float, size: int,
@@ -157,6 +167,45 @@ def _parity_check(sharded, address, queries, threshold=0.5, k=10):
     return len(queries)
 
 
+def _tracing_overhead(sharded, queries, batch: int = 16,
+                      repeats: int = 5) -> dict:
+    """Paired serve_batch throughput with observation off vs on.
+
+    "Off" is the production default: no trace/profiler attached, every
+    ``obs.stage`` call hits the shared no-op context. "On" attaches a
+    live Tracer + StageProfiler around each pass. Interleaved best-of-N
+    so scheduler drift hits both arms equally.
+    """
+    batches = [queries[i:i + batch] for i in range(0, len(queries), batch)]
+    tracer = Tracer(capacity=4)
+    prof = StageProfiler()
+
+    def pass_off():
+        for b in batches:
+            sharded.serve_batch(b, 0.5, 10)
+
+    def pass_on():
+        tr = tracer.begin("bench_pass")
+        with attach(tr, prof):
+            for b in batches:
+                sharded.serve_batch(b, 0.5, 10)
+        tr.end()
+
+    pass_off(), pass_on()                   # warm both arms
+    best_off = best_on = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        pass_off()
+        best_off = min(best_off, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        pass_on()
+        best_on = min(best_on, time.perf_counter() - t0)
+    qps_off = len(queries) / best_off
+    qps_on = len(queries) / best_on
+    return {"qps_off": round(qps_off, 2), "qps_on": round(qps_on, 2),
+            "overhead_frac": round(max(0.0, 1.0 - qps_on / qps_off), 4)}
+
+
 def _direct_qps(sharded, queries, batch: int = 16, repeats: int = 3) -> float:
     """Reference throughput of the same workload through serve_batch
     directly (no HTTP, no batcher) — the machine-speed normalizer."""
@@ -226,8 +275,11 @@ def run(quick: bool = True, json_out: str | None = None,
     direct = _direct_qps(sharded, parity_queries)
     rate = float(np.clip(0.7 * direct, 4.0, rate_cap))
 
+    tracing = _tracing_overhead(sharded, parity_queries)
+
     server = AsyncSketchServer(sharded, max_batch=16, max_wait=0.003,
-                               max_inflight=512, default_deadline=1.0)
+                               max_inflight=512, default_deadline=1.0,
+                               tracer=Tracer(capacity=128))
     app = ServiceApp(server, auth_token=AUTH_TOKEN, ingest_chunk=256)
 
     n_req = int(rate * duration)
@@ -284,11 +336,27 @@ def run(quick: bool = True, json_out: str | None = None,
     write_csv("serving.csv", [row])
     print(f"  parity: {par_n} queries bit-identical over HTTP "
           f"(query + topk); direct-path reference {direct:.0f} q/s")
+    print(f"  tracing tax: {tracing['overhead_frac']:.1%} "
+          f"({tracing['qps_off']:.0f} → {tracing['qps_on']:.0f} q/s with "
+          f"trace+profile attached; cap {TRACING_OVERHEAD_CAP:.0%})")
+
+    # Request traces from the load phase → Chrome trace-event artifact.
+    chrome = server.tracer.chrome_trace()
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    trace_path = os.path.join(REPORT_DIR, "serving_trace.json")
+    with open(trace_path, "w") as f:
+        json.dump(chrome, f)
+    print(f"  {len(chrome['traceEvents'])} trace events → {trace_path}")
 
     failures = []
+    if tracing["overhead_frac"] > TRACING_OVERHEAD_CAP:
+        failures.append(
+            f"tracing overhead {tracing['overhead_frac']:.1%} > cap "
+            f"{TRACING_OVERHEAD_CAP:.0%} ({tracing['qps_off']:.1f} q/s off "
+            f"vs {tracing['qps_on']:.1f} q/s on)")
     if baseline and os.path.exists(baseline):
         with open(baseline) as f:
-            failures = check_baseline(row, json.load(f), direct)
+            failures += check_baseline(row, json.load(f), direct)
 
     if json_out:
         payload = {
@@ -305,6 +373,7 @@ def run(quick: bool = True, json_out: str | None = None,
                 "default_deadline_s": 1.0, "ingest_chunk": 256,
             },
             "direct_qps": round(direct, 2),
+            "tracing": tracing,
             "rows": [row],
             "by_kind": by_kind,
             "metrics_sample": [ln for ln in metrics_text.splitlines()
@@ -315,6 +384,7 @@ def run(quick: bool = True, json_out: str | None = None,
             f.write("\n")
 
     if failures:
-        raise RuntimeError("serving gates failed (QPS / p99 / shed):\n  "
-                           + "\n  ".join(failures))
+        raise RuntimeError(
+            "serving gates failed (QPS / p99 / shed / tracing tax):\n  "
+            + "\n  ".join(failures))
     return [row]

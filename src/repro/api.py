@@ -37,6 +37,7 @@ dim sharded over a device mesh.
 
 from __future__ import annotations
 
+from time import perf_counter
 from typing import Protocol, runtime_checkable
 
 import numpy as np
@@ -293,6 +294,7 @@ class _PlannedIndexMixin:
 
     last_plan = None            # QueryPlan of the most recent planned batch
     last_candidate_sizes: list | None = None
+    last_explain: list | None = None   # explain dicts of the last explained batch
     _device_prunable = False    # engine scoring has a device twin
 
     def _sketch_pack(self) -> PackedSketches:
@@ -330,44 +332,85 @@ class _PlannedIndexMixin:
     def _postings(self):
         return SketchArena.from_pack(self._sketch_pack()).postings()
 
-    def query(self, q_ids, threshold: float, *, plan: str = "auto") -> np.ndarray:
+    def query(self, q_ids, threshold: float, *, plan: str = "auto",
+              explain: bool = False):
+        if explain:
+            ids, ex = self.batch_query([q_ids], threshold, plan=plan,
+                                       explain=True)
+            return ids[0], ex[0]
         return self.batch_query([q_ids], threshold, plan=plan)[0]
 
+    def _explained(self, hits, *, threshold, t0, cands=None,
+                   hash_rows=None, sizes=None, posts=None):
+        """Pair results with per-query explain dicts (explain=True)."""
+        from repro import obs
+
+        ex = obs.build_explain(
+            self.last_plan, engine=self.engine, backend=self.backend,
+            threshold=threshold, n_queries=len(hits), hits=hits,
+            cands=cands, hash_rows=hash_rows, sizes=sizes, posts=posts,
+            measured_seconds=perf_counter() - t0)
+        self.last_explain = ex
+        return hits, ex
+
     def batch_query(self, queries, threshold: float, *,
-                    plan: str = "auto") -> list[np.ndarray]:
-        from repro import planner
+                    plan: str = "auto", explain: bool = False):
+        """Planned batch query. With ``explain=True`` returns
+        ``(hits, explains)`` — one explain dict per query (see
+        :mod:`repro.obs.explain`); the device-backend pruned path reruns
+        the host candidate accounting to fill it (EXPLAIN ANALYZE
+        semantics: asking costs extra, answers don't change)."""
+        from repro import obs, planner
 
         plan = planner.normalize_plan(plan)
         queries = [np.asarray(q) for q in queries]
         if not queries:
-            return []
+            return ([], []) if explain else []
+        t0 = perf_counter()
         if plan == "dense" or float(threshold) <= 0.0:
             self.last_plan = planner.QueryPlan(
                 "dense", np.nan, np.nan, 0,
                 "forced" if plan == "dense" else "threshold <= 0")
-            return self._dense_batch_query(queries, threshold)
-        qp, hash_rows, bit_rows, sizes = self._plan_queries(queries)
+            with obs.stage("planner.dense", queries=len(queries)):
+                ids = self._dense_batch_query(queries, threshold)
+            if explain:
+                return self._explained(ids, threshold=threshold, t0=t0)
+            return ids
+        with obs.stage("planner.sketch", queries=len(queries)):
+            qp, hash_rows, bit_rows, sizes = self._plan_queries(queries)
         s = self._sketch_pack()
         decision = planner.choose_plan(
             self._postings(), hash_rows, bit_rows, threshold,
             s.num_records, s.capacity, plan=plan)
         self.last_plan = decision
+        cands = None
         if decision.path == "dense":
-            return self._dense_batch_query(queries, threshold, qp=qp)
-        if self._device_prunable and self.backend in ("jnp", "pallas"):
+            with obs.stage("planner.dense", queries=len(queries)):
+                ids = self._dense_batch_query(queries, threshold, qp=qp)
+        elif self._device_prunable and self.backend in ("jnp", "pallas"):
             from repro.planner import device as planner_device
 
             # The device path never materializes per-query candidate
             # sets on host — only the probe breakdown is known
             # (decision.per_query_hits); candidate accounting stays None.
             self.last_candidate_sizes = None
-            return planner_device.pruned_batch_device(
+            ids = planner_device.pruned_batch_device(
                 SketchArena.from_pack(s), qp, threshold,
                 plan=decision, backend=self.backend)
-        ids, cands = planner.pruned_batch(
-            self._post, hash_rows, bit_rows, sizes, threshold,
-            self._pair_score_fn(qp))
-        self.last_candidate_sizes = [len(c.rec_ids) for c in cands]
+            if explain:
+                # Host accounting pass the device path skipped.
+                gen = planner.merged_candidates(self._postings())
+                cands = [gen(qh, qb, float(threshold), int(qs))
+                         for qh, qb, qs in zip(hash_rows, bit_rows, sizes)]
+        else:
+            ids, cands = planner.pruned_batch(
+                self._post, hash_rows, bit_rows, sizes, threshold,
+                self._pair_score_fn(qp))
+            self.last_candidate_sizes = [len(c.rec_ids) for c in cands]
+        if explain:
+            return self._explained(
+                ids, threshold=threshold, t0=t0, cands=cands,
+                hash_rows=hash_rows, sizes=sizes, posts=self._postings())
         return ids
 
     def topk(self, q_ids, k: int, *,

@@ -1,0 +1,43 @@
+"""Observability for the serving → planner → kernel stack.
+
+Three pieces, all stdlib+numpy only:
+
+* :mod:`repro.obs.trace` — nestable-span request tracing with a bounded
+  ring buffer and Chrome trace-event export, plus the thread-local
+  observation context (``attach`` / ``stage``) instrumented library code
+  records into without signature changes.
+* :mod:`repro.obs.explain` — per-query plan explain built from
+  ``QueryPlan`` / ``CandidateSet`` internals.
+* :mod:`repro.obs.profile` — per-stage latency histograms
+  (:class:`StageProfiler`), cost-model drift accounting
+  (:class:`CostDrift`), and the gated ``jax.profiler`` wrapper.
+
+Off-by-default-cheap: with no context attached, ``stage()`` is a shared
+no-op; the serving bench gates end-to-end tracing overhead at ≤5% QPS.
+"""
+
+from repro.obs.trace import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Trace,
+    Tracer,
+    attach,
+    chrome_events,
+    current_profiler,
+    current_trace,
+    stage,
+)
+from repro.obs.explain import build_explain, cost_fields  # noqa: F401
+from repro.obs.profile import (  # noqa: F401
+    CostDrift,
+    StageProfiler,
+    device_profile,
+)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "Trace", "Span",
+    "attach", "stage", "current_trace", "current_profiler", "chrome_events",
+    "build_explain", "cost_fields",
+    "StageProfiler", "CostDrift", "device_profile",
+]

@@ -1,0 +1,172 @@
+"""Per-query plan explain: the planner's decision surfaced as data.
+
+PR 4 built the machinery — :class:`repro.planner.QueryPlan` (probe
+tallies, cost estimates, block counts) and
+:class:`repro.planner.prune.CandidateSet` (candidates generated, bound
+prunes, blocks decoded vs header-skipped) — but never exposed it per
+query. ``build_explain`` turns those internals plus a wall-clock
+measurement into one JSON-able dict per query, the payload behind
+``batch_query(..., explain=True)`` and the service's ``explain=true``.
+
+Schema (pruned path):
+
+    plan, reason, engine, backend, threshold
+    cost:        est_dense / est_pruned (units), predicted_units,
+                 seconds_per_unit (calibration, if installed),
+                 predicted_seconds, measured_seconds (batch wall time),
+                 drift (predicted/measured, None uncalibrated)
+    probe_hits:  posting entries this query's probe touched
+    candidates / pruned:       CandidateSet.rec_ids size / bound prunes
+    blocks / skipped_blocks:   blocks decoded vs header-skipped
+    tau:         postings retained-hash threshold (unit interval)
+    ub_max / ub_mean:          containment upper bounds over candidates
+    hits:        final result size
+    batch:       batch-level decision totals (hits/blocks/tail splits)
+
+The dense path reports ONLY plan/reason/engine/backend/threshold/cost/
+hits — no planner fields, because no probe or candidate generation ran.
+The block accounting is the host filter's view (the header-bound skip of
+prune.candidates_for); the device path executes every probed tail block
+without that skip, so explain on a device backend reruns the host
+accounting — EXPLAIN ANALYZE semantics: asking costs extra, answers
+don't change.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["cost_fields", "build_explain"]
+
+_TWO32 = float(2**32)
+
+
+def _f(v) -> float | None:
+    """NaN/inf-free float for JSON (None when not finite)."""
+    v = float(v)
+    return v if math.isfinite(v) else None
+
+
+def _seconds_per_unit() -> float | None:
+    from repro.core import cost_model
+
+    cal = cost_model.calibration()
+    if cal:
+        spu = cal.get("fit", {}).get("seconds_per_unit")
+        if spu:
+            return float(spu)
+    return None
+
+
+def cost_fields(decision, measured_seconds: float | None = None) -> dict:
+    """Predicted-vs-measured cost block from a QueryPlan decision."""
+    est_dense = _f(decision.est_dense)
+    est_pruned = _f(decision.est_pruned)
+    predicted = est_pruned if decision.path == "pruned" else est_dense
+    spu = _seconds_per_unit()
+    predicted_s = (predicted * spu
+                   if predicted is not None and spu is not None else None)
+    drift = None
+    if predicted_s is not None and measured_seconds:
+        drift = predicted_s / measured_seconds
+    return {
+        "est_dense": est_dense,
+        "est_pruned": est_pruned,
+        "predicted_units": predicted,
+        "seconds_per_unit": spu,
+        "predicted_seconds": predicted_s,
+        "measured_seconds": _f(measured_seconds)
+        if measured_seconds is not None else None,
+        "drift": _f(drift) if drift is not None else None,
+    }
+
+
+def _tau_of(posts) -> float | None:
+    """Postings retained-hash threshold as a unit-interval float (max
+    over shards: the loosest τ bounds what any shard retains)."""
+    if posts is None:
+        return None
+    if not isinstance(posts, (list, tuple)):
+        posts = [posts]
+    taus = [float(p.tau) for p in posts if p is not None]
+    return max(taus) / _TWO32 if taus else None
+
+
+def _ub_stats(cand, hash_row, q_size: int) -> tuple[float | None, float | None]:
+    """(max, mean) containment upper bound over a query's candidates —
+    the exact bound the filter thresholds on."""
+    n = len(cand.rec_ids)
+    if n == 0:
+        return None, None
+    from repro.planner import prune
+
+    bound = prune.tail_bound(np.sort(np.asarray(hash_row, np.uint32)))
+    ub = (cand.o1.astype(np.float64)
+          + bound[np.minimum(cand.counts, len(bound) - 1)]) \
+        / max(int(q_size), 1) * prune._BOUND_SLACK
+    return float(ub.max()), float(ub.mean())
+
+
+def build_explain(
+    decision,
+    *,
+    engine: str = "",
+    backend: str = "",
+    threshold: float | None = None,
+    n_queries: int = 1,
+    hits=None,
+    cands=None,
+    hash_rows=None,
+    sizes=None,
+    posts=None,
+    measured_seconds: float | None = None,
+) -> list[dict]:
+    """One explain dict per query in the batch.
+
+    ``decision`` is the batch's QueryPlan. For the pruned path pass
+    ``cands`` (per-query CandidateSets), ``hash_rows``/``sizes`` (for
+    upper-bound stats), and ``posts`` (for τ); the dense path needs none
+    of them and emits no planner fields.
+    """
+    cost = cost_fields(decision, measured_seconds)
+    base = {
+        "plan": decision.path,
+        "reason": decision.reason,
+        "engine": engine,
+        "backend": backend,
+        "threshold": _f(threshold) if threshold is not None else None,
+        "cost": cost,
+    }
+    out = []
+    for g in range(n_queries):
+        e = dict(base)
+        e["cost"] = dict(cost)
+        if hits is not None:
+            e["hits"] = int(len(hits[g]))
+        if decision.path != "pruned":
+            out.append(e)
+            continue
+        if decision.per_query_hits is not None:
+            e["probe_hits"] = int(decision.per_query_hits[g])
+        e["batch"] = {
+            "probe_hits": int(decision.hits),
+            "blocks": int(decision.blocks),
+            "tail_blocks": int(decision.tail_blocks),
+            "tail_dense_blocks": int(decision.tail_dense_blocks),
+        }
+        e["tau"] = _tau_of(posts)
+        if cands is not None:
+            c = cands[g]
+            e["candidates"] = int(len(c.rec_ids))
+            e["pruned"] = int(c.pruned)
+            e["blocks"] = int(c.blocks)
+            e["skipped_blocks"] = int(c.skipped_blocks)
+            e["merge_hits"] = int(c.hits)
+            if hash_rows is not None and sizes is not None:
+                ub_max, ub_mean = _ub_stats(c, hash_rows[g], int(sizes[g]))
+                e["ub_max"] = ub_max
+                e["ub_mean"] = ub_mean
+        out.append(e)
+    return out

@@ -23,6 +23,7 @@ from repro.planner.plan import (
     PLAN_MODES,
     QueryPlan,
     choose_plan,
+    merged_candidates,
     normalize_plan,
     probe_block_stats,
     pruned_batch,
@@ -53,6 +54,7 @@ __all__ = [
     "PLAN_MODES",
     "QueryPlan",
     "choose_plan",
+    "merged_candidates",
     "normalize_plan",
     "probe_block_stats",
     "pruned_batch",

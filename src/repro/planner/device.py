@@ -26,6 +26,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.arena import SketchArena
+from repro.obs.trace import stage
 from repro.planner import prune
 
 
@@ -131,8 +132,17 @@ def pruned_batch_device(
     if plan.hits <= 0 or m == 0:
         return [np.zeros(0, np.int64) for _ in range(gq)]
 
-    dpost, dpack, dq, dthr = stage_query_inputs(arena, qp, threshold)
+    # Stage spans sit exactly at the transfer seams: "device.stage" is
+    # host→device placement, "device.kernel" the fused decode+score+
+    # threshold jit (closed by sync — stage() is a shared no-op when no
+    # observation context is attached, so the extra block_until_ready
+    # only happens when observing), "device.fetch" the one mask readback.
+    with stage("device.stage", queries=gq):
+        dpost, dpack, dq, dthr = stage_query_inputs(arena, qp, threshold)
     tb, tbd = task_bounds(plan)
-    mask = pruned_hit_mask(dpost, dpack, dq, dthr, tb=tb, tbd=tbd,
-                           m=m, backend=backend)
-    return prune.mask_to_hits(np.asarray(mask))
+    with stage("device.kernel", tb=tb, tbd=tbd, backend=backend) as span:
+        mask = span.sync(pruned_hit_mask(dpost, dpack, dq, dthr, tb=tb,
+                                         tbd=tbd, m=m, backend=backend))
+    with stage("device.fetch"):
+        host_mask = np.asarray(mask)
+    return prune.mask_to_hits(host_mask)

@@ -32,6 +32,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import cost_model
+from repro.obs.trace import stage
 from repro.planner import prune
 from repro.planner.postings import PostingsIndex
 
@@ -102,29 +103,32 @@ def _probe(
         posts = [posts]
     per = np.zeros(len(q_hash_rows), dtype=np.int64)
     tb = td = bb = 0
-    for post in posts:
-        keys = post.keys
-        row_lens = post.tail_row_lengths()
-        buf_lens = post.buf_row_lengths()
-        rbt = post.tail.row_blocks.astype(np.int64)
-        dcum = np.concatenate(
-            [[0], np.cumsum((post.tail.meta >> np.uint32(13))
-                            & np.uint32(1))]).astype(np.int64)
-        rbb = post.buf.row_blocks.astype(np.int64)
-        for g, (qh, qb) in enumerate(zip(q_hash_rows, q_bit_rows)):
-            h = np.asarray(qh, dtype=np.uint32)
-            pos = np.searchsorted(keys, h)
-            ok = pos < len(keys)
-            hit = np.zeros(len(h), dtype=bool)
-            hit[ok] = keys[pos[ok]] == h[ok]
-            r = pos[hit]
-            per[g] += int(row_lens[r].sum())
-            tb += int((rbt[r + 1] - rbt[r]).sum())
-            td += int((dcum[rbt[r + 1]] - dcum[rbt[r]]).sum())
-            qb = np.asarray(qb, dtype=np.int64)
-            qb = qb[qb < post.buf.num_rows]
-            per[g] += int(buf_lens[qb].sum())
-            bb += int((rbb[qb + 1] - rbb[qb]).sum())
+    with stage("planner.probe", queries=len(q_hash_rows),
+               shards=len(posts)) as span:
+        for post in posts:
+            keys = post.keys
+            row_lens = post.tail_row_lengths()
+            buf_lens = post.buf_row_lengths()
+            rbt = post.tail.row_blocks.astype(np.int64)
+            dcum = np.concatenate(
+                [[0], np.cumsum((post.tail.meta >> np.uint32(13))
+                                & np.uint32(1))]).astype(np.int64)
+            rbb = post.buf.row_blocks.astype(np.int64)
+            for g, (qh, qb) in enumerate(zip(q_hash_rows, q_bit_rows)):
+                h = np.asarray(qh, dtype=np.uint32)
+                pos = np.searchsorted(keys, h)
+                ok = pos < len(keys)
+                hit = np.zeros(len(h), dtype=bool)
+                hit[ok] = keys[pos[ok]] == h[ok]
+                r = pos[hit]
+                per[g] += int(row_lens[r].sum())
+                tb += int((rbt[r + 1] - rbt[r]).sum())
+                td += int((dcum[rbt[r + 1]] - dcum[rbt[r]]).sum())
+                qb = np.asarray(qb, dtype=np.int64)
+                qb = qb[qb < post.buf.num_rows]
+                per[g] += int(buf_lens[qb].sum())
+                bb += int((rbb[qb + 1] - rbb[qb]).sum())
+        span.set(hits=int(per.sum()), tail_blocks=tb, buf_blocks=bb)
     return per, tb, td, bb
 
 
@@ -240,18 +244,25 @@ def pruned_batch(
     gq = len(q_hash_rows)
     thr = np.broadcast_to(np.asarray(thresholds, np.float64), (gq,))
     gen = merged_candidates(posts, row_offsets)
-    cands = [
-        gen(qh, qb, float(t), int(qs))
-        for qh, qb, t, qs in zip(q_hash_rows, q_bit_rows, thr, q_sizes)
-    ]
-    lens = [len(c.rec_ids) for c in cands]
+    with stage("planner.candidates", queries=gq) as span:
+        cands = [
+            gen(qh, qb, float(t), int(qs))
+            for qh, qb, t, qs in zip(q_hash_rows, q_bit_rows, thr, q_sizes)
+        ]
+        lens = [len(c.rec_ids) for c in cands]
+        span.set(candidates=int(sum(lens)),
+                 blocks=sum(c.blocks for c in cands),
+                 skipped_blocks=sum(c.skipped_blocks for c in cands))
     if sum(lens) == 0:
         return [np.zeros(0, dtype=np.int64) for _ in range(gq)], cands
 
     cand_rec = np.concatenate(
         [c.rec_ids for c in cands]).astype(np.int32)
     cand_q = np.repeat(np.arange(gq, dtype=np.int32), lens)
-    scores = np.asarray(score_fn(cand_rec, cand_q), dtype=np.float32)
+    with stage("planner.score", candidates=len(cand_rec)):
+        # np.asarray forces any device result to host — the span closes
+        # only after the scores actually exist.
+        scores = np.asarray(score_fn(cand_rec, cand_q), dtype=np.float32)
 
     out = []
     pos = 0

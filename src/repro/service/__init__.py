@@ -8,7 +8,8 @@ in front of the sharded GB-KMV index.
     with ServiceHandle(app, port=8080):
         ...                      # /ingest /query /topk /healthz /metrics
 
-See docs/SERVING.md for the endpoint and metrics reference, and
+See docs/SERVING.md for the endpoint and metrics reference,
+docs/OBSERVABILITY.md for tracing/explain/profiling, and
 ``python -m repro.service.launch --help`` for the CLI entry point.
 """
 
@@ -16,6 +17,7 @@ from repro.service.app import (  # noqa: F401
     ServiceApp, ServiceHandle, make_http_server)
 from repro.service.client import ServiceClient, ServiceError  # noqa: F401
 from repro.service.metrics import Metrics, parse_prometheus  # noqa: F401
-from repro.service.middleware import AuthToken, TokenBucket  # noqa: F401
+from repro.service.middleware import (  # noqa: F401
+    AuthToken, TenantBuckets, TokenBucket, tenant_id)
 from repro.service.server import (  # noqa: F401
     AsyncSketchServer, Overloaded, Pending)

@@ -2,19 +2,28 @@
 
 Endpoints (JSON in/out unless noted):
 
-    POST /query    {"q": [ids], "threshold": 0.5, "deadline_ms"?: int}
-                   → {"rid", "hits": [...], "expired": bool}
+    POST /query    {"q": [ids], "threshold": 0.5, "deadline_ms"?: int,
+                    "explain"?: bool}
+                   → {"rid", "hits": [...], "expired": bool, "explain"?}
     POST /topk     {"q": [ids], "k": 10, "deadline_ms"?: int}
                    → {"rid", "ids": [...], "scores": [...]}
     POST /ingest   NDJSON stream (one JSON id-array per line) or
                    {"records": [[...], ...]} → {"ingested", "chunks"}
+    POST /debug/explain  same body as /query with explain forced on
+    GET  /debug/traces   → Chrome trace-event JSON of recent requests
+                           (load in chrome://tracing or ui.perfetto.dev)
+    GET  /debug/slow     → the slow-query log (threshold-configurable)
     GET  /healthz  → {"status": "ok", "records", "inflight"}   (open)
     GET  /metrics  → Prometheus text format                    (open)
 
-Middleware runs before admission: bearer-token auth (401) and a
-token-bucket rate limit (429 + Retry-After). A full admission queue also
+Middleware runs before admission: bearer-token auth (401), a global
+token-bucket rate limit, and a per-tenant (per-auth-token) bucket —
+both 429 + Retry-After, tenant rejections counted in
+``service_ratelimited_total{tenant}``. A full admission queue also
 answers 429 with a Retry-After derived from measured flush latency — the
-load-shed half of graceful degradation.
+load-shed half of graceful degradation. ``/debug/*`` endpoints sit
+behind auth but outside the rate limits (introspection must work while
+the service sheds).
 
 The `/ingest` endpoint **streams**: NDJSON lines are parsed incrementally
 and handed to the flush loop in chunks of ``ingest_chunk`` records, so a
@@ -33,7 +42,8 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 import numpy as np
 
 from repro.service.metrics import Metrics
-from repro.service.middleware import AuthToken, TokenBucket
+from repro.service.middleware import (AuthToken, TenantBuckets, TokenBucket,
+                                      tenant_id)
 from repro.service.server import AsyncSketchServer, Overloaded
 
 
@@ -161,11 +171,15 @@ class ServiceApp:
     def __init__(self, server: AsyncSketchServer, *,
                  auth_token: str | None = None,
                  rate_limit: float | None = None, burst: int | None = None,
+                 tenant_rate_limit: float | None = None,
+                 tenant_burst: int | None = None,
                  ingest_chunk: int = 256, result_timeout: float = 60.0,
                  clock=time.monotonic):
         self.server = server
         self.auth = AuthToken(auth_token)
         self.bucket = TokenBucket(rate_limit, burst, clock=clock)
+        self.tenant_buckets = TenantBuckets(tenant_rate_limit, tenant_burst,
+                                            clock=clock)
         self.ingest_chunk = int(ingest_chunk)
         self.result_timeout = float(result_timeout)
         self.clock = clock
@@ -204,6 +218,18 @@ class ServiceApp:
         m.set_gauge("service_mean_batch_occupancy",
                     lambda: stats.mean_batch,
                     help="Mean requests per flush")
+        m.set_counter_fn("service_slow_queries_total",
+                         lambda: srv.slow_queries,
+                         help="Requests slower end-to-end than the "
+                              "slow-query threshold")
+        m.set_gauge("service_cost_model_drift",
+                    lambda: srv.cost_drift.drift,
+                    help="Predicted/measured seconds ratio for planned "
+                         "flushes (1.0 = calibrated; 0 until measurable)")
+        if srv.profiler is not None:
+            m.register_histogram_provider(
+                "service_stage_latency_seconds", srv.profiler.histograms,
+                help="Host-side stage latency from the flush-loop profiler")
         # Re-resolve the arena per scrape: ingest swaps the host index
         # (and its arena) underneath the ShardedIndex.
         def _sketch_b():
@@ -273,7 +299,13 @@ class ServiceApp:
         if endpoint == "/metrics":
             return Response(200, self.metrics.render(),
                             content_type="text/plain; version=0.0.4")
-        if endpoint not in ("/query", "/topk", "/ingest"):
+        if endpoint in ("/debug/traces", "/debug/slow"):
+            if not self.auth.allows(headers):
+                return _json_error(401, "missing or invalid auth token")
+            if method != "GET":
+                return _json_error(405, f"{endpoint} is GET-only")
+            return self._debug(endpoint)
+        if endpoint not in ("/query", "/topk", "/ingest", "/debug/explain"):
             return _json_error(404, f"no route {endpoint!r}")
         if method != "POST":
             return _json_error(405, f"{endpoint} is POST-only")
@@ -283,10 +315,22 @@ class ServiceApp:
             ra = self.bucket.retry_after()
             return _json_error(429, "rate limit exceeded",
                                **{"Retry-After": f"{ra:.3f}"})
+        tid = tenant_id(headers)
+        if not self.tenant_buckets.allow(tid):
+            self.metrics.inc(
+                "service_ratelimited_total", {"tenant": tid},
+                help="Per-tenant rate-limit rejections")
+            ra = self.tenant_buckets.retry_after(tid)
+            return _json_error(429, "tenant rate limit exceeded",
+                               **{"Retry-After": f"{ra:.3f}"})
         try:
             if endpoint == "/ingest":
                 return self._ingest(headers, body)
             payload = json.loads(b"".join(body) or b"{}")
+            if endpoint == "/debug/explain":
+                payload = dict(payload)
+                payload["explain"] = True
+                return self._query(payload)
             if endpoint == "/query":
                 return self._query(payload)
             return self._topk(payload)
@@ -301,15 +345,30 @@ class ServiceApp:
         ms = body.get("deadline_ms")
         return None if ms is None else float(ms) / 1e3
 
+    def _debug(self, endpoint: str) -> Response:
+        srv = self.server
+        if endpoint == "/debug/traces":
+            if srv.tracer is None:
+                return Response(200, {"traceEvents": [],
+                                      "displayTimeUnit": "ms"})
+            return Response(200, srv.tracer.chrome_trace())
+        return Response(200, {"threshold_s": srv.slow_threshold,
+                              "count": srv.slow_queries,
+                              "recent": list(srv.slow_log)})
+
     def _query(self, body) -> Response:
+        explain = bool(body.get("explain", False))
         p = self.server.submit_query(
             np.asarray(body["q"], np.int64),
             threshold=float(body.get("threshold", 0.5)),
-            deadline=self._deadline_s(body))
+            deadline=self._deadline_s(body), explain=explain)
         res = self.server.result(p, timeout=self.result_timeout)
-        return Response(200, {"rid": p.rid,
-                              "hits": np.asarray(res["hits"]).tolist(),
-                              "expired": p.expired})
+        out = {"rid": p.rid,
+               "hits": np.asarray(res["hits"]).tolist(),
+               "expired": p.expired}
+        if explain:
+            out["explain"] = res.get("explain")
+        return Response(200, out)
 
     def _topk(self, body) -> Response:
         p = self.server.submit_topk(

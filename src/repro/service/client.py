@@ -94,6 +94,24 @@ class ServiceClient:
         return np.asarray(self._call("POST", "/query", payload)["hits"],
                           np.int64)
 
+    def query_explain(self, q_ids, threshold: float = 0.5
+                      ) -> tuple[np.ndarray, dict]:
+        """Like :meth:`query` but also returns the per-query plan explain
+        (EXPLAIN ANALYZE: chosen path, predicted vs measured cost, block
+        and candidate accounting — see docs/OBSERVABILITY.md)."""
+        d = self._call("POST", "/query",
+                       {"q": np.asarray(q_ids).tolist(),
+                        "threshold": threshold, "explain": True})
+        return np.asarray(d["hits"], np.int64), d["explain"]
+
+    def debug_traces(self) -> dict:
+        """Chrome trace-event JSON of the server's recent request traces."""
+        return self._call("GET", "/debug/traces")
+
+    def debug_slow(self) -> dict:
+        """The server's slow-query log."""
+        return self._call("GET", "/debug/slow")
+
     def topk(self, q_ids, k: int = 10) -> tuple[np.ndarray, np.ndarray]:
         d = self._call("POST", "/topk",
                        {"q": np.asarray(q_ids).tolist(), "k": k})

@@ -21,6 +21,7 @@ from repro import api
 from repro.launch.mesh import make_mesh
 from repro.data import datasets
 from repro.data.synth import make_query_workload
+from repro.obs import Tracer
 from repro.sketchindex import ShardedIndex
 from repro.service import (
     AsyncSketchServer, ServiceApp, ServiceClient, ServiceHandle)
@@ -37,8 +38,20 @@ def add_service_args(ap: argparse.ArgumentParser):
                     help="token-bucket rate limit, requests/s (default: off)")
     ap.add_argument("--burst", type=int, default=None,
                     help="token-bucket burst size (default: ~1s of rate)")
+    ap.add_argument("--tenant-rate-limit", type=float, default=None,
+                    help="per-tenant (per-auth-token) bucket rate, "
+                         "requests/s (default: off)")
+    ap.add_argument("--tenant-burst", type=int, default=None,
+                    help="per-tenant bucket burst size")
     ap.add_argument("--auth-token", default=None,
                     help="require this bearer token on query/topk/ingest")
+    ap.add_argument("--trace-capacity", type=int, default=0,
+                    help="keep the last N request traces for /debug/traces "
+                         "(0 = tracing off)")
+    ap.add_argument("--slow-query-ms", type=float, default=1000.0,
+                    help="slow-query log threshold; <= 0 disables the log")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="disable the per-stage latency profiler")
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="micro-batch deadline (flush age bound)")
@@ -62,13 +75,20 @@ def build_service(args) -> ServiceApp:
     sharded = ShardedIndex(index, mesh, backend=args.backend)
     print(f"[service] {args.dataset}: m={len(recs)} "
           f"index={index.nbytes()/1e6:.1f}MB built in {time.time()-t0:.2f}s")
+    tracer = (Tracer(capacity=args.trace_capacity)
+              if args.trace_capacity > 0 else None)
     server = AsyncSketchServer(
         sharded, max_batch=args.max_batch,
         max_wait=args.max_wait_ms / 1e3,
         max_inflight=args.max_inflight,
-        default_deadline=args.deadline_ms / 1e3, plan=args.plan)
+        default_deadline=args.deadline_ms / 1e3, plan=args.plan,
+        tracer=tracer, profile=not args.no_profile,
+        slow_threshold=(args.slow_query_ms / 1e3
+                        if args.slow_query_ms > 0 else None))
     return ServiceApp(server, auth_token=args.auth_token,
                       rate_limit=args.rate_limit, burst=args.burst,
+                      tenant_rate_limit=args.tenant_rate_limit,
+                      tenant_burst=args.tenant_burst,
                       ingest_chunk=args.ingest_chunk)
 
 

@@ -26,6 +26,10 @@ def _labels_str(labels: dict | None) -> str:
     return ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
 
 
+# Reserved series key marking a render-time histogram-family provider.
+_PROVIDER_KEY = "\x00provider"
+
+
 class Metrics:
     def __init__(self):
         self._lock = threading.Lock()
@@ -82,6 +86,15 @@ class Metrics:
         with self._lock:
             self._family(name, "histogram", help)[_labels_str(labels)] = hist
 
+    def register_histogram_provider(self, name: str,
+                                    fn: Callable[[], dict], help: str = ""
+                                    ) -> None:
+        """Expose a *family* of histograms whose label sets appear at
+        runtime (e.g. per-stage profiler latencies): ``fn()`` returns
+        ``{labels_dict_or_str: Histogram}`` and is sampled at render."""
+        with self._lock:
+            self._family(name, "histogram", help)[_PROVIDER_KEY] = fn
+
     # -- read side ---------------------------------------------------------
 
     def get_counter(self, name: str, labels: dict | None = None) -> float:
@@ -105,6 +118,12 @@ class Metrics:
                 lines.append(f"# TYPE {name} {typ}")
                 for key in sorted(series):
                     v = series[key]
+                    if key == _PROVIDER_KEY:
+                        fams = v()
+                        for lk in sorted(fams, key=str):
+                            ls = lk if isinstance(lk, str) else _labels_str(lk)
+                            lines.extend(fams[lk].to_prometheus(name, ls))
+                        continue
                     if isinstance(v, Histogram):
                         lines.extend(v.to_prometheus(name, key))
                         continue

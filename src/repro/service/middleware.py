@@ -1,13 +1,16 @@
 """Admission middleware for the HTTP service: auth token + token-bucket
-rate limiting. Both are hooks the app applies before a request touches
-the flush loop — stdlib only, injectable clocks, trivially composable.
+rate limiting (global and per-tenant). All are hooks the app applies
+before a request touches the flush loop — stdlib only, injectable
+clocks, trivially composable.
 """
 
 from __future__ import annotations
 
+import hashlib
 import hmac
 import threading
 import time
+from collections import OrderedDict
 from typing import Callable
 
 
@@ -71,3 +74,61 @@ class TokenBucket:
         with self._lock:
             deficit = max(0.0, n - self.tokens)
             return deficit / self.rate if self.rate > 0 else 1.0
+
+
+def tenant_id(headers) -> str:
+    """Stable, non-reversible tenant label from the request's auth
+    credential: a short sha256 prefix of the presented token (never the
+    raw secret — this string lands in Prometheus labels and logs), or
+    ``"anon"`` for unauthenticated requests."""
+    got = headers.get("X-Auth-Token", "")
+    if not got:
+        auth = headers.get("Authorization", "")
+        if auth.startswith("Bearer "):
+            got = auth[len("Bearer "):]
+    if not got:
+        return "anon"
+    return hashlib.sha256(got.encode()).hexdigest()[:12]
+
+
+class TenantBuckets:
+    """Per-tenant token buckets sharing one (rate, burst) policy.
+
+    Buckets materialize on a tenant's first request; ``max_tenants``
+    bounds memory by evicting the least-recently-seen bucket (an evicted
+    tenant simply restarts with a full burst — the failure mode is
+    briefly *under*-limiting, never a leak). ``rate=None`` disables
+    per-tenant limiting entirely.
+    """
+
+    def __init__(self, rate: float | None, burst: int | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 max_tenants: int = 1024):
+        self.rate = rate
+        self.burst = burst
+        self.clock = clock
+        self.max_tenants = int(max_tenants)
+        self._buckets: OrderedDict[str, TokenBucket] = OrderedDict()
+        self._lock = threading.Lock()
+
+    def _bucket(self, tenant: str) -> TokenBucket:
+        with self._lock:
+            b = self._buckets.get(tenant)
+            if b is None:
+                b = self._buckets[tenant] = TokenBucket(
+                    self.rate, self.burst, clock=self.clock)
+                while len(self._buckets) > self.max_tenants:
+                    self._buckets.popitem(last=False)
+            else:
+                self._buckets.move_to_end(tenant)
+            return b
+
+    def allow(self, tenant: str, n: float = 1.0) -> bool:
+        if self.rate is None:
+            return True
+        return self._bucket(tenant).allow(n)
+
+    def retry_after(self, tenant: str, n: float = 1.0) -> float:
+        if self.rate is None:
+            return 0.0
+        return self._bucket(tenant).retry_after(n)

@@ -63,6 +63,8 @@ class Pending:
     result: dict | None = None
     error: Exception | None = None
     expired: bool = False
+    explain: bool = False          # attach a plan explain to the result
+    trace: object | None = None    # obs.Trace when tracing is enabled
 
     def past_deadline(self, now: float) -> bool:
         return self.deadline is not None and now >= self.deadline
@@ -82,7 +84,11 @@ class AsyncSketchServer:
     def __init__(self, index, *, max_batch: int = 16, max_wait: float = 0.01,
                  max_inflight: int = 256, default_deadline: float | None = 0.5,
                  plan: str = "auto",
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer=None, profile: bool = True,
+                 slow_threshold: float | None = 1.0,
+                 slow_log_size: int = 128):
+        from repro.obs import CostDrift, StageProfiler
         from repro.planner import normalize_plan
 
         self.index = index
@@ -96,6 +102,17 @@ class AsyncSketchServer:
         self.shed = 0                  # admissions refused (429s)
         self.expired_served = 0        # requests answered past deadline
         self.records_ingested = 0
+        # Observability. ``tracer=None`` (the default) records no traces
+        # and allocates nothing per request; the profiler's stage
+        # histograms stay on (a few clock reads per *flush*, amortized
+        # over the batch). ``slow_threshold`` seconds of total latency
+        # (admission → answered) lands a request in the bounded slow log.
+        self.tracer = tracer
+        self.profiler = StageProfiler() if profile else None
+        self.cost_drift = CostDrift()
+        self.slow_threshold = slow_threshold
+        self.slow_queries = 0
+        self.slow_log: deque[dict] = deque(maxlen=int(slow_log_size))
         self._queue: deque[Pending] = deque()
         self._cv = threading.Condition()
         self._next_rid = 0
@@ -129,6 +146,9 @@ class AsyncSketchServer:
             self._next_rid += 1
             self._queue.append(p)
             self._cv.notify()
+        if self.tracer is not None:
+            # Begin after admission: shed requests never allocate a trace.
+            p.trace = self.tracer.begin(p.kind, rid=p.rid)
         return p
 
     def _deadline(self, arrival: float, deadline: float | None):
@@ -136,20 +156,22 @@ class AsyncSketchServer:
         return None if budget is None else arrival + float(budget)
 
     def submit_query(self, q_ids, threshold: float = 0.5,
-                     deadline: float | None = None) -> Pending:
+                     deadline: float | None = None,
+                     explain: bool = False) -> Pending:
         now = self.clock()
         return self._admit(Pending(
             kind="query", q_ids=np.asarray(q_ids), arrival=now,
             threshold=float(threshold),
-            deadline=self._deadline(now, deadline)))
+            deadline=self._deadline(now, deadline), explain=bool(explain)))
 
     def submit_topk(self, q_ids, k: int = 10,
-                    deadline: float | None = None) -> Pending:
+                    deadline: float | None = None,
+                    explain: bool = False) -> Pending:
         now = self.clock()
         return self._admit(Pending(
             kind="topk", q_ids=np.asarray(q_ids), arrival=now,
             threshold=math.inf, k=int(k),
-            deadline=self._deadline(now, deadline)))
+            deadline=self._deadline(now, deadline), explain=bool(explain)))
 
     def submit_ingest(self, records) -> Pending:
         now = self.clock()
@@ -231,10 +253,54 @@ class AsyncSketchServer:
                 p.error = err
             p.done.set()
 
+    def _record_drift(self, measured: float) -> None:
+        """Fold one serve flush into the cost-model drift gauge: the
+        planner's chosen-path estimate vs the flush's measured seconds."""
+        decision = getattr(self.index, "last_plan", None)
+        if decision is None:
+            return
+        predicted = (decision.est_pruned if decision.path == "pruned"
+                     else decision.est_dense)
+        self.cost_drift.record(float(predicted), measured)
+
+    def _finish_request(self, p: Pending, why: str, plan: str,
+                        flush_start: float, t0: float, t1: float,
+                        batch_size: int) -> None:
+        """Per-request observability at completion: trace spans, per-kind
+        latency histogram, and the slow-query log."""
+        total = t1 - p.arrival
+        if self.profiler is not None:
+            self.profiler.observe(f"request.{p.kind}", max(total, 0.0))
+        if p.trace is not None:
+            p.trace.add_span("queue_wait", p.arrival, flush_start)
+            p.trace.add_span("execute", t0, t1, plan=plan, reason=why,
+                             batch=batch_size)
+            p.trace.end(kind=p.kind, expired=p.expired)
+        if self.slow_threshold is not None and total >= self.slow_threshold:
+            self.slow_queries += 1
+            self.slow_log.append({
+                "rid": p.rid, "kind": p.kind,
+                "latency_s": round(total, 6),
+                "queue_wait_s": round(flush_start - p.arrival, 6),
+                "plan": plan, "reason": why, "expired": p.expired,
+                "batch": batch_size,
+                "n_ids": int(len(p.q_ids)) if p.q_ids is not None else 0,
+            })
+
     def _execute_serve(self, batch: list[Pending], reason: str):
+        from repro import obs
+
         now = self.clock()
         fresh = [p for p in batch if not p.past_deadline(now)]
         late = [p for p in batch if p.past_deadline(now)]
+        ftrace = None
+        if self.tracer is not None:
+            ftrace = self.tracer.begin("flush", reason=reason,
+                                       batch=len(batch),
+                                       rids=[p.rid for p in batch])
+            # Batch assembly: oldest admission → this flush starting.
+            ftrace.add_span("assemble", min(p.arrival for p in batch), now,
+                            batch=len(batch))
         try:
             # Deadline-expired requests take the dense fallback: one
             # predictable sweep, no postings-probe variance, answered
@@ -247,8 +313,20 @@ class AsyncSketchServer:
                 k = max((p.k for p in sub), default=0)
                 self.stats.record_batch(
                     [now - p.arrival for p in sub], why)
-                out = execute_batch(self.index, sub, k, plan,
-                                    stats=self.stats, clock=self.clock)
+                explain = any(p.explain for p in sub)
+                t0 = self.clock()
+                with obs.attach(ftrace, self.profiler):
+                    with obs.stage(
+                            "flush.execute", reason=why, plan=plan,
+                            batch=len(sub),
+                            queries=sum(p.kind == "query" for p in sub),
+                            topks=sum(p.kind == "topk" for p in sub)):
+                        out = execute_batch(self.index, sub, k, plan,
+                                            stats=self.stats,
+                                            clock=self.clock,
+                                            explain=explain)
+                t1 = self.clock()
+                self._record_drift(t1 - t0)
                 for p in sub:
                     res = out[p.rid]
                     if p.kind == "topk":
@@ -257,12 +335,18 @@ class AsyncSketchServer:
                             "topk_scores": res["topk_scores"][: p.k]}
                     else:
                         p.result = {"hits": res["hits"]}
+                    if p.explain and "explain" in res:
+                        p.result["explain"] = res["explain"]
                     p.expired = why == "expired"
+                    self._finish_request(p, why, plan, now, t0, t1, len(sub))
                 if why == "expired":
                     self.expired_served += len(sub)
             self._complete(batch)
         except Exception as e:                     # pragma: no cover - guard
             self._complete(batch, err=e)
+        finally:
+            if ftrace is not None:
+                ftrace.end()
 
     def _execute_ingest(self, batch: list[Pending]):
         now = self.clock()
@@ -274,9 +358,18 @@ class AsyncSketchServer:
                 # Host insert latency stays out of flush_latency_hist —
                 # that histogram is the device-flush basis for the 429
                 # Retry-After hint.
-                self.stats.ingest_latency_hist.observe(self.clock() - t0)
+                t1 = self.clock()
+                self.stats.ingest_latency_hist.observe(t1 - t0)
                 self.records_ingested += len(p.records)
                 p.result = {"ingested": len(p.records)}
+                if self.profiler is not None:
+                    self.profiler.observe("request.ingest",
+                                          max(t1 - p.arrival, 0.0))
+                if p.trace is not None:
+                    p.trace.add_span("queue_wait", p.arrival, now)
+                    p.trace.add_span("insert", t0, t1,
+                                     records=len(p.records))
+                    p.trace.end(kind="ingest")
             except Exception as e:
                 p.error = e
             p.done.set()

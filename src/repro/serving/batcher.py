@@ -96,15 +96,20 @@ class BatchStats:
 
 def execute_batch(index, batch: list[Request], topk: int, plan: str,
                   stats: BatchStats | None = None,
-                  clock: Callable[[], float] = time.monotonic) -> dict:
+                  clock: Callable[[], float] = time.monotonic,
+                  explain: bool = False) -> dict:
     """One device execution for a flushed batch: ``index.serve_batch``
     over the batch's queries/thresholds, flush latency recorded into
     ``stats``. Returns {rid: result dict} — shared by the synchronous
-    :class:`SketchServer` and the service layer's async flush loop."""
+    :class:`SketchServer` and the service layer's async flush loop.
+    ``explain=True`` asks the index for per-query plan explains (only
+    passed down when requested, so indexes without the kwarg still
+    work)."""
     t0 = clock()
+    kw = {"explain": True} if explain else {}
     results = index.serve_batch(
         [r.q_ids for r in batch],
-        np.asarray([r.threshold for r in batch]), topk, plan=plan)
+        np.asarray([r.threshold for r in batch]), topk, plan=plan, **kw)
     if stats is not None:
         stats.flush_latency_hist.observe(clock() - t0)
     return {req.rid: res for req, res in zip(batch, results)}

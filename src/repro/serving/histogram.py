@@ -83,14 +83,25 @@ class Histogram:
     def quantile(self, q: float) -> float:
         """Estimated q-quantile (0..1) by linear interpolation inside the
         owning bucket (lower edge 0 for the first, last finite bound for
-        the +Inf bucket — the conservative Prometheus convention)."""
+        the +Inf bucket — the conservative Prometheus convention).
+
+        Edge cases: an empty histogram returns 0.0 (there is no data to
+        estimate from); ``q=0`` returns the lower edge of the first
+        *occupied* bucket (not bucket 0, which may be empty); ``q=1``
+        returns the upper edge of the last occupied bucket. A single
+        observation interpolates inside its own bucket for any q."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile q must be in [0, 1], got {q}")
         counts, _ = self.snapshot()
         n = int(counts.sum())
         if n == 0:
             return 0.0
         rank = q * n
         cum = np.cumsum(counts)
-        i = int(np.searchsorted(cum, rank, side="left"))
+        # side="right" when rank == 0: skip leading empty buckets (cum==0)
+        # so q=0 lands in the first occupied bucket, not bucket 0.
+        side = "right" if rank <= 0 else "left"
+        i = int(np.searchsorted(cum, rank, side=side))
         i = min(i, len(counts) - 1)
         if i >= len(self.bounds):          # overflow bucket: no upper edge
             return float(self.bounds[-1])

@@ -31,6 +31,7 @@ from repro import compat
 from repro.core.estimators import buffer_intersection, gkmv_pair_estimate
 from repro.core.hashing import PAD
 from repro.core.sketches import PackedSketches
+from repro.obs.trace import stage as obs_stage
 from repro.parallel.sharding import logical_to_spec
 
 
@@ -232,6 +233,11 @@ class ShardedIndex:
             index, "budget", None)
         self.didx = to_device_index(core, mesh)
         self.last_plan = None
+        # Explain/observability bookkeeping from the most recent planned
+        # batch: per-query CandidateSets (pruned path only) and the
+        # planner inputs needed for upper-bound stats.
+        self.last_candidates = None
+        self._last_plan_inputs = None
 
     @property
     def num_records(self) -> int:
@@ -266,16 +272,25 @@ class ShardedIndex:
         plan = planner.normalize_plan(plan)
         thr = np.asarray(thresholds, np.float64)
         t_min = float(thr.min()) if thr.size else 0.0
+        self.last_candidates = None
+        self._last_plan_inputs = None
         if plan == "dense" or t_min <= 0.0 or not queries:
+            # A decision was still made — record it so explain and the
+            # drift gauge always have something to read.
+            self.last_plan = planner.QueryPlan(
+                "dense", np.nan, np.nan, 0,
+                "forced" if plan == "dense" else "threshold <= 0")
             return None, None
         qp, hash_rows, bit_rows, sizes = gbkmv_plan_queries(
             self.host, queries)
-        posts, offs = self._shard_postings()
+        with obs_stage("shard.postings", shards=self.mesh.devices.size):
+            posts, offs = self._shard_postings()
         s: PackedSketches = self.host.sketches
         decision = planner.choose_plan(
             posts, hash_rows, bit_rows, t_min,
             s.num_records, s.capacity, plan=plan)
         self.last_plan = decision
+        self._last_plan_inputs = (hash_rows, sizes, posts)
         if decision.path == "dense":
             return None, qp
 
@@ -285,9 +300,10 @@ class ShardedIndex:
             return gather_score.score_pairs(
                 s, qp, cand_rec, cand_q, backend=self.backend)
 
-        ids, _ = planner.pruned_batch(
+        ids, cands = planner.pruned_batch(
             posts, hash_rows, bit_rows, sizes, thresholds, score_fn,
             row_offsets=offs)
+        self.last_candidates = cands
         return ids, qp
 
     # -- scoring --
@@ -297,7 +313,25 @@ class ShardedIndex:
         s = score_batch(self.didx, qp, backend=self.backend)
         return np.asarray(s)[: self.num_records]
 
-    def serve_batch(self, queries, thresholds, k: int, plan: str = "auto"):
+    def _serve_explains(self, hits, thr, t0) -> list[dict]:
+        """Per-query explain dicts for the batch just served, built from
+        the planner bookkeeping ``_pruned_batch`` left behind."""
+        import time
+
+        from repro import obs
+
+        hash_rows, sizes, posts = self._last_plan_inputs or (None, None, None)
+        ex = obs.build_explain(
+            self.last_plan, engine=self.engine, backend=self.backend,
+            n_queries=len(hits), hits=hits, cands=self.last_candidates,
+            hash_rows=hash_rows, sizes=sizes, posts=posts,
+            measured_seconds=time.perf_counter() - t0)
+        for g, e in enumerate(ex):
+            e["threshold"] = float(thr[g])
+        return ex
+
+    def serve_batch(self, queries, thresholds, k: int, plan: str = "auto",
+                    explain: bool = False):
         """One sweep answering threshold + top-k for a whole batch.
 
         ``thresholds`` is scalar or per-query. Returns one dict per query:
@@ -306,10 +340,14 @@ class ShardedIndex:
         forced "pruned" — top-k through the planner-aware upper-bound
         pruning as well. ``plan="auto"`` keeps top-k on the dense sweep
         (the batch amortizes it and the hit masks fall out of the same
-        scores), matching it bit for bit.
+        scores), matching it bit for bit. With ``explain=True`` each
+        dict gains an ``"explain"`` entry (:mod:`repro.obs.explain`).
         """
+        import time
+
         from repro.planner.prune import threshold_hits_packed
 
+        t0 = time.perf_counter()
         queries = [np.asarray(q) for q in queries]
         thr = np.broadcast_to(np.asarray(thresholds, np.float64),
                               (len(queries),))
@@ -319,29 +357,66 @@ class ShardedIndex:
             hits, qp = self._pruned_batch(queries, thr, plan)
             if hits is None:
                 if qp is None:
-                    qp = batch_queries(self.host, queries)
-                scores = score_batch(self.didx, qp, backend=self.backend)
-                hits = threshold_hits_packed(scores[: self.num_records], thr)
+                    with obs_stage("serve.sketch", queries=len(queries)):
+                        qp = batch_queries(self.host, queries)
+                with obs_stage("serve.score", queries=len(queries)) as span:
+                    scores = span.sync(score_batch(
+                        self.didx, qp, backend=self.backend))
+                with obs_stage("serve.hits"):
+                    hits = threshold_hits_packed(
+                        scores[: self.num_records], thr)
             if k <= 0:
-                return [{"hits": h, "topk_ids": empty_ids,
-                         "topk_scores": empty_scores} for h in hits]
+                out = [{"hits": h, "topk_ids": empty_ids,
+                        "topk_scores": empty_scores} for h in hits]
+                if explain:
+                    for res, e in zip(out, self._serve_explains(
+                            hits, thr, t0)):
+                        res["explain"] = e
+                return out
             # Reuse the batch's query pack: one sketching pass serves
             # both the threshold hits and every pruned top-k.
-            tops = self._pruned_topk_batch(queries, k, qp=qp)
-            return [{"hits": h, "topk_ids": t[0], "topk_scores": t[1]}
-                    for h, t in zip(hits, tops)]
+            ex = self._serve_explains(hits, thr, t0) if explain else None
+            with obs_stage("serve.topk", k=k):
+                tops = self._pruned_topk_batch(queries, k, qp=qp)
+            out = [{"hits": h, "topk_ids": t[0], "topk_scores": t[1]}
+                   for h, t in zip(hits, tops)]
+            if ex is not None:
+                for res, e in zip(out, ex):
+                    res["explain"] = e
+            return out
 
-        qp = batch_queries(self.host, queries)
-        scores = score_batch(self.didx, qp, backend=self.backend)
-        vals, ids = distributed_topk(scores, k, self.mesh)
-        jax.block_until_ready(vals)
-        hits = threshold_hits_packed(scores[: self.num_records], thr)
-        return [
+        # Dense sweep route (top-k batches on plan="auto"): the planner
+        # is never consulted, but a routing decision still happened —
+        # record it so explain/drift always have the current batch.
+        from repro import planner
+        from repro.core import cost_model
+
+        s = self.host.sketches
+        self.last_candidates = None
+        self._last_plan_inputs = None
+        self.last_plan = planner.QueryPlan(
+            "dense", cost_model.dense_sweep_cost(
+                s.num_records, s.capacity, len(queries)), np.nan, 0,
+            "topk batch: dense sweep amortized")
+        with obs_stage("serve.sketch", queries=len(queries)):
+            qp = batch_queries(self.host, queries)
+        with obs_stage("serve.score", queries=len(queries)):
+            scores = score_batch(self.didx, qp, backend=self.backend)
+        with obs_stage("serve.topk", k=k):
+            vals, ids = distributed_topk(scores, k, self.mesh)
+            jax.block_until_ready(vals)
+        with obs_stage("serve.hits"):
+            hits = threshold_hits_packed(scores[: self.num_records], thr)
+        out = [
             {"hits": hits[j],
              "topk_ids": np.asarray(ids)[j],
              "topk_scores": np.asarray(vals)[j]}
             for j in range(len(queries))
         ]
+        if explain:
+            for res, e in zip(out, self._serve_explains(hits, thr, t0)):
+                res["explain"] = e
+        return out
 
     # -- repro.api protocol --
     def query(self, q_ids, threshold: float, *, plan: str = "auto") -> np.ndarray:
