@@ -2,9 +2,13 @@
 
 QPS and candidate-set sizes at thresholds {0.5, 0.7, 0.9} on the Zipf
 workload (the Fig. 16 generator) — the perf trajectory for the
-candidate-pruning query planner. Parity between the two paths is
-asserted on every batch: a mismatch raises (and fails the CI smoke
-step), because the planner's whole contract is bit-identical results.
+candidate-pruning query planner — plus top-k rows at k ∈ {10, 100}
+(pruned fused-device/upper-bound path vs the dense full-sweep ranking,
+with per-stage splits and their own same-backend regression gate under
+``topk_rows_by_backend``). Parity between the two paths is asserted on
+every batch and every top-k query: a mismatch raises (and fails the CI
+smoke step), because the planner's whole contract is bit-identical
+results.
 
 ``run(quick, json_out=..., backend=..., baseline=..., calibrate=...)``:
 
@@ -42,6 +46,7 @@ from repro.planner import candidates_for
 from repro.planner.plan import probe_hits_per_query, unpack_query_rows
 
 THRESHOLDS = (0.5, 0.7, 0.9)
+TOPK_KS = (10, 100)
 BATCH = 16
 REGRESSION_TOLERANCE = 0.8        # cross-backend: ≥ 0.8 × baseline (raw)
 COMPRESSION_QPS_TOLERANCE = 0.9   # same-backend: ≥ 0.9 × baseline (scaled)
@@ -81,6 +86,33 @@ def _stage_splits(index, batches, threshold, plan) -> dict:
             for name, s in sorted(prof.snapshot().items())}
 
 
+def _time_topk(index, queries, k, plan, repeats: int = 3) -> float:
+    """Best-of-``repeats`` seconds for one top-k pass over the workload
+    (per-query calls — the api surface is single-query), after a warmup
+    pass for jit caches."""
+    for q in queries:
+        index.topk(q, k, plan=plan)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for q in queries:
+            index.topk(q, k, plan=plan)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _topk_stage_splits(index, queries, k) -> dict:
+    """Mean per-stage latency (ms) of the pruned top-k pass (untimed,
+    separate from the QPS measurement — same rationale as
+    :func:`_stage_splits`)."""
+    prof = StageProfiler()
+    with attach(None, prof):
+        for q in queries:
+            index.topk(q, k, plan="pruned")
+    return {name: round(s["mean_s"] * 1e3, 4)
+            for name, s in sorted(prof.snapshot().items())}
+
+
 def check_baseline(rows, baseline_path: str, backend: str) -> list[str]:
     """Compare pruned QPS per threshold against a committed artifact.
 
@@ -116,6 +148,39 @@ def check_baseline(rows, baseline_path: str, backend: str) -> list[str]:
                 f"t={r['threshold']}: pruned QPS {r['qps_pruned']:.1f} < "
                 f"floor {floor:.1f} (baseline {b['qps_pruned']:.1f} × "
                 f"scale {scale:.2f} × {tol})")
+    return failures
+
+
+def check_topk_baseline(topk_rows, baseline_path: str,
+                        backend: str) -> list[str]:
+    """Same-backend regression gate for the top-k rows, mirroring
+    :func:`check_baseline`: pruned top-k QPS per k vs the committed
+    ``topk_rows_by_backend``, dense-top-k-ratio scaled. Artifacts
+    written before the top-k rows existed simply have no baseline —
+    empty result, never a failure."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    by_backend = base.get("topk_rows_by_backend", {})
+    if backend in by_backend:
+        base_rows = {r["k"]: r for r in by_backend[backend]}
+        same = True
+    else:
+        base_rows = {r["k"]: r for r in base.get("topk_rows", [])}
+        same = backend == base.get("workload", {}).get("backend", "jnp")
+    failures = []
+    for r in topk_rows:
+        b = base_rows.get(r["k"])
+        if b is None:
+            continue
+        scale = (r["qps_dense_topk"] / max(b["qps_dense_topk"], 1e-9)
+                 if same else 1.0)
+        tol = COMPRESSION_QPS_TOLERANCE if same else REGRESSION_TOLERANCE
+        floor = tol * b["qps_pruned_topk"] * scale
+        if r["qps_pruned_topk"] < floor:
+            failures.append(
+                f"k={r['k']}: pruned top-k QPS {r['qps_pruned_topk']:.1f} "
+                f"< floor {floor:.1f} (baseline {b['qps_pruned_topk']:.1f} "
+                f"× scale {scale:.2f} × {tol})")
     return failures
 
 
@@ -188,7 +253,32 @@ def run(quick: bool = True, json_out: str | None = None,
             "parity": True,
         })
 
+    # Top-k trajectory: fused device lax.top_k (jnp/pallas) or the
+    # host upper-bound-pruned walk, vs the dense full-sweep ranking.
+    # Parity is exact — same (-score, id) order entry for entry.
+    topk_rows = []
+    for k in TOPK_KS:
+        for j, q in enumerate(queries):
+            di, ds = index.topk(q, k, plan="dense")
+            pi, ps = index.topk(q, k, plan="pruned")
+            if not (np.array_equal(di, pi) and np.array_equal(ds, ps)):
+                raise RuntimeError(
+                    f"top-k parity broken at k={k}, query {j}: "
+                    f"dense={list(zip(di.tolist(), ds.tolist()))} "
+                    f"pruned={list(zip(pi.tolist(), ps.tolist()))}")
+        dt_dense = _time_topk(index, queries, k, "dense")
+        dt_pruned = _time_topk(index, queries, k, "pruned")
+        topk_rows.append({
+            "k": k,
+            "qps_dense_topk": round(nq / dt_dense, 2),
+            "qps_pruned_topk": round(nq / dt_pruned, 2),
+            "speedup": round(dt_dense / dt_pruned, 3),
+            "stages_ms": _topk_stage_splits(index, queries, k),
+            "parity": True,
+        })
+
     write_csv("planner.csv", rows)
+    write_csv("planner_topk.csv", topk_rows)
     print(f"  postings: {post_b} B compressed vs {flat_b} B flat "
           f"({postings_info['compression_vs_flat']}×), "
           f"{postings_info['postings_ratio']}× sketch bytes")
@@ -201,18 +291,22 @@ def run(quick: bool = True, json_out: str | None = None,
             f"{post_b} B vs {sketch_b} B")
     if baseline and os.path.exists(baseline):
         failures += check_baseline(rows, baseline, backend)
+        failures += check_topk_baseline(topk_rows, baseline, backend)
 
     if json_out:
         # Carry other backends' committed rows forward so the artifact
         # keeps one same-backend baseline per CI matrix cell.
-        by_backend = {}
+        by_backend, topk_by_backend = {}, {}
         if os.path.exists(json_out):
             try:
                 with open(json_out) as f:
-                    by_backend = dict(json.load(f).get("rows_by_backend", {}))
+                    prev = json.load(f)
+                by_backend = dict(prev.get("rows_by_backend", {}))
+                topk_by_backend = dict(prev.get("topk_rows_by_backend", {}))
             except (json.JSONDecodeError, OSError):
-                by_backend = {}
+                by_backend, topk_by_backend = {}, {}
         by_backend[backend] = rows
+        topk_by_backend[backend] = topk_rows
         payload = {
             "suite": "planner",
             "profile": "quick" if quick else "full",
@@ -225,6 +319,8 @@ def run(quick: bool = True, json_out: str | None = None,
             "postings": postings_info,
             "rows": rows,
             "rows_by_backend": by_backend,
+            "topk_rows": topk_rows,
+            "topk_rows_by_backend": topk_by_backend,
         }
         if calibrate:
             from repro.core import cost_model

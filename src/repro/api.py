@@ -258,14 +258,25 @@ def _validate_postings_arg(postings: str) -> str:
 
 def _maybe_eager_postings(sketches, postings: str) -> None:
     """``postings="eager"``: encode the block-compressed postings from
-    the freshly packed columns at build time (device-built columns are
-    pinned to host once first). ``"lazy"`` (default) defers to the first
-    planned query — the seed-era behavior, and what the space-accuracy
-    benchmarks charge for."""
+    the freshly packed columns at build time. Device-built columns (jnp
+    arrays from the fused build) take the fused DEVICE encode — the
+    blocked tail store is bit-packed on the accelerator and its mirrors
+    adopted without a host round-trip, then the columns are pinned to
+    host once for the host-side consumers. ``"lazy"`` (default) defers
+    to the first planned query — the seed-era behavior, and what the
+    space-accuracy benchmarks charge for."""
     if _validate_postings_arg(postings) == "eager":
         arena = SketchArena.from_pack(sketches)
-        arena.ensure_host()
-        arena.postings()
+        if not isinstance(arena.values, np.ndarray):
+            from repro.planner.postings import build_postings_device
+
+            post, dpost = build_postings_device(arena)
+            arena.ensure_host()
+            arena.install_postings(post)
+            arena.adopt_device_postings(dpost)
+        else:
+            arena.ensure_host()
+            arena.postings()
 
 
 class _PlannedIndexMixin:
@@ -434,6 +445,14 @@ class _PlannedIndexMixin:
             self.last_plan = decision
             if decision.path == "dense":
                 return super().topk(q_ids, k)
+        if self._device_prunable and self.backend in ("jnp", "pallas"):
+            from repro.planner import device as planner_device
+
+            # Fully device-resident: fused probe→decode→score→lax.top_k,
+            # one readback of the [1, k] result pair.
+            ids, scores = planner_device.pruned_topk_device(
+                SketchArena.from_pack(s), qp, k, backend=self.backend)[0]
+            return ids, scores
         return planner.pruned_topk(
             self._postings(), hash_rows[0], bit_rows[0], int(sizes[0]), k,
             self._pair_score_fn(qp), s.num_records)

@@ -57,14 +57,19 @@ class DevicePostings:
     keys: object          # u32[U]
     row_blocks: object    # i32[U+1]  block range per key
     first: object         # i32[NB]   min record id per block
+    last: object          # i32[NB]   max record id per block
     meta: object          # u32[NB]   count-1 | bitwidth<<8 | kind<<13
     off: object           # i32[NB+1] payload word offsets
     payload: object       # u32[P]    bitpacked block bodies
     num_records: int
+    # Static property of the STORE (not of any batch): whether any block
+    # is dense-bitmap encoded. The fused pipeline compiles its dense
+    # while_loop out entirely when False, so it's part of the jit key.
+    has_dense: bool = True
 
     def nbytes(self) -> int:
         return sum(int(np.asarray(a).nbytes) for a in (
-            self.keys, self.row_blocks, self.first, self.meta,
+            self.keys, self.row_blocks, self.first, self.last, self.meta,
             self.off, self.payload))
 
 
@@ -242,11 +247,20 @@ class SketchArena(PackedSketches):
                 keys=jnp.asarray(post.keys),
                 row_blocks=jnp.asarray(t.row_blocks, jnp.int32),
                 first=jnp.asarray(t.first, jnp.int32),
+                last=jnp.asarray(t.last, jnp.int32),
                 meta=jnp.asarray(t.meta, jnp.uint32),
                 off=jnp.asarray(t.off, jnp.int32),
                 payload=jnp.asarray(t.payload, jnp.uint32),
-                num_records=post.num_records)
+                num_records=post.num_records,
+                has_dense=bool(
+                    np.any((np.asarray(t.meta) >> 13) & 1)))
         return self._dev_post
+
+    def adopt_device_postings(self, dev: DevicePostings) -> None:
+        """Install device-built postings mirrors directly (the fused
+        device encode produces them without a host round-trip); the host
+        :class:`PostingsIndex` is installed separately by the caller."""
+        self._dev_post = dev
 
     # -- space accounting --------------------------------------------------
 

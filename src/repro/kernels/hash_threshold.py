@@ -235,3 +235,154 @@ def fused_build_columns(batch, tail_mask, budget: int, *, seed: int = 0,
     pack = PackedSketches(values=values, lengths=lengths, thresh=thresh,
                           buf=buf, sizes=jnp.asarray(sizes, jnp.int32))
     return pack, np.uint32(tau)
+
+
+# ---------------------------------------------------------------------------
+# Fused device-path POSTINGS encode (packed columns → blocked tail store)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m", "cap"))
+def _encode_tail_device(values, lengths, *, m: int, cap: int):
+    """Block-compress the tail postings ON DEVICE from packed columns.
+
+    The device twin of ``planner/postings.py::encode_store`` fed by
+    ``_row_pairs`` + ``_csr_from_pairs`` — same (hash asc, record asc)
+    sort, same 128-entry blocks, same delta-bitpack / dense-bitmap rule,
+    bit for bit. Everything is scatter arithmetic over the flattened
+    [m·cap] element stream; dynamic sizes (#keys U, #blocks NB, #payload
+    words P) live in the returned ``sizes`` vector, and every output is
+    statically sized N+1 = m·cap+1 with slot N as the scatter trash can
+    (the host wrapper slices by the real sizes — device slices, no
+    copy-back). Notable 32-bit spellings, since x64 is off on device:
+
+    * bit lengths via 31 shift-compare accumulations (the host float64
+      ``floor(log2)+1`` is exactly equal for deltas < 2³¹)
+    * the bitpack writes each delta as (lo = d << s, hi = d >> (32-s))
+      u32 halves with scatter-ADD — fields are disjoint because
+      d < 2^bitwidth, so add IS or, matching the host's uint64 shift +
+      or.at exactly (a zero hi lands as +0 in the next block's first
+      word, which the host simply skips — same bits either way)
+    """
+    from jax import lax
+
+    from repro.planner.postings import BLOCK, DENSE_MAX_WORDS
+
+    n = m * cap
+    iota = jnp.arange(n, dtype=jnp.int32)
+    col = iota % cap
+    rec = iota // cap
+    live = col < lengths[rec]
+    h = jnp.where(live, values.reshape(-1), jnp.uint32(PAD))
+    r = jnp.where(live, rec, jnp.int32(m))
+    # (hash asc, record asc); dead (PAD, m) lanes sort to the tail —
+    # even a real PAD-valued hash sorts before them on the row key.
+    order = jnp.lexsort((r, h))
+    hs, rsrt = h[order], r[order]
+    nnz = jnp.sum(live.astype(jnp.int32))
+    valid = iota < nnz
+
+    prev_h = jnp.concatenate([hs[:1], hs[:-1]])
+    newkey = valid & ((iota == 0) | (hs != prev_h))
+    key_id = jnp.cumsum(newkey.astype(jnp.int32)) - 1
+    kstart = lax.cummax(jnp.where(newkey, iota, -1))
+    posr = iota - kstart                      # position within key run
+    bstart = valid & (posr % BLOCK == 0)
+    blk_id = jnp.cumsum(bstart.astype(jnp.int32)) - 1
+    posb = iota - lax.cummax(jnp.where(bstart, iota, -1))
+    prev_r = jnp.concatenate([rsrt[:1], rsrt[:-1]])
+    d = jnp.where(valid & (posb > 0), rsrt - prev_r, 0)
+
+    # -- per-block headers (scatter into [n+1], slot n = trash) ---------
+    tgt = jnp.where(valid, blk_id, n)
+    tgtb = jnp.where(bstart, blk_id, n)
+    first_b = jnp.zeros(n + 1, jnp.int32).at[tgtb].set(rsrt)
+    last_b = jnp.zeros(n + 1, jnp.int32).at[tgt].max(
+        jnp.where(valid, rsrt, 0))
+    cnt_b = jnp.zeros(n + 1, jnp.int32).at[tgt].add(1)
+    md_b = jnp.zeros(n + 1, jnp.int32).at[tgt].max(d)
+    mind_b = jnp.full(n + 1, 1 << 30, jnp.int32).at[
+        jnp.where(valid & (posb > 0), blk_id, n)].min(d)
+
+    bw = jnp.zeros(n + 1, jnp.int32)
+    for k in range(31):
+        bw = bw + (md_b >> k > 0).astype(jnp.int32)
+    w_sparse = ((cnt_b - 1) * bw + 31) // 32
+    w_dense = (last_b - first_b + 1 + 31) // 32
+    dense = (mind_b >= 1) & (w_dense < w_sparse) \
+        & (w_dense <= DENSE_MAX_WORDS)
+    words_b = jnp.where(dense, w_dense, w_sparse).at[n].set(0)
+    off_b = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.cumsum(words_b[:n]).astype(jnp.int32)])      # [n+1]
+    meta_b = ((cnt_b - 1).astype(jnp.uint32) & jnp.uint32(0x7F)) \
+        | (bw.astype(jnp.uint32) << 8) \
+        | (dense.astype(jnp.uint32) << 13)
+
+    # -- payload scatters ----------------------------------------------
+    blk = jnp.clip(blk_id, 0, n)
+    b_dense, b_bw = dense[blk], bw[blk]
+    b_off, b_first = off_b[blk], first_b[blk]
+    payload = jnp.zeros(n + 1, jnp.uint32)
+
+    sel = valid & (posb > 0) & ~b_dense & (b_bw > 0)
+    bitpos = (posb - 1) * b_bw
+    wloc = b_off + (bitpos >> 5)
+    sh = (bitpos & 31).astype(jnp.uint32)
+    du = d.astype(jnp.uint32)
+    lo = du << sh
+    hi = jnp.where(sh > 0,
+                   du >> ((jnp.uint32(32) - sh) & jnp.uint32(31)),
+                   jnp.uint32(0))
+    payload = payload.at[jnp.where(sel, wloc, n)].add(
+        jnp.where(sel, lo, jnp.uint32(0)))
+    payload = payload.at[jnp.where(sel, wloc + 1, n)].add(
+        jnp.where(sel, hi, jnp.uint32(0)))
+
+    dsel = valid & b_dense
+    bit = rsrt - b_first
+    payload = payload.at[jnp.where(dsel, b_off + (bit >> 5), n)].add(
+        jnp.where(dsel,
+                  jnp.uint32(1) << (bit & 31).astype(jnp.uint32),
+                  jnp.uint32(0)))
+
+    # -- keyspace -------------------------------------------------------
+    keys_b = jnp.zeros(n + 1, jnp.uint32).at[
+        jnp.where(newkey, key_id, n)].set(hs)
+    nblk_k = jnp.zeros(n + 1, jnp.int32).at[
+        jnp.where(bstart, key_id, n)].add(1)
+    row_blocks_b = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.cumsum(nblk_k[:n]).astype(jnp.int32)])
+    u = jnp.sum(newkey.astype(jnp.int32))
+    nb = jnp.sum(bstart.astype(jnp.int32))
+    sizes = jnp.stack([u, nb, off_b[nb]])
+    return (keys_b, row_blocks_b, first_b, last_b, meta_b, off_b,
+            payload, sizes)
+
+
+def fused_encode_postings(values, lengths, *, m: int, cap: int) -> dict:
+    """Device-resident blocked tail postings from packed columns.
+
+    Runs :func:`_encode_tail_device` and slices the statically-shaped
+    outputs down to their true sizes — ONE host readback (the 3-int
+    sizes vector); every returned array is a device slice, so a device
+    build's postings mirrors never round-trip through host. Keys are the
+    arrays of :class:`repro.core.arena.DevicePostings`.
+    """
+    import jax.numpy as jnp  # noqa: F811 (kept local for doc symmetry)
+
+    out = _encode_tail_device(jnp.asarray(values, jnp.uint32),
+                              jnp.asarray(lengths, jnp.int32),
+                              m=m, cap=cap)
+    keys_b, rb_b, first_b, last_b, meta_b, off_b, payload_b, sizes = out
+    u, nb, p = (int(x) for x in np.asarray(sizes))
+    return {
+        "keys": keys_b[:u],
+        "row_blocks": rb_b[: u + 1],
+        "first": first_b[:nb],
+        "last": last_b[:nb],
+        "meta": meta_b[:nb],
+        "off": off_b[: nb + 1],
+        "payload": payload_b[:p],
+    }

@@ -35,9 +35,22 @@ from repro.obs.profile import (  # noqa: F401
     device_profile,
 )
 
+
+def device_pipeline_stats() -> dict:
+    """Snapshot of the fused device-pipeline counters — jit compile-cache
+    calls/compiles/cache_hits, staging-pool reuse/alloc, and the live
+    signature/buffer gauges. Imported lazily so ``repro.obs`` stays
+    importable (and the /metrics scrape path stays cheap) without pulling
+    the planner's jax stack in."""
+    from repro.planner import device as planner_device
+
+    return planner_device.pipeline_stats()
+
+
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "Trace", "Span",
     "attach", "stage", "current_trace", "current_profiler", "chrome_events",
     "build_explain", "cost_fields",
     "StageProfiler", "CostDrift", "device_profile",
+    "device_pipeline_stats",
 ]

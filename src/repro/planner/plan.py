@@ -94,17 +94,35 @@ def _probe(
 
     Header arithmetic only (cached row lengths, row_blocks diffs, a
     dense-kind cumsum) — nothing decodes, the buffer store included.
-    The tail block numbers also fix the device path's static block-task
-    bounds BEFORE any device work starts, preserving the stage/compute
-    transfer seam. ``posts`` may be a list (one per shard); everything
-    sums over the mesh.
+    This host probe feeds the COST MODEL and explain/bookkeeping only;
+    the device path runs its own probe on the mirrored headers inside
+    the fused jit (kernels/postings_merge.py), so no shape there depends
+    on these numbers. ``posts`` may be a list (one per shard);
+    everything sums over the mesh.
     """
     if isinstance(posts, PostingsIndex):
         posts = [posts]
-    per = np.zeros(len(q_hash_rows), dtype=np.int64)
+    gq = len(q_hash_rows)
+    per = np.zeros(gq, dtype=np.int64)
     tb = td = bb = 0
-    with stage("planner.probe", queries=len(q_hash_rows),
-               shards=len(posts)) as span:
+    with stage("planner.probe", queries=gq, shards=len(posts)) as span:
+        # ONE flattened searchsorted per shard for the whole batch (the
+        # per-query segment sums come back via np.add.at — int64-exact,
+        # unlike a float-weighted bincount).
+        if gq:
+            allh = np.concatenate(
+                [np.asarray(q, np.uint32).ravel() for q in q_hash_rows])
+            hidx = np.repeat(np.arange(gq, dtype=np.int64),
+                             [len(np.asarray(q).ravel())
+                              for q in q_hash_rows])
+            allb = np.concatenate(
+                [np.asarray(q, np.int64).ravel() for q in q_bit_rows])
+            bidx = np.repeat(np.arange(gq, dtype=np.int64),
+                             [len(np.asarray(q).ravel())
+                              for q in q_bit_rows])
+        else:
+            allh = np.zeros(0, np.uint32)
+            hidx = allb = bidx = np.zeros(0, np.int64)
         for post in posts:
             keys = post.keys
             row_lens = post.tail_row_lengths()
@@ -114,20 +132,18 @@ def _probe(
                 [[0], np.cumsum((post.tail.meta >> np.uint32(13))
                                 & np.uint32(1))]).astype(np.int64)
             rbb = post.buf.row_blocks.astype(np.int64)
-            for g, (qh, qb) in enumerate(zip(q_hash_rows, q_bit_rows)):
-                h = np.asarray(qh, dtype=np.uint32)
-                pos = np.searchsorted(keys, h)
-                ok = pos < len(keys)
-                hit = np.zeros(len(h), dtype=bool)
-                hit[ok] = keys[pos[ok]] == h[ok]
-                r = pos[hit]
-                per[g] += int(row_lens[r].sum())
-                tb += int((rbt[r + 1] - rbt[r]).sum())
-                td += int((dcum[rbt[r + 1]] - dcum[rbt[r]]).sum())
-                qb = np.asarray(qb, dtype=np.int64)
-                qb = qb[qb < post.buf.num_rows]
-                per[g] += int(buf_lens[qb].sum())
-                bb += int((rbb[qb + 1] - rbb[qb]).sum())
+            pos = np.searchsorted(keys, allh)
+            ok = pos < len(keys)
+            hit = np.zeros(len(allh), dtype=bool)
+            hit[ok] = keys[pos[ok]] == allh[ok]
+            r = pos[hit]
+            np.add.at(per, hidx[hit], row_lens[r].astype(np.int64))
+            tb += int((rbt[r + 1] - rbt[r]).sum())
+            td += int((dcum[rbt[r + 1]] - dcum[rbt[r]]).sum())
+            live = allb < post.buf.num_rows
+            qb = allb[live]
+            np.add.at(per, bidx[live], buf_lens[qb].astype(np.int64))
+            bb += int((rbb[qb + 1] - rbb[qb]).sum())
         span.set(hits=int(per.sum()), tail_blocks=tb, buf_blocks=bb)
     return per, tb, td, bb
 

@@ -502,6 +502,59 @@ def build_postings(sketches: PackedSketches) -> PostingsIndex:
                      m, tau)
 
 
+def build_postings_device(sketches: PackedSketches):
+    """Device-fused postings build: ``(PostingsIndex, DevicePostings)``.
+
+    For a device-built arena (columns already jnp arrays) the blocked
+    TAIL store is encoded on device by
+    :func:`repro.kernels.hash_threshold.fused_encode_postings` — build →
+    postings → query all share one device residency, closing the seam
+    where a device build re-encoded postings on host. The host
+    :class:`PostingsIndex` copy is still materialized here, once, for
+    the host consumers (cost-model probe, explain, save, shard slicing)
+    — that transfer is per build, not per batch, and the device mirrors
+    are adopted directly, not re-uploaded. Buffer postings are
+    host-encoded as always: they never ship to the device (o1 comes from
+    the resident packed bitmaps). Bit-identical to
+    :func:`build_postings`.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.arena import DevicePostings
+    from repro.kernels.hash_threshold import fused_encode_postings
+
+    m = sketches.num_records
+    cap = int(sketches.values.shape[1])
+    dev = fused_encode_postings(sketches.values, sketches.lengths,
+                                m=m, cap=cap)
+    keys_h = np.asarray(dev["keys"])
+    meta_h = np.asarray(dev["meta"], np.uint32)
+    tail = BlockStore(
+        row_blocks=np.asarray(dev["row_blocks"], np.int32),
+        first=np.asarray(dev["first"], np.int32),
+        last=np.asarray(dev["last"], np.int32),
+        meta=meta_h,
+        off=np.asarray(dev["off"]).astype(np.int64),
+        payload=np.asarray(dev["payload"], np.uint32))
+    buf_offsets, buf_rec_ids = _buf_csr(np.asarray(sketches.buf))
+    tau = keys_h[-1] if len(keys_h) else np.uint32(0)
+    post = PostingsIndex(
+        keys=keys_h, tail=tail,
+        buf=encode_store(buf_offsets, buf_rec_ids),
+        num_records=m, tau=np.uint32(tau))
+    dpost = DevicePostings(
+        keys=dev["keys"],
+        row_blocks=jnp.asarray(dev["row_blocks"], jnp.int32),
+        first=jnp.asarray(dev["first"], jnp.int32),
+        last=jnp.asarray(dev["last"], jnp.int32),
+        meta=jnp.asarray(dev["meta"], jnp.uint32),
+        off=jnp.asarray(dev["off"], jnp.int32),
+        payload=dev["payload"],
+        num_records=m,
+        has_dense=bool(np.any((meta_h >> np.uint32(13)) & np.uint32(1))))
+    return post, dpost
+
+
 def truncate_postings(post: PostingsIndex, tau: np.uint32) -> PostingsIndex:
     """τ-retighten = prefix truncation of the hash-sorted keyspace.
 

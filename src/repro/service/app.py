@@ -248,6 +248,32 @@ class ServiceApp:
                     help="Block-compressed postings bytes (0 until first "
                          "planned query builds them)")
 
+        # Fused device-pipeline counters (repro.planner.device): compile
+        # cache behaviour and staging-pool reuse. Lazy per scrape — the
+        # stats dict is plain ints, no jax import on the scrape path.
+        def _pipe(key):
+            def fn():
+                from repro import obs
+                return obs.device_pipeline_stats()[key]
+            return fn
+
+        for key, hlp in (
+            ("calls", "Fused device-pipeline invocations"),
+            ("compiles",
+             "Device-pipeline compile-cache misses (each one logged as a "
+             "slow-path recompile)"),
+            ("cache_hits", "Device-pipeline compile-cache hits"),
+            ("staging_reuse",
+             "Query batches staged through an existing pooled buffer"),
+            ("staging_alloc", "Staging-pool buffer allocations"),
+        ):
+            m.set_counter_fn(f"device_pipeline_{key}_total", _pipe(key),
+                             help=hlp)
+        m.set_gauge("device_pipeline_staging_buffers",
+                    _pipe("staging_buffers"),
+                    help="Live pooled staging buffers (distinct "
+                         "shape-bucket keys)")
+
     def _arena(self):
         """The live sketch arena, re-resolved per call — ingest swaps the
         host index under the ShardedIndex."""

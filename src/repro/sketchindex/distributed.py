@@ -261,6 +261,17 @@ class ShardedIndex:
         """
         return self.host.sketches.shard_postings(self.mesh.devices.size)
 
+    def _device_route(self) -> bool:
+        """True when the fused all-device pipeline can serve this index:
+        a single-device mesh (the fused program is unsharded) plus a
+        device scoring backend. Multi-device meshes keep the per-shard
+        host merge — its block skipping applies shard by shard."""
+        from repro.core.arena import SketchArena
+
+        return (self.mesh.devices.size == 1
+                and self.backend in ("jnp", "pallas")
+                and isinstance(self.host.sketches, SketchArena))
+
     def _pruned_batch(self, queries, thresholds, plan: str):
         """Planner route for a batch. Returns (hits, qp): hits is None
         when the cost model (or a guard) sends the batch dense, and qp
@@ -293,6 +304,17 @@ class ShardedIndex:
         self._last_plan_inputs = (hash_rows, sizes, posts)
         if decision.path == "dense":
             return None, qp
+
+        if self._device_route():
+            from repro.planner import device as planner_device
+
+            # Fused probe→decode→score→threshold entirely on device:
+            # per-query candidate sets never materialize on host, so
+            # explain carries the probe breakdown only.
+            ids = planner_device.pruned_batch_device(
+                self.host.sketches, qp, thresholds,
+                plan=decision, backend=self.backend)
+            return ids, qp
 
         from repro.kernels import gather_score
 
@@ -447,6 +469,11 @@ class ShardedIndex:
 
         if qp is None:
             qp = batch_queries(self.host, queries)
+        if self._device_route():
+            from repro.planner import device as planner_device
+
+            return planner_device.pruned_topk_device(
+                self.host.sketches, qp, k, backend=self.backend)
         hash_rows, bit_rows, sizes = unpack_query_rows(qp)
         posts, offs = self._shard_postings()
         s: PackedSketches = self.host.sketches

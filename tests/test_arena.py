@@ -225,9 +225,11 @@ def test_legacy_packed_npz_still_loads(corpus, tmp_path, gb_index):
 
 @pytest.mark.parametrize("backend", ("jnp", "pallas"))
 def test_pruned_path_device_resident(corpus, backend):
-    """The acceptance contract: between candidate generation and the
-    packed threshold output there is NO host transfer — asserted with
-    jax's transfer guard around the staged device pipeline."""
+    """The acceptance contract: between staging and the packed result
+    there is NO host transfer — probe, block decode, scoring, the packed
+    threshold words, AND top-k all run under jax's transfer guard. No
+    host header probe feeds the device program: the guard starts right
+    after staging."""
     from repro.planner import device as planner_device
 
     recs, total, queries = corpus
@@ -235,21 +237,29 @@ def test_pruned_path_device_resident(corpus, backend):
                                         backend=backend)
     t = 0.7
     want = idx.batch_query(queries, t, plan="pruned")  # warmup: compile
+    idx.topk(queries[0], 8, plan="pruned")             # warmup: topk jit
+    wt_ids, wt_s = idx.topk(queries[0], 8, plan="dense")
     arena = idx._sketch_pack()
-    qp, hash_rows, bit_rows, _ = idx._plan_queries(queries)
-    decision = planner.choose_plan(
-        idx._postings(), hash_rows, bit_rows, t,
-        arena.num_records, arena.capacity, plan="pruned")
-    dpost, dpack, dq, dthr = planner_device.stage_query_inputs(arena, qp, t)
-    tb, tbd = planner_device.task_bounds(decision)
+    m = arena.num_records
+    qp, _, _, _ = idx._plan_queries(queries)
+    dpost, dpack, sq = planner_device.stage_query_inputs(arena, qp, t)
     with jax.transfer_guard("disallow"):
-        mask = planner_device.pruned_hit_mask(
-            dpost, dpack, dq, dthr, tb=tb, tbd=tbd,
-            m=arena.num_records, backend=backend)
-        assert not isinstance(mask, np.ndarray)        # still on device
-    got = planner.prune.mask_to_hits(np.asarray(mask))
+        words = planner_device.fused_mask_words(
+            dpost, dpack, sq, m=m, backend=backend)
+        assert not isinstance(words, np.ndarray)       # still on device
+    mask = planner_device.unpack_hit_words(words, m)[:, : qp.num_records]
+    got = planner.prune.mask_to_hits(mask)
     for w, g in zip(want, got):
         np.testing.assert_array_equal(w, g)
+    # top-k: same residency contract on the fused top-k head (fresh
+    # staging — the previous call donated the query blob).
+    dpost, dpack, sq = planner_device.stage_query_inputs(arena, qp)
+    with jax.transfer_guard("disallow"):
+        vals, ids = planner_device.fused_topk_scores(
+            dpost, dpack, sq, k=8, m=m, backend=backend)
+        assert not isinstance(vals, np.ndarray)
+    np.testing.assert_array_equal(np.asarray(ids)[0], wt_ids)
+    np.testing.assert_allclose(np.asarray(vals)[0], wt_s, rtol=1e-6)
 
 
 def test_device_route_is_taken(corpus):
