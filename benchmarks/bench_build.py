@@ -21,6 +21,13 @@ between the two on every run (a mismatch raises and fails CI).
   planner gate's dense-QPS normalization does.
 * Independently of any baseline, the gbkmv numpy-path speedup must
   clear ``MIN_GBKMV_NUMPY_SPEEDUP`` (the PR's ≥10× acceptance floor).
+
+The numpy cell additionally benches the windowed-ingest merge path
+(``merge_gbkmv``/``merge_gkmv``/``merge_kmv`` over ``MERGE_PARTS``
+disjoint epoch sketches): every run asserts the merge bit-identical to
+rebuilding from the concatenated records, and the merge-vs-rebuild
+speedup is recorded under ``merge_rows`` and gated (a merge may never
+lose to a rebuild, nor regress below ``MERGE_TOLERANCE ×`` committed).
 """
 
 from __future__ import annotations
@@ -45,6 +52,17 @@ SPEEDUP_TOLERANCE_DEFAULT = 0.5
 MIN_GBKMV_NUMPY_SPEEDUP = 10.0    # acceptance floor, numpy path
 LSHE_HASHES_QUICK = 64
 LSHE_HASHES_FULL = 256
+# Windowed-ingest merge bench (host path, numpy cell only): parts built
+# over disjoint record slices with the SHARED budget, merged with
+# merge_gbkmv/merge_gkmv/merge_kmv, asserted bit-identical to rebuilding
+# from the concatenation, and gated on merge-vs-rebuild speedup — the
+# merge skips hashing and re-sorting, so it must not lose to a rebuild.
+MERGE_PARTS = 4
+MERGE_ENGINES = ("gbkmv", "gkmv", "kmv")
+MIN_MERGE_SPEEDUP = 1.0
+MERGE_TOLERANCE = 0.5
+MERGE_GBKMV_R = 64                # fixed r keeps budget ≥ m·(w+1) — the
+                                  # documented merge bit-identity condition
 
 
 def _pack_of(obj):
@@ -112,6 +130,93 @@ def _time_fast(fn, repeats: int = 4) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _merge_builders(engine: str, recs, budget: int, seed: int):
+    """(merge_fn, rebuild_fn, parity_fn) over pre-built disjoint parts.
+
+    Parts are built OUTSIDE the timed region — the bench measures the
+    windowed-ingest steady state, where epoch sketches already exist and
+    a window query pays only the merge.
+    """
+    cut = (len(recs) + MERGE_PARTS - 1) // MERGE_PARTS
+    slices = [recs[i:i + cut] for i in range(0, len(recs), cut)]
+    if engine == "gbkmv":
+        first = gbkmv.build_gbkmv(slices[0], budget, r=MERGE_GBKMV_R,
+                                  seed=seed)
+        parts = [first] + [
+            gbkmv.build_gbkmv(s, budget, r=MERGE_GBKMV_R, seed=seed,
+                              top_elems=first.top_elems)
+            for s in slices[1:]]
+        merge = lambda: gbkmv.merge_gbkmv(parts, budget)
+        rebuild = lambda: gbkmv.build_gbkmv(recs, budget, r=MERGE_GBKMV_R,
+                                            seed=seed,
+                                            top_elems=first.top_elems)
+
+        def parity(mg, rb):
+            _assert_pack_parity(mg, rb, "gbkmv-merge")
+            if int(mg.tau) != int(rb.tau) or not np.array_equal(
+                    mg.top_elems, rb.top_elems):
+                raise RuntimeError("merge parity broken: gbkmv tau/top_elems")
+        return merge, rebuild, parity
+    if engine == "gkmv":
+        parts = [gkmv.build_gkmv(s, budget, seed=seed) for s in slices]
+        return (lambda: gkmv.merge_gkmv(parts, budget),
+                lambda: gkmv.build_gkmv(recs, budget, seed=seed),
+                lambda mg, rb: _assert_pack_parity(mg, rb, "gkmv-merge"))
+    if engine == "kmv":
+        parts = [kmv.build_kmv(s, budget, seed=seed) for s in slices]
+        return (lambda: kmv.merge_kmv(parts, budget),
+                lambda: kmv.build_kmv(recs, budget, seed=seed),
+                lambda mg, rb: _assert_pack_parity(mg, rb, "kmv-merge"))
+    raise ValueError(engine)
+
+
+def run_merge(recs, budget: int, seed: int = 3) -> list[dict]:
+    """Merge-vs-rebuild rows, parity-asserted (host path)."""
+    m = len(recs)
+    rows = []
+    for engine in MERGE_ENGINES:
+        merge, rebuild, parity = _merge_builders(engine, recs, budget, seed)
+        dt_rebuild = np.inf
+        for _ in range(3):
+            t0 = time.perf_counter()
+            rebuilt = rebuild()
+            dt_rebuild = min(dt_rebuild, time.perf_counter() - t0)
+        parity(merge(), rebuilt)
+        dt_merge = _time_fast(merge)
+        rows.append({
+            "engine": engine,
+            "parts": MERGE_PARTS,
+            "merge_records_per_s": round(m / dt_merge, 1),
+            "merge_s": round(dt_merge, 4),
+            "rebuild_s": round(dt_rebuild, 4),
+            "merge_speedup_vs_rebuild": round(dt_rebuild / dt_merge, 2),
+            "parity": True,
+        })
+    return rows
+
+
+def check_merge_baseline(rows, base: dict) -> list[str]:
+    """Merge-speedup gate against the committed ``merge_rows``."""
+    base_rows = {r["engine"]: r for r in base.get("merge_rows", [])}
+    failures = []
+    for r in rows:
+        if r["merge_speedup_vs_rebuild"] < MIN_MERGE_SPEEDUP:
+            failures.append(
+                f"{r['engine']}: merge {r['merge_speedup_vs_rebuild']:.2f}× "
+                f"rebuild — a merge slower than rebuilding from scratch")
+        b = base_rows.get(r["engine"])
+        if b is None:
+            continue
+        floor = MERGE_TOLERANCE * b["merge_speedup_vs_rebuild"]
+        if r["merge_speedup_vs_rebuild"] < floor:
+            failures.append(
+                f"{r['engine']}: merge speedup "
+                f"{r['merge_speedup_vs_rebuild']:.1f}× < floor {floor:.1f}× "
+                f"(committed {b['merge_speedup_vs_rebuild']:.1f}× × "
+                f"{MERGE_TOLERANCE})")
+    return failures
 
 
 def check_baseline(rows, baseline_path: str, backend: str) -> list[str]:
@@ -182,21 +287,32 @@ def run(quick: bool = True, json_out: str | None = None,
     write_csv("build.csv", rows)
 
     failures = []
+    merge_rows = []
     if backend == "numpy":
         gb = next(r for r in rows if r["engine"] == "gbkmv")
         if gb["speedup_vs_oracle"] < MIN_GBKMV_NUMPY_SPEEDUP:
             failures.append(
                 f"gbkmv numpy build speedup {gb['speedup_vs_oracle']:.1f}× "
                 f"below the {MIN_GBKMV_NUMPY_SPEEDUP}× acceptance floor")
+        # Merges are host ops regardless of backend — bench them once,
+        # in the numpy cell, with bit-parity asserted inside run_merge.
+        merge_rows = run_merge(recs, budget, seed=3)
+        write_csv("build_merge.csv", merge_rows)
     if baseline and os.path.exists(baseline):
         failures += check_baseline(rows, baseline, backend)
+        if merge_rows:
+            with open(baseline) as f:
+                failures += check_merge_baseline(merge_rows, json.load(f))
 
     if json_out:
         by_backend = {}
+        prev_merge = []
         if os.path.exists(json_out):
             try:
                 with open(json_out) as f:
-                    by_backend = dict(json.load(f).get("rows_by_backend", {}))
+                    prev = json.load(f)
+                by_backend = dict(prev.get("rows_by_backend", {}))
+                prev_merge = list(prev.get("merge_rows", []))
             except (json.JSONDecodeError, OSError):
                 by_backend = {}
         by_backend[backend] = rows
@@ -211,6 +327,9 @@ def run(quick: bool = True, json_out: str | None = None,
             },
             "rows": rows,
             "rows_by_backend": by_backend,
+            # Windowed-ingest merge path; non-numpy cells carry the
+            # previous artifact's rows forward unchanged.
+            "merge_rows": merge_rows or prev_merge,
         }
         with open(json_out, "w") as f:
             json.dump(payload, f, indent=2)

@@ -95,12 +95,47 @@ def get_engine(name: str):
 
 
 def list_engines() -> list[str]:
+    """Registered engine names (gbkmv/gkmv/kmv/lshe/exact/prefix/...)."""
     return sorted(_ENGINES)
 
 
 def build(name: str, records, budget: int | None = None, **cfg):
-    """Convenience: ``get_engine(name).build(records, budget, **cfg)``."""
+    """Convenience: ``get_engine(name).build(records, budget, **cfg)``.
+
+    ``records`` is a list of element-id arrays or a pre-ingested
+    :class:`repro.core.sketches.RaggedBatch`; ``budget`` counts 32-bit
+    hash slots across all records (the paper's space accounting). See
+    docs/API.md for the shared ``build`` kwargs (``backend``,
+    ``build_backend``, ``tau_mode``, ``postings``, ``windowed``)."""
     return get_engine(name).build(records, budget, **cfg)
+
+
+def _record_list(records) -> list:
+    """Per-record id arrays from a record list or a pre-ingested
+    :class:`repro.core.sketches.RaggedBatch` (rebuild-fallback engines
+    and the windowed path keep them beyond construction)."""
+    if hasattr(records, "offsets"):          # RaggedBatch
+        ids = np.asarray(records.ids)
+        off = np.asarray(records.offsets)
+        return [ids[a:b] for a, b in zip(off[:-1], off[1:])]
+    return [np.asarray(r) for r in records]
+
+
+def _windowed_build(engine: str, records, budget, backend: str,
+                    epoch: int, cfg: dict):
+    """Shared ``windowed=True`` path of the sketch engines' ``build``:
+    wrap construction in a :class:`repro.sketchindex.WindowManager`
+    whose first epoch holds ``records``. The manager implements this
+    module's index protocol (plus ``window=`` kwargs, ``retire``, and
+    directory save/load) — see :mod:`repro.sketchindex.windows`."""
+    from repro.sketchindex.windows import WindowManager
+
+    wm = WindowManager(engine=engine, budget=int(budget), backend=backend,
+                       **cfg)
+    records = _record_list(records)
+    if records:
+        wm.ingest(records, epoch=int(epoch))
+    return wm
 
 
 def load_index(path: str):
@@ -159,11 +194,14 @@ class _IndexBase:
         Deterministic order: score descending, ties by ascending record
         id — the exact ranking the planner-aware pruned top-k reproduces
         (and the tie rule ``lax.top_k`` applies on the sharded path).
+        Dense and host-pruned routes share one output head
+        (:func:`repro.planner.topk_select`), so the contract cannot
+        drift between them.
         """
+        from repro.planner import topk_select
+
         s = np.asarray(self._scores(q_ids))
-        k = min(int(k), len(s))
-        ids = np.argsort(-s, kind="stable")[:k]
-        return ids.astype(np.int64), s[ids].astype(np.float32)
+        return topk_select(np.arange(len(s), dtype=np.int64), s, k, len(s))
 
     def insert(self, new_records):
         """Full-rebuild fallback (engines without dynamic maintenance)."""
@@ -445,6 +483,11 @@ class _PlannedIndexMixin:
             self.last_plan = decision
             if decision.path == "dense":
                 return super().topk(q_ids, k)
+        else:
+            # Forced pruned: record the route like batch_query does, so
+            # serving drift accounting sees every planned execution.
+            self.last_plan = planner.QueryPlan(
+                "pruned", np.nan, np.nan, 0, "forced topk")
         if self._device_prunable and self.backend in ("jnp", "pallas"):
             from repro.planner import device as planner_device
 
@@ -470,7 +513,7 @@ class GBKMVEngine:
     @classmethod
     def build(cls, records, budget, r="auto", seed=0, capacity=None,
               backend="jnp", tau_mode="exact", build_backend=None,
-              postings="lazy", **_):
+              postings="lazy", windowed=False, epoch=0, **_):
         """Vectorized construction (no per-record Python). ``backend``
         picks the *scoring* implementation; ``build_backend`` the
         construction path — None/"numpy" = host vectorized,
@@ -479,7 +522,15 @@ class GBKMVEngine:
         refine, τ within 2^8 of exact — the distributed selector).
         ``postings="eager"`` encodes the block-compressed postings from
         the packed columns before returning, so the first pruned query
-        pays no inversion."""
+        pays no inversion. ``windowed=True`` returns a
+        :class:`repro.sketchindex.WindowManager` instead — a
+        time-windowed index whose first epoch is ``epoch`` and whose
+        ``insert`` takes an ``epoch=`` kwarg (docs/API.md §Windows)."""
+        if windowed:
+            return _windowed_build(
+                cls.name, records, budget, backend, epoch,
+                {"r": r, "seed": seed, "capacity": capacity,
+                 "tau_mode": tau_mode, "build_backend": build_backend})
         _validate_postings_arg(postings)
         core = gbkmv_mod.build_gbkmv(records, budget=budget, r=r, seed=seed,
                                      capacity=capacity, tau_mode=tau_mode,
@@ -601,7 +652,18 @@ class GKMVEngine:
 
     @classmethod
     def build(cls, records, budget, seed=0, capacity=None, backend="jnp",
-              tau_mode="exact", build_backend=None, postings="lazy", **_):
+              tau_mode="exact", build_backend=None, postings="lazy",
+              windowed=False, epoch=0, **_):
+        """Build a G-KMV index (global hash threshold τ from ``budget``).
+        Same construction knobs as gbkmv minus the buffer; see
+        :meth:`GBKMVEngine.build`. ``windowed=True`` returns a
+        :class:`repro.sketchindex.WindowManager` over per-epoch G-KMV
+        snapshots."""
+        if windowed:
+            return _windowed_build(
+                cls.name, records, budget, backend, epoch,
+                {"seed": seed, "capacity": capacity, "tau_mode": tau_mode,
+                 "build_backend": build_backend})
         _validate_postings_arg(postings)
         sk = gkmv_mod.build_gkmv(records, budget=budget, seed=seed,
                                  capacity=capacity, tau_mode=tau_mode,
@@ -609,7 +671,7 @@ class GKMVEngine:
         _maybe_eager_postings(sk, postings)
         tau = int(np.asarray(sk.thresh).max()) if sk.num_records else int(PAD - 1)
         idx = GKMVApiIndex(sk, tau=tau, seed=seed, backend=backend)
-        idx._records = [np.asarray(r) for r in records]
+        idx._records = _record_list(records)
         idx._build_cfg = {"budget": budget, "seed": seed, "capacity": capacity,
                           "backend": backend}
         return idx
@@ -695,13 +757,22 @@ class KMVEngine:
 
     @classmethod
     def build(cls, records, budget, seed=0, backend="jnp",
-              build_backend=None, postings="lazy", **_):
+              build_backend=None, postings="lazy", windowed=False,
+              epoch=0, **_):
+        """Build a plain-KMV index (uniform k = floor(budget/m) per
+        record, Theorem 1). ``windowed=True`` returns a
+        :class:`repro.sketchindex.WindowManager` over per-epoch KMV
+        snapshots."""
+        if windowed:
+            return _windowed_build(cls.name, records, budget, backend,
+                                   epoch, {"seed": seed,
+                                           "build_backend": build_backend})
         _validate_postings_arg(postings)
         sk = kmv_mod.build_kmv(records, budget=budget, seed=seed,
                                build_backend=build_backend)
         _maybe_eager_postings(sk, postings)
         idx = KMVApiIndex(sk, seed=seed, backend=backend)
-        idx._records = [np.asarray(r) for r in records]
+        idx._records = _record_list(records)
         idx._build_cfg = {"budget": budget, "seed": seed, "backend": backend}
         return idx
 

@@ -291,6 +291,135 @@ class SketchArena(PackedSketches):
         return total
 
 
+    # -- merge / union ------------------------------------------------------
+
+    def merge(self, other: "SketchArena", tail_budget: int,
+              **kw) -> "SketchArena":
+        """Union this arena with ``other`` under a shared slot budget —
+        see :func:`merge_arenas` (this is ``merge_arenas([self, other],
+        tail_budget)``)."""
+        merged, _ = merge_arenas([self, other], tail_budget, **kw)
+        return merged
+
+
+def flat_kept(pack: PackedSketches) -> tuple[np.ndarray, np.ndarray]:
+    """The live packed entries as flat (hash uint32, row int64) streams.
+
+    Row-major (row ascending, hash ascending within a row — rows are
+    stored sorted), i.e. already in :func:`repro.core.sketches.pack_csr`
+    ``presorted`` order.
+    """
+    vals = np.asarray(pack.values)
+    lens = np.asarray(pack.lengths)
+    live = np.arange(pack.capacity)[None, :] < lens[:, None]
+    rows = np.repeat(np.arange(pack.num_records, dtype=np.int64),
+                     lens.astype(np.int64))
+    return vals[live].astype(np.uint32), rows
+
+
+def merge_arenas(
+    arenas,
+    tail_budget: int,
+    part_taus=None,
+    capacity: int | None = None,
+) -> tuple["SketchArena", np.uint32]:
+    """Union independently built arenas into one, re-tightening τ.
+
+    The KMV-family merge: concatenate the packed columns record-range-
+    wise (part i's records become rows ``[off_i, off_i + m_i)``), select
+    the new global threshold τ′ as the ``tail_budget``-th smallest hash
+    of the kept union, refilter every row at ``min(row_thresh, τ′)``,
+    and repack. Returns ``(merged_arena, τ′)``.
+
+    **Bit-identity contract**: when every part was built from disjoint
+    record sets with the *same* budget ``tail_budget`` (and no binding
+    ``capacity`` cap), the result is bit-identical to rebuilding from
+    the concatenated records. Proof sketch: the rebuild's τ is the
+    budget-th smallest hash of the full union, which is ≤ every part's
+    τ_i (a superset's k-th order statistic never exceeds a subset's),
+    so every hash the rebuild keeps is already stored in its part and
+    the budget-th smallest of the *kept* union equals the rebuild's τ.
+    Parts built with smaller budgets may have dropped hashes below the
+    merged τ′ — the merge is then still a valid sketch (per-row
+    thresholds keep τ_pair semantics exact) but not rebuild-identical.
+
+    ``part_taus`` optionally passes each part's global τ (used only to
+    disambiguate the boundary case where the kept union has exactly
+    ``tail_budget`` entries); it defaults to each part's max row
+    threshold, which is exact whenever some row did not overflow.
+
+    Block-postings are spliced, not rebuilt: part 0's cached postings
+    are τ′-truncated and the remaining parts' rows appended
+    (`planner.postings.truncate_postings` + `append_rows`) — block-for-
+    block identical to a fresh build over the merged arena. Parts after
+    the first contribute their rows through the merged columns, so
+    their own cached postings are not consulted.
+    """
+    from repro.core.hashing import PAD
+    from repro.core.sketches import pack_csr
+
+    arenas = [SketchArena.from_pack(a) for a in arenas]
+    if not arenas:
+        raise ValueError("merge_arenas needs at least one arena")
+    widths = {a.buf_words for a in arenas}
+    if len(widths) != 1:
+        raise ValueError(f"buffer widths differ across parts: {widths} — "
+                         "merge requires one shared top-elements set")
+
+    parts = [flat_kept(a) for a in arenas]
+    counts_m = [a.num_records for a in arenas]
+    offs = np.concatenate([[0], np.cumsum(counts_m)]).astype(np.int64)
+    m = int(offs[-1])
+    flat_h = np.concatenate([h for h, _ in parts]) if m else \
+        np.zeros(0, np.uint32)
+    flat_row = np.concatenate(
+        [r + offs[i] for i, (_, r) in enumerate(parts)]) if m else \
+        np.zeros(0, np.int64)
+    thr_old = np.concatenate([np.asarray(a.thresh, np.uint32)
+                              for a in arenas])
+    sizes = np.concatenate([np.asarray(a.sizes, np.int32) for a in arenas])
+    buf = np.vstack([np.asarray(a.buf, np.uint32) for a in arenas])
+
+    if part_taus is None:
+        part_taus = [np.asarray(a.thresh).max() if a.num_records else
+                     np.uint32(PAD - np.uint32(1)) for a in arenas]
+    pad1 = np.uint32(PAD - np.uint32(1))
+    tail_budget = int(tail_budget)
+    # τ′ binds strictly when the kept union exceeds the budget. At exactly
+    # budget entries it binds only if some part dropped hashes (then the
+    # virtual full union is larger and its budget-th smallest is the kept
+    # max); with no drops anywhere the rebuild keeps everything (τ=PAD-1).
+    binds = len(flat_h) > tail_budget or (
+        len(flat_h) == tail_budget
+        and any(np.uint32(t) < pad1 for t in part_taus))
+    if binds and tail_budget > 0:
+        tau = np.uint32(np.partition(flat_h, tail_budget - 1)
+                        [tail_budget - 1])
+    else:
+        tau = pad1
+    thr = np.minimum(thr_old, tau)
+    keep = flat_h <= thr[flat_row]
+    packed = pack_csr(flat_h[keep], flat_row[keep], m, thr, sizes,
+                      bitmaps=buf, capacity=capacity, presorted=True)
+    merged = SketchArena.from_pack(packed)
+
+    # Splice part 0's cached postings forward (τ-truncate + append the
+    # remaining rows) — but only if packing did not *further* truncate
+    # any row via the capacity cap (then the spliced entries would not
+    # match the stored columns; leave postings to rebuild lazily).
+    src = arenas[0]
+    if src._post is not None and np.array_equal(
+            np.asarray(merged.thresh), thr):
+        from repro.planner.postings import append_rows, truncate_postings
+
+        post = truncate_postings(src._post, tau)
+        m0 = counts_m[0]
+        if m > m0:
+            post = append_rows(post, merged, m0, m)
+        merged.install_postings(post)
+    return merged, tau
+
+
 # An arena IS a pack — let it cross jit boundaries the same way (caches
 # reset on unflatten via __post_init__, which is exactly right: a traced
 # arena cannot carry host-side caches).

@@ -120,6 +120,7 @@ def build_gbkmv(
     capacity: int | None = None,
     tau_mode: str = "exact",
     build_backend: str | None = None,
+    top_elems: np.ndarray | None = None,
 ) -> GBKMVIndex:
     """Algorithm 1, vectorized: pick r (cost model), top-r elements, τ,
     pack sketches — no per-record Python anywhere on the path.
@@ -136,17 +137,27 @@ def build_gbkmv(
       build_backend: None/"numpy" = host vectorized; "jnp"/"pallas" = the
                 fused device hash→τ→pack computation (Pallas hash kernel
                 on the pallas spelling), columns land device-resident
+      top_elems: pin the buffer element set instead of deriving it from
+                this batch's frequencies (r defaults to its length).
+                The windowed index pins the first epoch's set so every
+                epoch's buffers stay merge-compatible — same philosophy
+                as the dynamic-insert path, which freezes the buffer
+                layout at build time.
     """
     batch = (records if isinstance(records, RaggedBatch)
              else RaggedBatch.from_records(records))
     m = batch.num_records
     sizes = batch.sizes
 
-    uniq, counts = element_frequencies_csr(batch)
-    if r == "auto":
-        r = _auto_buffer_bits(counts, sizes.astype(np.int64), budget, m)
-    r = int(r)
-    top = choose_top_elements_csr(uniq, counts, r)
+    if top_elems is not None:
+        top = np.asarray(top_elems, dtype=np.int64)
+        r = len(top) if r == "auto" else int(r)
+    else:
+        uniq, counts = element_frequencies_csr(batch)
+        if r == "auto":
+            r = _auto_buffer_bits(counts, sizes.astype(np.int64), budget, m)
+        r = int(r)
+        top = choose_top_elements_csr(uniq, counts, r)
 
     # Buffer split via sorted-search membership (no Python sets); the
     # same membership pass feeds the bitmaps.
@@ -176,6 +187,52 @@ def build_gbkmv(
     packed = SketchArena.from_pack(packed)
     return GBKMVIndex(sketches=packed, tau=np.uint32(tau), top_elems=top,
                       seed=seed, buffer_bits=r)
+
+
+def merge_gbkmv(indexes: Sequence[GBKMVIndex], budget: int,
+                capacity: int | None = None) -> GBKMVIndex:
+    """Union independently built GB-KMV indexes under one global budget.
+
+    Both halves of the sketch are order-independent, so the merge needs
+    no re-hashing: the bitmap buffers concatenate row-wise (same bit ↔
+    same element, because the parts must share ``top_elems``), and the
+    G-KMV tails union with τ re-tightened to the merged tail budget
+    (:func:`repro.core.arena.merge_arenas`). When every part was built
+    with this same ``budget``, the same ``top_elems``/``r``/``seed``,
+    and no binding ``capacity``, the result is bit-identical to
+    :func:`build_gbkmv` on the concatenated records with the buffer set
+    pinned (``top_elems=``) — including under arbitrary merge grouping
+    (associativity) — provided the budget covers the merged buffer
+    cost, ``budget ≥ m_total·(ceil(r/32)+1)``. Below that, the ≥1-slot-
+    per-record floor on the tail budget can give an intermediate merge
+    a *smaller* tail budget than a part's, dropping hashes the rebuild
+    keeps; the merge is then still a valid sketch (per-row thresholds
+    preserve τ_pair semantics) but not rebuild-identical. Raises on
+    parts whose seed, buffer size, or buffer element set disagree —
+    those sketches are not mergeable.
+    """
+    from repro.core.arena import merge_arenas
+
+    if not indexes:
+        raise ValueError("merge_gbkmv needs at least one index")
+    base = indexes[0]
+    for ix in indexes[1:]:
+        if ix.seed != base.seed:
+            raise ValueError(f"hash seeds differ: {ix.seed} != {base.seed}")
+        if ix.buffer_bits != base.buffer_bits or not np.array_equal(
+                np.asarray(ix.top_elems), np.asarray(base.top_elems)):
+            raise ValueError(
+                "buffer element sets differ across parts — build every "
+                "epoch with top_elems pinned to the first epoch's set")
+    m = sum(ix.num_records for ix in indexes)
+    words_per_rec = -(-base.buffer_bits // 32) if base.buffer_bits else 0
+    tail_budget = max(budget - m * words_per_rec, m)
+    merged, tau = merge_arenas(
+        [ix.sketches for ix in indexes], tail_budget,
+        part_taus=[ix.tau for ix in indexes], capacity=capacity)
+    return GBKMVIndex(sketches=merged, tau=np.uint32(tau),
+                      top_elems=base.top_elems, seed=base.seed,
+                      buffer_bits=base.buffer_bits)
 
 
 def build_gbkmv_oracle(

@@ -106,6 +106,23 @@ def build_gkmv(
         h[keep], row[keep], m, thr, batch.sizes, capacity=capacity))
 
 
+def merge_gkmv(parts, budget: int, capacity: int | None = None):
+    """Union independently built G-KMV arenas under one global budget.
+
+    ``parts`` are the packed arenas of indexes built over *disjoint*
+    record sets; the result covers their concatenation. When every part
+    was built with this same ``budget`` (and no binding ``capacity``),
+    the merge is bit-identical to :func:`build_gkmv` on the
+    concatenated records — the mergeability property of KMV synopses
+    (paper Theorem 2: a τ-filtered union is again a τ-sketch). Returns
+    the merged :class:`~repro.core.arena.SketchArena`.
+    """
+    from repro.core.arena import merge_arenas
+
+    merged, _ = merge_arenas(parts, budget, capacity=capacity)
+    return merged
+
+
 def build_gkmv_oracle(
     records: Sequence[np.ndarray],
     budget: int,

@@ -60,6 +60,41 @@ def build_kmv(records: Sequence[np.ndarray], budget: int, seed: int = 0,
         presorted=True))
 
 
+def merge_kmv(parts, budget: int) -> PackedSketches:
+    """Union independently built plain-KMV arenas under one budget.
+
+    The merged uniform allocation is ``k = max(budget // m_total, 2)``,
+    which never exceeds any part's per-record k (k is non-increasing in
+    the record count), so every merged row's k smallest hashes are
+    already stored in its part: re-truncating each row positionally is
+    bit-identical to :func:`build_kmv` on the concatenated records —
+    for *any* per-part record counts, as long as the parts shared this
+    ``budget``. No postings splice (the cut is positional, not a τ
+    filter); postings rebuild lazily on the merged arena.
+    """
+    from repro.core.arena import SketchArena, flat_kept
+
+    parts = [SketchArena.from_pack(p) for p in parts]
+    if not parts:
+        raise ValueError("merge_kmv needs at least one arena")
+    counts_m = [p.num_records for p in parts]
+    offs = np.concatenate([[0], np.cumsum(counts_m)]).astype(np.int64)
+    m = int(offs[-1])
+    k = max(budget // max(m, 1), 2)
+    streams = [flat_kept(p) for p in parts]
+    h = np.concatenate([s[0] for s in streams]) if m else np.zeros(0, np.uint32)
+    row = np.concatenate([s[1] + offs[i] for i, s in enumerate(streams)]) \
+        if m else np.zeros(0, np.int64)
+    counts = np.bincount(row, minlength=m).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    pos = np.arange(len(h), dtype=np.int64) - starts[row]
+    keep = pos < k
+    sizes = np.concatenate([np.asarray(p.sizes, np.int32) for p in parts])
+    thr = np.full(m, PAD - np.uint32(1), dtype=np.uint32)
+    return SketchArena.from_pack(pack_csr(
+        h[keep], row[keep], m, thr, sizes, capacity=k, presorted=True))
+
+
 def build_kmv_oracle(records: Sequence[np.ndarray], budget: int,
                      seed: int = 0) -> PackedSketches:
     """The seed-era per-record builder — test oracle for build_kmv."""

@@ -28,6 +28,7 @@ from repro.planner.plan import (
     probe_block_stats,
     pruned_batch,
     pruned_topk,
+    topk_select,
 )
 from repro.planner.postings import (
     BLOCK,
@@ -59,6 +60,7 @@ __all__ = [
     "probe_block_stats",
     "pruned_batch",
     "pruned_topk",
+    "topk_select",
     "BLOCK",
     "BlockStore",
     "PostingsIndex",

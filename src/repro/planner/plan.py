@@ -290,6 +290,38 @@ def pruned_batch(
     return out, cands
 
 
+def topk_select(rec_ids, scores, k: int,
+                num_records: int) -> tuple[np.ndarray, np.ndarray]:
+    """The top-k output head shared by every host route.
+
+    One implementation of the ranking contract the device route's
+    ``lax.top_k`` produces over a full score matrix: score descending,
+    ties by ascending record id, and records absent from ``rec_ids`` (or
+    scoring exactly 0 — the same tie pool, since absent records score 0
+    under every estimator) filling any shortfall in ascending-id order.
+    The dense sweep (:meth:`repro.api._IndexBase.topk`) and the host
+    :func:`pruned_topk` both route here, so host and device rankings
+    can only drift apart in one place.
+    """
+    k = min(int(k), int(num_records))
+    if k <= 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.float32)
+    ids = np.asarray(rec_ids, np.int64)
+    s = np.asarray(scores, np.float32)
+    pos_mask = s > 0
+    ids, s = ids[pos_mask], s[pos_mask]
+    order = np.lexsort((ids, -s))           # score desc, id asc
+    ids, s = ids[order][:k], s[order][:k]
+    if len(ids) < k:
+        # Zero-score records, ascending id — the dense tail among ties
+        # at 0.
+        fill = np.setdiff1d(np.arange(num_records, dtype=np.int64),
+                            ids)[: k - len(ids)]
+        ids = np.concatenate([ids, fill])
+        s = np.concatenate([s, np.zeros(len(fill), np.float32)])
+    return ids.astype(np.int64), s.astype(np.float32)
+
+
 def pruned_topk(
     posts: PostingsIndex | Sequence[PostingsIndex],
     q_hashes: np.ndarray,
@@ -355,17 +387,8 @@ def pruned_topk(
     s = np.concatenate(scored_s) if scored_s else np.zeros(0, np.float32)
     # Zero-scored candidates (possible for plain KMV: a shared value can
     # fall outside the top-k union) belong to the same tie pool as
-    # non-candidates — keep only positive scores, the zero tail fills by
-    # ascending id below. Whenever scoring stopped early the running
-    # k-th score was positive, so dropped/unscored rows cannot matter.
-    pos_mask = s > 0
-    ids, s = ids[pos_mask], s[pos_mask]
-    order2 = np.lexsort((ids, -s))          # score desc, id asc
-    ids, s = ids[order2][:k], s[order2][:k]
-    if len(ids) < k:
-        # Zero-score records, ascending id — the dense tail among ties at 0.
-        fill = np.setdiff1d(np.arange(num_records, dtype=np.int64),
-                            ids)[: k - len(ids)]
-        ids = np.concatenate([ids, fill])
-        s = np.concatenate([s, np.zeros(len(fill), np.float32)])
-    return ids.astype(np.int64), s.astype(np.float32)
+    # non-candidates; whenever scoring stopped early the running k-th
+    # score was positive, so dropped/unscored rows cannot matter. The
+    # shared head applies the verified (score desc, id asc, zero-fill)
+    # contract.
+    return topk_select(ids, s, k, num_records)

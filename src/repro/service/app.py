@@ -9,6 +9,11 @@ Endpoints (JSON in/out unless noted):
                    → {"rid", "ids": [...], "scores": [...]}
     POST /ingest   NDJSON stream (one JSON id-array per line) or
                    {"records": [[...], ...]} → {"ingested", "chunks"}
+                   Windowed indexes accept a target epoch via the
+                   ``?epoch=N`` query param or an ``"epoch"`` JSON key.
+    POST /admin/retire  {"before": N} → {"retired", "epochs"} — drop
+                   window epochs < N (windowed indexes only; auth-gated,
+                   exempt from rate limits like /debug/*)
     POST /debug/explain  same body as /query with explain forced on
     GET  /debug/traces   → Chrome trace-event JSON of recent requests
                            (load in chrome://tracing or ui.perfetto.dev)
@@ -38,6 +43,7 @@ import json
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs
 
 import numpy as np
 
@@ -248,6 +254,30 @@ class ServiceApp:
                     help="Block-compressed postings bytes (0 until first "
                          "planned query builds them)")
 
+        # Time-windowed index gauges — only when the served index is a
+        # WindowManager (feature-detected via its ``windowed`` attr).
+        if getattr(srv.index, "windowed", False):
+            def _win(key):
+                return lambda: srv.index.window_stats()[key]
+
+            m.set_gauge("window_epochs", _win("epochs"),
+                        help="Live epoch snapshots in the window manager")
+            m.set_gauge("window_records", _win("records"),
+                        help="Records across all live epochs")
+            m.set_gauge("window_cached_views", _win("cached_windows"),
+                        help="Cached merged window views")
+            m.set_gauge("window_nbytes", lambda: srv.index.nbytes(),
+                        help="Bytes across epoch arenas and cached views")
+            m.set_counter_fn("window_merges_total", _win("merges_total"),
+                             help="Window merges performed (cache misses)")
+            m.set_counter_fn("window_retired_epochs_total",
+                             _win("retired_epochs_total"),
+                             help="Epoch snapshots retired via "
+                                  "retire()/admin endpoint")
+            m.set_counter_fn("window_retired_records_total",
+                             _win("retired_records_total"),
+                             help="Records dropped with retired epochs")
+
         # Fused device-pipeline counters (repro.planner.device): compile
         # cache behaviour and staging-pool reuse. Lazy per scrape — the
         # stats dict is plain ints, no jax import on the scrape path.
@@ -292,11 +322,12 @@ class ServiceApp:
     def handle(self, method: str, path: str, headers, rfile) -> Response:
         """One request → one response. ``headers`` is mapping-like;
         ``rfile`` a binary stream positioned at the body."""
-        endpoint = path.split("?")[0].rstrip("/") or "/"
+        raw, _, query = path.partition("?")
+        endpoint = raw.rstrip("/") or "/"
         t0 = self.clock()
         body = _Body(rfile, headers)
         try:
-            resp = self._route(method, endpoint, headers, body)
+            resp = self._route(method, endpoint, headers, body, query)
         except Exception as e:  # a handler crash must not kill the conn
             resp = _json_error(
                 500, f"internal error: {type(e).__name__}: {e}")
@@ -317,7 +348,7 @@ class ServiceApp:
         return resp
 
     def _route(self, method: str, endpoint: str, headers,
-               body: "_Body") -> Response:
+               body: "_Body", query: str = "") -> Response:
         if endpoint == "/healthz":
             return Response(200, {"status": "ok",
                                   "records": self.num_records,
@@ -331,6 +362,21 @@ class ServiceApp:
             if method != "GET":
                 return _json_error(405, f"{endpoint} is GET-only")
             return self._debug(endpoint)
+        if endpoint == "/admin/retire":
+            # Admin path: behind auth, outside the rate limits — window
+            # retirement must work while the service sheds load.
+            if not self.auth.allows(headers):
+                return _json_error(401, "missing or invalid auth token")
+            if method != "POST":
+                return _json_error(405, "/admin/retire is POST-only")
+            try:
+                return self._retire(json.loads(b"".join(body) or b"{}"))
+            except Overloaded as e:
+                return _json_error(429, str(e),
+                                   **{"Retry-After": f"{e.retry_after:.3f}"})
+            except (ValueError, KeyError, TypeError,
+                    json.JSONDecodeError) as e:
+                return _json_error(400, f"bad request: {e}")
         if endpoint not in ("/query", "/topk", "/ingest", "/debug/explain"):
             return _json_error(404, f"no route {endpoint!r}")
         if method != "POST":
@@ -351,7 +397,7 @@ class ServiceApp:
                                **{"Retry-After": f"{ra:.3f}"})
         try:
             if endpoint == "/ingest":
-                return self._ingest(headers, body)
+                return self._ingest(headers, body, query)
             payload = json.loads(b"".join(body) or b"{}")
             if endpoint == "/debug/explain":
                 payload = dict(payload)
@@ -407,14 +453,23 @@ class ServiceApp:
             "scores": [float(s) for s in res["topk_scores"]],
             "expired": p.expired})
 
-    def _ingest(self, headers, body: "_Body") -> Response:
+    def _ingest(self, headers, body: "_Body", query: str = "") -> Response:
+        qs = parse_qs(query)
+        epoch = int(qs["epoch"][0]) if qs.get("epoch") else None
         ctype = headers.get("Content-Type", "")
         if "json" in ctype and "ndjson" not in ctype:
             payload = json.loads(b"".join(body) or b"{}")
+            if epoch is None and payload.get("epoch") is not None:
+                epoch = int(payload["epoch"])
             lines = (json.dumps(r).encode()
                      for r in payload.get("records", []))
         else:
             lines = _iter_lines(body)
+        if epoch is not None and \
+                not getattr(self.server.index, "windowed", False):
+            raise ValueError(
+                "epoch requires a windowed index "
+                "(build with api.build_index(..., windowed=True))")
         chunk: list[np.ndarray] = []
         pending = []
         total = 0
@@ -423,24 +478,38 @@ class ServiceApp:
                 continue
             chunk.append(np.asarray(json.loads(line), np.int64))
             if len(chunk) >= self.ingest_chunk:
-                pending.append(self._submit_ingest_chunk(chunk))
+                pending.append(self._submit_ingest_chunk(chunk, epoch))
                 total += len(chunk)
                 chunk = []
         if chunk:
-            pending.append(self._submit_ingest_chunk(chunk))
+            pending.append(self._submit_ingest_chunk(chunk, epoch))
             total += len(chunk)
         for p in pending:
             self.server.result(p, timeout=self.result_timeout)
-        return Response(200, {"ingested": total, "chunks": len(pending)})
+        out = {"ingested": total, "chunks": len(pending)}
+        if epoch is not None:
+            out["epoch"] = epoch
+        return Response(200, out)
 
-    def _submit_ingest_chunk(self, chunk):
+    def _retire(self, body) -> Response:
+        """Drop window epochs strictly below ``body["before"]``."""
+        if not getattr(self.server.index, "windowed", False):
+            raise ValueError(
+                "/admin/retire requires a windowed index "
+                "(build with api.build_index(..., windowed=True))")
+        p = self.server.submit_retire(int(body["before"]))
+        res = self.server.result(p, timeout=self.result_timeout)
+        return Response(200, {"rid": p.rid, "retired": res["retired"],
+                              "epochs": res["epochs"]})
+
+    def _submit_ingest_chunk(self, chunk, epoch: int | None = None):
         """Admit one chunk, waiting out transient overload: an ingest
         stream mid-flight can't be half-dropped, so backpressure here is
         wait-and-retry, bounded by ``result_timeout``."""
         give_up = time.monotonic() + self.result_timeout
         while True:
             try:
-                return self.server.submit_ingest(chunk)
+                return self.server.submit_ingest(chunk, epoch=epoch)
             except Overloaded as e:
                 if time.monotonic() >= give_up:
                     raise

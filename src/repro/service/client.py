@@ -20,6 +20,14 @@ class ServiceError(RuntimeError):
 
 
 class ServiceClient:
+    """One persistent keep-alive connection to a running service.
+
+    Method-per-endpoint mirror of docs/SERVING.md §Endpoints: answers
+    are decoded JSON with array fields lifted back to numpy, non-200
+    responses raise :class:`ServiceError` (carrying the parsed body and
+    any ``Retry-After`` hint, so callers can implement backoff). Not
+    thread-safe — open one client per worker thread."""
+
     def __init__(self, host: str, port: int, token: str | None = None,
                  timeout: float = 60.0):
         self.host, self.port, self.token = host, port, token
@@ -88,6 +96,10 @@ class ServiceClient:
 
     def query(self, q_ids, threshold: float = 0.5,
               deadline_ms: float | None = None) -> np.ndarray:
+        """Record ids with estimated containment ≥ ``threshold`` —
+        bit-identical to the served index's direct ``batch_query``.
+        ``deadline_ms`` opts into the dense-fallback path when the
+        request waits longer than that in the flush queue."""
         payload = {"q": np.asarray(q_ids).tolist(), "threshold": threshold}
         if deadline_ms is not None:
             payload["deadline_ms"] = deadline_ms
@@ -113,25 +125,31 @@ class ServiceClient:
         return self._call("GET", "/debug/slow")
 
     def topk(self, q_ids, k: int = 10) -> tuple[np.ndarray, np.ndarray]:
+        """Top-``k`` ``(ids, scores)`` under the deterministic
+        (score desc, id asc) order shared by every execution route."""
         d = self._call("POST", "/topk",
                        {"q": np.asarray(q_ids).tolist(), "k": k})
         return (np.asarray(d["ids"], np.int64),
                 np.asarray(d["scores"], np.float32))
 
-    def ingest(self, records, stream: bool = True) -> dict:
+    def ingest(self, records, stream: bool = True,
+               epoch: int | None = None) -> dict:
         """NDJSON ingest. ``stream=True`` (default) sends chunked
         transfer-encoding from a line generator — the full batch never
         exists as one buffer on either side; the server re-chunks it
-        into flush-sized CSR ingests."""
+        into flush-sized CSR ingests. ``epoch`` targets a window epoch
+        on a windowed server (sent as the ``?epoch=N`` query param; the
+        server answers 400 if its index is not windowed)."""
+        path = "/ingest" if epoch is None else f"/ingest?epoch={int(epoch)}"
         lines = (json.dumps(np.asarray(r).tolist()).encode() + b"\n"
                  for r in records)
         headers = self._headers({"Content-Type": "application/x-ndjson"})
         if not stream:
-            return self._call("POST", "/ingest", raw_body=b"".join(lines),
+            return self._call("POST", path, raw_body=b"".join(lines),
                               headers={"Content-Type": "application/x-ndjson"})
         conn = self._connection()
         try:
-            conn.request("POST", "/ingest", body=lines, headers=headers,
+            conn.request("POST", path, body=lines, headers=headers,
                          encode_chunked=True)
             r = conn.getresponse()
             status, raw = r.status, r.read()
@@ -142,3 +160,8 @@ class ServiceClient:
         if status != 200:
             raise ServiceError(status, data)
         return data
+
+    def retire(self, before: int) -> dict:
+        """Drop window epochs ``< before`` on a windowed server; returns
+        ``{"retired": n, "epochs": [...]}`` (400 if not windowed)."""
+        return self._call("POST", "/admin/retire", {"before": int(before)})

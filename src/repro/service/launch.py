@@ -62,19 +62,35 @@ def add_service_args(ap: argparse.ArgumentParser):
                     help="records per streamed /ingest flush chunk")
     ap.add_argument("--plan", default="auto",
                     choices=("auto", "dense", "pruned"))
+    ap.add_argument("--windowed", action="store_true",
+                    help="serve a time-windowed index (WindowManager): "
+                         "/ingest accepts ?epoch=N and /admin/retire "
+                         "drops expired epochs")
 
 
 def build_service(args) -> ServiceApp:
-    mesh = make_mesh(tuple(int(x) for x in args.mesh.split("x")),
-                     ("data", "model"))
     recs = datasets.load(args.dataset, scale=args.scale)
     total = sum(len(r) for r in recs)
     t0 = time.time()
-    index = api.get_engine("gbkmv").build(
-        recs, int(total * args.budget_frac), seed=0, backend=args.backend)
-    sharded = ShardedIndex(index, mesh, backend=args.backend)
+    if getattr(args, "windowed", False):
+        # Time-windowed serving: the WindowManager speaks the same
+        # serve_batch protocol; /ingest?epoch=N opens epochs and
+        # /admin/retire drops expired ones. No sharding layer — windows
+        # merge lazily on the host before device queries.
+        sharded = api.get_engine("gbkmv").build(
+            recs, int(total * args.budget_frac), seed=0,
+            backend=args.backend, windowed=True, epoch=0)
+        desc = f"windowed index={sharded.nbytes()/1e6:.1f}MB"
+    else:
+        mesh = make_mesh(tuple(int(x) for x in args.mesh.split("x")),
+                         ("data", "model"))
+        index = api.get_engine("gbkmv").build(
+            recs, int(total * args.budget_frac), seed=0,
+            backend=args.backend)
+        sharded = ShardedIndex(index, mesh, backend=args.backend)
+        desc = f"index={index.nbytes()/1e6:.1f}MB"
     print(f"[service] {args.dataset}: m={len(recs)} "
-          f"index={index.nbytes()/1e6:.1f}MB built in {time.time()-t0:.2f}s")
+          f"{desc} built in {time.time()-t0:.2f}s")
     tracer = (Tracer(capacity=args.trace_capacity)
               if args.trace_capacity > 0 else None)
     server = AsyncSketchServer(

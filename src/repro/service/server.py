@@ -51,7 +51,7 @@ class Pending:
     Field names mirror ``serving.Request`` so ``execute_batch`` consumes
     these directly."""
 
-    kind: str                      # "query" | "topk" | "ingest"
+    kind: str                      # "query" | "topk" | "ingest" | "retire"
     q_ids: np.ndarray | None
     arrival: float
     rid: int = -1                  # assigned under the lock by _admit
@@ -59,6 +59,7 @@ class Pending:
     k: int = 0
     deadline: float | None = None  # absolute clock time, None = no SLO
     records: list | None = None    # ingest payload
+    epoch: int | None = None       # windowed-index target epoch (ingest)
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: dict | None = None
     error: Exception | None = None
@@ -173,11 +174,20 @@ class AsyncSketchServer:
             threshold=math.inf, k=int(k),
             deadline=self._deadline(now, deadline), explain=bool(explain)))
 
-    def submit_ingest(self, records) -> Pending:
+    def submit_ingest(self, records, epoch: int | None = None) -> Pending:
         now = self.clock()
         return self._admit(Pending(
             kind="ingest", q_ids=None, arrival=now,
-            records=[np.asarray(r) for r in records]))
+            records=[np.asarray(r) for r in records],
+            epoch=None if epoch is None else int(epoch)))
+
+    def submit_retire(self, before: int) -> Pending:
+        """Windowed-index admin: drop every epoch ``< before``. Routed
+        through the mutation lane so the flush worker stays the only
+        thread touching the index."""
+        now = self.clock()
+        return self._admit(Pending(
+            kind="retire", q_ids=None, arrival=now, epoch=int(before)))
 
     # -- flush loop --------------------------------------------------------
 
@@ -187,16 +197,16 @@ class AsyncSketchServer:
         FIFO order is the consistency model."""
         if not self._queue:
             return None, None
-        if self._queue[0].kind == "ingest":
+        if self._queue[0].kind in ("ingest", "retire"):
             batch = []
-            while self._queue and self._queue[0].kind == "ingest" \
+            while self._queue and self._queue[0].kind in ("ingest", "retire") \
                     and len(batch) < self.max_batch:
                 batch.append(self._queue.popleft())
             return batch, "ingest"
         run = 0
         expired = False
         for p in self._queue:
-            if p.kind == "ingest" or run >= self.max_batch:
+            if p.kind in ("ingest", "retire") or run >= self.max_batch:
                 break
             expired |= p.past_deadline(now)
             run += 1
@@ -353,8 +363,19 @@ class AsyncSketchServer:
         self.stats.record_batch([now - p.arrival for p in batch], "ingest")
         for p in batch:
             try:
+                if p.kind == "retire":
+                    retired = self.index.retire(p.epoch)
+                    p.result = {"retired": int(retired),
+                                "epochs": [int(e) for e in self.index.epochs]}
+                    p.done.set()
+                    continue
                 t0 = self.clock()
-                self.index.insert(p.records)
+                # Epoch only reaches windowed indexes; plain ShardedIndex
+                # keeps its narrower insert(records) signature.
+                if p.epoch is None:
+                    self.index.insert(p.records)
+                else:
+                    self.index.insert(p.records, epoch=p.epoch)
                 # Host insert latency stays out of flush_latency_hist —
                 # that histogram is the device-flush basis for the 429
                 # Retry-After hint.

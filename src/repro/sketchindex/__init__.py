@@ -8,3 +8,7 @@ from repro.sketchindex.distributed import (  # noqa: F401
     to_device_index,
 )
 from repro.sketchindex.build import distributed_tau  # noqa: F401
+from repro.sketchindex.windows import (  # noqa: F401
+    ArenaSnapshot,
+    WindowManager,
+)

@@ -1,0 +1,214 @@
+"""Arena merge/union: bit-identity to rebuild-from-concatenation.
+
+The contract under test (core/arena.merge_arenas and the per-engine
+doors merge_gbkmv / merge_gkmv / merge_kmv): parts built over disjoint
+record sets with the SAME budget merge into exactly the sketch a
+one-shot build over the concatenated records produces — values,
+lengths, thresholds, buffers, sizes, and spliced postings, bit for
+bit, under any merge grouping. GB-KMV additionally needs the budget to
+clear the tail floor ``budget >= m_total * (ceil(r/32) + 1)`` and every
+part to share the first part's ``top_elems`` (both are what the
+windowed index arranges in production).
+"""
+
+import numpy as np
+import pytest
+
+from repro import planner
+from repro.core import gbkmv, gkmv, kmv
+from repro.core.arena import SketchArena, merge_arenas
+
+GBKMV_R = 32  # 1 buffer word/record -> identity floor is budget >= 2*m
+
+
+def _records(rng, n, universe=3000, lo=4, hi=48):
+    return [rng.choice(universe, size=int(rng.integers(lo, hi)),
+                       replace=False) for _ in range(n)]
+
+
+def _split(recs, parts):
+    cut = (len(recs) + parts - 1) // parts
+    return [recs[i:i + cut] for i in range(0, len(recs), cut)]
+
+
+def assert_pack_equal(a, b, label=""):
+    a, b = SketchArena.from_pack(a), SketchArena.from_pack(b)
+    for field in ("values", "lengths", "thresh", "buf", "sizes"):
+        x = np.asarray(getattr(a, field))
+        y = np.asarray(getattr(b, field))
+        assert x.shape == y.shape and np.array_equal(x, y), \
+            f"{label}.{field}: merged != rebuilt"
+
+
+def _gbkmv_parts(slices, budget, seed=0):
+    """Epoch-style parts: the first build chooses top_elems, the rest pin
+    to it (merge_gbkmv refuses parts with differing buffer sets)."""
+    first = gbkmv.build_gbkmv(slices[0], budget, r=GBKMV_R, seed=seed)
+    parts = [first] + [
+        gbkmv.build_gbkmv(s, budget, r=GBKMV_R, seed=seed,
+                          top_elems=first.top_elems) for s in slices[1:]]
+    return parts, first.top_elems
+
+
+@pytest.mark.parametrize("nparts", [2, 4])
+def test_gbkmv_merge_matches_rebuild(nparts):
+    rng = np.random.default_rng(7)
+    recs = _records(rng, 48)
+    budget = 4 * len(recs) * 4          # comfortably above the 2*m floor
+    parts, top = _gbkmv_parts(_split(recs, nparts), budget)
+    merged = gbkmv.merge_gbkmv(parts, budget)
+    rebuilt = gbkmv.build_gbkmv(recs, budget, r=GBKMV_R, top_elems=top)
+    assert_pack_equal(merged.sketches, rebuilt.sketches, "gbkmv")
+    assert int(merged.tau) == int(rebuilt.tau)
+    assert np.array_equal(merged.top_elems, rebuilt.top_elems)
+
+
+@pytest.mark.parametrize("nparts", [2, 3])
+def test_gkmv_merge_matches_rebuild(nparts):
+    rng = np.random.default_rng(11)
+    recs = _records(rng, 40)
+    budget = 6 * len(recs)
+    parts = [gkmv.build_gkmv(s, budget) for s in _split(recs, nparts)]
+    assert_pack_equal(gkmv.merge_gkmv(parts, budget),
+                      gkmv.build_gkmv(recs, budget), "gkmv")
+
+
+def test_kmv_merge_matches_rebuild_uneven_parts():
+    # kmv's positional cut is rebuild-identical for ANY part sizes.
+    rng = np.random.default_rng(13)
+    recs = _records(rng, 37)
+    budget = 8 * len(recs)
+    slices = [recs[:5], recs[5:6], recs[6:30], recs[30:]]
+    parts = [kmv.build_kmv(s, budget) for s in slices]
+    assert_pack_equal(kmv.merge_kmv(parts, budget),
+                      kmv.build_kmv(recs, budget), "kmv")
+
+
+def test_merge_arenas_associative_grouping():
+    """((a+b)+c) == (a+(b+c)) == one-shot — the windowed index relies on
+    this to merge cached intermediate views freely."""
+    rng = np.random.default_rng(17)
+    recs = _records(rng, 36)
+    budget = 5 * len(recs)
+    a, b, c = (gkmv.build_gkmv(s, budget) for s in _split(recs, 3))
+    left, _ = merge_arenas([merge_arenas([a, b], budget)[0], c], budget)
+    right, _ = merge_arenas([a, merge_arenas([b, c], budget)[0]], budget)
+    flat, _ = merge_arenas([a, b, c], budget)
+    rebuilt = gkmv.build_gkmv(recs, budget)
+    for got, label in ((left, "left"), (right, "right"), (flat, "flat")):
+        assert_pack_equal(got, rebuilt, f"grouping-{label}")
+
+
+def test_merged_postings_spliced_not_rebuilt():
+    """Part 0's cached postings are tau'-truncated + appended-to; the
+    result must be block-for-block identical to a fresh inversion of the
+    merged arena."""
+    rng = np.random.default_rng(19)
+    recs = _records(rng, 44)
+    budget = 5 * len(recs)
+    parts = [gkmv.build_gkmv(s, budget) for s in _split(recs, 2)]
+    parts = [SketchArena.from_pack(p) for p in parts]
+    _ = parts[0].postings()                     # materialize the cache
+    merged = SketchArena.from_pack(gkmv.merge_gkmv(parts, budget))
+    assert merged._post is not None             # splice ran, not lazy
+    spliced = merged.postings()
+    fresh = planner.build_postings(merged)
+    assert planner.postings_equal(spliced, fresh)
+
+
+def test_gbkmv_merge_rejects_mismatched_parts():
+    rng = np.random.default_rng(23)
+    recs = _records(rng, 20)
+    budget = 8 * len(recs)
+    sa, sb = _split(recs, 2)
+    a = gbkmv.build_gbkmv(sa, budget, r=GBKMV_R, seed=0)
+    with pytest.raises(ValueError, match="seed"):
+        gbkmv.merge_gbkmv(
+            [a, gbkmv.build_gbkmv(sb, budget, r=GBKMV_R, seed=1)], budget)
+    with pytest.raises(ValueError, match="buffer"):
+        gbkmv.merge_gbkmv(
+            [a, gbkmv.build_gbkmv(sb, budget, r=GBKMV_R, seed=0)], budget)
+
+
+def test_api_queries_identical_after_merge():
+    """The merged arena answers exactly like the rebuilt one through the
+    full api/planner stack (threshold + top-k, numpy backend)."""
+    from repro import api
+
+    rng = np.random.default_rng(29)
+    recs = _records(rng, 40)
+    budget = 6 * len(recs)
+    parts = [gkmv.build_gkmv(s, budget) for s in _split(recs, 2)]
+    merged = api.GKMVEngine.wrap(gkmv.merge_gkmv(parts, budget),
+                                 backend="numpy")
+    rebuilt = api.get_engine("gkmv").build(recs, budget, backend="numpy")
+    queries = [recs[3], recs[25], rng.choice(3000, size=12, replace=False)]
+    for t in (0.3, 0.7):
+        for hm, hr in zip(merged.batch_query(queries, t),
+                          rebuilt.batch_query(queries, t)):
+            assert np.array_equal(hm, hr)
+    for q in queries:
+        im, sm = merged.topk(q, 5)
+        ir, sr = rebuilt.topk(q, 5)
+        assert np.array_equal(im, ir) and np.array_equal(sm, sr)
+
+
+# -- hypothesis: identity holds for arbitrary sizes and groupings ----------
+# Guarded import (not importorskip) so the deterministic tests above
+# still run in environments without hypothesis.
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+if st is not None:
+    settings.register_profile("merge", max_examples=20, deadline=None)
+    settings.load_profile("merge")
+
+    @st.composite
+    def corpus_and_cuts(draw):
+        m = draw(st.integers(min_value=4, max_value=24))
+        seed = draw(st.integers(min_value=0, max_value=2**16))
+        rng = np.random.default_rng(seed)
+        recs = _records(rng, m, universe=600, lo=2, hi=24)
+        ncuts = draw(st.integers(min_value=1, max_value=3))
+        cuts = sorted(draw(st.sets(
+            st.integers(min_value=1, max_value=m - 1),
+            min_size=ncuts, max_size=ncuts)))
+        extra = draw(st.integers(min_value=0, max_value=4 * m))
+        return recs, cuts, extra
+
+    @given(corpus_and_cuts())
+    def test_gkmv_merge_identity_property(case):
+        recs, cuts, extra = case
+        budget = 2 * len(recs) + extra  # any shared budget works for gkmv
+        bounds = [0] + cuts + [len(recs)]
+        slices = [recs[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+        parts = [gkmv.build_gkmv(s, budget) for s in slices]
+        assert_pack_equal(gkmv.merge_gkmv(parts, budget),
+                          gkmv.build_gkmv(recs, budget), "gkmv-prop")
+
+    @given(corpus_and_cuts())
+    def test_gbkmv_merge_identity_property(case):
+        recs, cuts, extra = case
+        m = len(recs)
+        # identity regime: budget clears the m*(ceil(r/32)+1) tail floor
+        budget = m * (GBKMV_R // 32 + 1) + m + extra
+        bounds = [0] + cuts + [m]
+        slices = [recs[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+        parts, top = _gbkmv_parts(slices, budget)
+        merged = gbkmv.merge_gbkmv(parts, budget)
+        if len(parts) > 2:              # grouping must not matter
+            head = gbkmv.merge_gbkmv(parts[:2], budget)
+            merged2 = gbkmv.merge_gbkmv([head] + parts[2:], budget)
+            assert_pack_equal(merged.sketches, merged2.sketches,
+                              "gbkmv-assoc")
+            assert int(merged.tau) == int(merged2.tau)
+        rebuilt = gbkmv.build_gbkmv(recs, budget, r=GBKMV_R, top_elems=top)
+        assert_pack_equal(merged.sketches, rebuilt.sketches, "gbkmv-prop")
+        assert int(merged.tau) == int(rebuilt.tau)
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_merge_identity_property():
+        pass

@@ -1,0 +1,189 @@
+"""WindowManager: sliding-window queries over mergeable epoch arenas.
+
+Contracts under test (sketchindex/windows.py, api ``windowed=True``):
+windowed answers equal a one-shot index over the window's records
+(merge bit-identity surfaced at the api level), epoch lifecycle is
+append-only, retirement drops epochs and invalidates cached merged
+views, serve_batch matches direct query/topk, and the snapshot
+directory round-trips.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import gbkmv
+from repro.sketchindex import WindowManager
+
+BACKEND = "numpy"
+
+
+def _records(rng, n, universe=2500, lo=4, hi=40):
+    return [rng.choice(universe, size=int(rng.integers(lo, hi)),
+                       replace=False) for _ in range(n)]
+
+
+@pytest.fixture
+def corpus():
+    rng = np.random.default_rng(42)
+    return _records(rng, 60), rng
+
+
+def _windowed(engine, recs, budget, **cfg):
+    wm = api.get_engine(engine).build(recs[:20], budget, backend=BACKEND,
+                                      windowed=True, epoch=0, **cfg)
+    wm.ingest(recs[20:40], epoch=1)
+    wm.ingest(recs[40:], epoch=2)
+    return wm
+
+
+def test_windowed_build_returns_manager(corpus):
+    recs, _ = corpus
+    wm = api.get_engine("gbkmv").build(recs, 1500, backend=BACKEND,
+                                       windowed=True)
+    assert isinstance(wm, WindowManager)
+    assert wm.windowed is True          # the serving feature-detect flag
+    assert wm.epochs == [0] and wm.num_records == len(recs)
+
+
+@pytest.mark.parametrize("engine", ["gkmv", "kmv"])
+def test_windowed_equals_one_shot(corpus, engine):
+    """Full-window answers == an index built over all records in one
+    shot (gkmv/kmv merge identity needs only the shared budget)."""
+    recs, rng = corpus
+    budget = 6 * len(recs)
+    wm = _windowed(engine, recs, budget)
+    flat = api.get_engine(engine).build(recs, budget, backend=BACKEND)
+    queries = [recs[5], recs[30], recs[55],
+               rng.choice(2500, size=10, replace=False)]
+    for t in (0.3, 0.6):
+        for hw, hf in zip(wm.batch_query(queries, t),
+                          flat.batch_query(queries, t)):
+            assert np.array_equal(hw, hf)
+    for q in queries:
+        iw, sw = wm.topk(q, 7)
+        if_, sf = flat.topk(q, 7)
+        assert np.array_equal(iw, if_) and np.array_equal(sw, sf)
+
+
+def test_windowed_gbkmv_equals_pinned_rebuild(corpus):
+    """GB-KMV identity: epochs pin epoch 0's buffer set, so the merged
+    window equals a one-shot build with top_elems pinned the same way
+    (budget above the m*(ceil(r/32)+1) tail floor)."""
+    recs, _ = corpus
+    budget = 4 * len(recs)
+    wm = _windowed("gbkmv", recs, budget, r=32)
+    top = wm._frozen_top
+    flat = api.GBKMVEngine.wrap(
+        gbkmv.build_gbkmv(recs, budget, r=32, top_elems=top),
+        budget=budget, backend=BACKEND)
+    merged = wm.index()                 # the cached merged view
+    assert np.array_equal(np.asarray(merged.core.sketches.values),
+                          np.asarray(flat.core.sketches.values))
+    assert int(merged.core.tau) == int(flat.core.tau)
+    for q in (recs[3], recs[45]):
+        assert np.array_equal(wm.query(q, 0.5), flat.query(q, 0.5))
+
+
+def test_window_bounds_select_epochs(corpus):
+    recs, _ = corpus
+    wm = _windowed("gkmv", recs, 360)
+    solo = api.get_engine("gkmv").build(recs[20:40], 360, backend=BACKEND)
+    q = recs[25]
+    # ids inside window (1, 1) are epoch-relative row numbers
+    assert np.array_equal(wm.query(q, 0.4, window=(1, 1)),
+                          solo.query(q, 0.4))
+    with pytest.raises(ValueError, match="no live epochs"):
+        wm.query(q, 0.4, window=(7, 9))
+
+
+def test_epochs_are_append_only(corpus):
+    recs, _ = corpus
+    wm = _windowed("gbkmv", recs[:50], 1200)
+    with pytest.raises(ValueError, match="sealed"):
+        wm.ingest(recs[50:], epoch=1)   # current epoch is 2
+    before = wm.num_records
+    wm.ingest(recs[50:], epoch=2)       # open epoch extends in place
+    assert wm.num_records == before + 10 and wm.epochs == [0, 1, 2]
+
+
+def test_retire_drops_epochs_and_caches(corpus):
+    recs, _ = corpus
+    wm = _windowed("gkmv", recs, 360)
+    _ = wm.query(recs[5], 0.4)          # builds + caches the 3-epoch view
+    assert wm.window_stats()["cached_windows"] == 1
+    merges_before = wm.merges_total
+    assert wm.retire(before=1) == 1
+    assert wm.epochs == [1, 2]
+    assert wm.window_stats()["cached_windows"] == 0     # invalidated
+    stats = wm.window_stats()
+    assert stats["retired_epochs_total"] == 1
+    assert stats["retired_records_total"] == 20
+    # the surviving window answers like a fresh 2-epoch union
+    hits = wm.query(recs[25], 0.4)
+    assert wm.merges_total == merges_before + 1
+    flat = api.get_engine("gkmv").build(recs[20:], 360, backend=BACKEND)
+    assert np.array_equal(hits, flat.query(recs[25], 0.4))
+    assert wm.retire(before=10) == 2
+    with pytest.raises(ValueError, match="no live epochs"):
+        wm.query(recs[5], 0.4)
+
+
+def test_ingest_invalidates_cached_views(corpus):
+    recs, rng = corpus
+    wm = _windowed("gkmv", recs[:50], 300)
+    q = recs[10]
+    _ = wm.query(q, 0.4)
+    assert wm.window_stats()["cached_windows"] == 1
+    wm.ingest(recs[50:], epoch=2)       # extend the open epoch
+    assert wm.window_stats()["cached_windows"] == 0
+    flat = api.get_engine("gkmv").build(recs, 300, backend=BACKEND)
+    assert np.array_equal(wm.query(q, 0.4), flat.query(q, 0.4))
+
+
+def test_serve_batch_matches_direct(corpus):
+    recs, rng = corpus
+    wm = _windowed("gbkmv", recs, 1500)
+    queries = [recs[2], recs[33], rng.choice(2500, size=8, replace=False)]
+    out = wm.serve_batch(queries, [0.5, 0.3, 0.5], k=4)
+    for q, t, res in zip(queries, [0.5, 0.3, 0.5], out):
+        assert np.array_equal(res["hits"], wm.query(q, t))
+        ids, scores = wm.topk(q, 4)
+        assert np.array_equal(res["topk_ids"], ids)
+        assert np.array_equal(res["topk_scores"], scores)
+
+
+def test_save_load_roundtrip(corpus, tmp_path):
+    recs, rng = corpus
+    wm = _windowed("gbkmv", recs, 1500)
+    wm.retire(before=1)
+    d = tmp_path / "snaps"
+    wm.save(str(d))
+    back = WindowManager.load(str(d))
+    assert back.engine == "gbkmv" and back.budget == wm.budget
+    assert back.epochs == wm.epochs
+    assert back.num_records == wm.num_records
+    assert back.retired_epochs_total == 1
+    assert np.array_equal(back._frozen_top, wm._frozen_top)
+    for q in (recs[25], recs[50], rng.choice(2500, size=9, replace=False)):
+        assert np.array_equal(back.query(q, 0.5), wm.query(q, 0.5))
+        bi, bs = back.topk(q, 5)
+        wi, ws = wm.topk(q, 5)
+        assert np.array_equal(bi, wi) and np.array_equal(bs, ws)
+    # gbkmv's newest epoch re-opens: dynamic insert keeps answering
+    back.ingest(_records(rng, 5), epoch=2)
+    assert back.num_records == wm.num_records + 5
+
+
+def test_windowed_kwarg_rejected_for_unbudgeted_engines():
+    with pytest.raises(ValueError, match="windowed"):
+        WindowManager(engine="exact")
+
+
+def test_nbytes_counts_snapshots_and_views(corpus):
+    recs, _ = corpus
+    wm = _windowed("gkmv", recs, 360)
+    base = wm.nbytes()
+    assert base == sum(s.nbytes() for s in wm._snaps.values())
+    _ = wm.query(recs[0], 0.4)          # materializes a merged view
+    assert wm.nbytes() > base

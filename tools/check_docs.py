@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Docs gate for CI: link resolution + executable snippets.
+
+Two checks, both designed to catch documentation drift the moment it
+happens rather than when a reader trips over it:
+
+1. **Link lint** — every relative markdown link in `*.md` (repo root
+   and `docs/`) must resolve to a file or directory in the repo.
+   External (`http(s)://`, `mailto:`) and intra-page (`#...`) targets
+   are skipped; `path#anchor` checks only the path.
+2. **Snippet execution** — the fenced ``python`` blocks in the sections
+   listed in ``SNIPPET_TARGETS`` are executed top to bottom in a fresh
+   namespace (numpy backend only — the CI job runs on plain CPU). A
+   snippet that raises, including a failed ``assert``, fails the job,
+   so the quickstarts cannot rot.
+
+Run locally:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: (markdown file, header prefix) sections whose ``python`` fences run.
+SNIPPET_TARGETS = [
+    ("docs/API.md", "## Construction"),
+    ("docs/ARCHITECTURE.md", "## Quickstart"),
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks so links inside snippets aren't linted."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def check_links(md_files: list[pathlib.Path]) -> list[str]:
+    errors = []
+    for md in md_files:
+        for target in _LINK.findall(_strip_code(md.read_text())):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def _section(text: str, header_prefix: str) -> str:
+    """The lines from the first header matching ``header_prefix`` up to
+    the next header of the same or higher level."""
+    lines = text.splitlines()
+    start = next((i for i, ln in enumerate(lines)
+                  if ln.startswith(header_prefix)), None)
+    if start is None:
+        raise KeyError(header_prefix)
+    level = len(lines[start]) - len(lines[start].lstrip("#"))
+    fenced = False   # '#' inside a code fence is a comment, not a header
+    for end in range(start + 1, len(lines)):
+        ln = lines[end]
+        if ln.startswith("```"):
+            fenced = not fenced
+        if (not fenced and ln.startswith("#")
+                and (len(ln) - len(ln.lstrip("#"))) <= level):
+            return "\n".join(lines[start:end])
+    return "\n".join(lines[start:])
+
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def run_snippets() -> list[str]:
+    errors = []
+    for rel, header in SNIPPET_TARGETS:
+        md = ROOT / rel
+        try:
+            section = _section(md.read_text(), header)
+        except KeyError:
+            errors.append(f"{rel}: section {header!r} not found "
+                          "(SNIPPET_TARGETS is stale)")
+            continue
+        blocks = _FENCE.findall(section)
+        if not blocks:
+            errors.append(f"{rel} {header!r}: no fenced python snippet")
+        for i, code in enumerate(blocks):
+            print(f"running {rel} {header!r} snippet {i + 1}/{len(blocks)}"
+                  f" ({len(code.splitlines())} lines)")
+            try:
+                exec(compile(code, f"{rel}#{header}", "exec"),
+                     {"__name__": "__docsnippet__"})
+            except Exception:
+                errors.append(f"{rel} {header!r} snippet {i + 1} raised:\n"
+                              f"{traceback.format_exc()}")
+    return errors
+
+
+def main() -> int:
+    md_files = sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("*.md"))
+    errors = check_links(md_files)
+    print(f"link lint: {len(md_files)} files, {len(errors)} broken")
+    errors += run_snippets()
+    if errors:
+        print("\n".join(["", "DOCS CHECK FAILED:"] + errors))
+        return 1
+    print("docs check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
