@@ -29,12 +29,20 @@ default no-op path must cost ≤ ``TRACING_OVERHEAD_CAP`` of QPS (the
 load phase itself runs with a live tracer, and the resulting request
 traces are exported as a Chrome trace-event artifact
 (``reports/bench/serving_trace.json`` — load in chrome://tracing).
+
+The durability tax is gated the same way: a paired ingest comparison
+through the mutation lane with a WAL at ``fsync="batch"`` (group
+commit) vs no data dir must cost ≤ ``DURABILITY_OVERHEAD_CAP`` of
+ingest throughput — crash-safe acks are supposed to ride the existing
+batch cadence, not halve it (docs/SERVING.md §Durability).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import shutil
+import tempfile
 import threading
 import time
 
@@ -47,7 +55,8 @@ from repro.launch.mesh import make_mesh
 from repro.obs import StageProfiler, Tracer, attach
 from repro.sketchindex import ShardedIndex
 from repro.service import (
-    AsyncSketchServer, ServiceApp, ServiceClient, ServiceError, ServiceHandle)
+    AsyncSketchServer, Durability, ServiceApp, ServiceClient, ServiceError,
+    ServiceHandle)
 
 USERS = 100_000            # simulated user population (both profiles)
 AUTH_TOKEN = "bench-serving-token"
@@ -55,6 +64,7 @@ QPS_TOLERANCE = 0.6        # achieved QPS ≥ 0.6 × normalized baseline
 P99_TOLERANCE = 2.5        # p99 ≤ 2.5 × normalized baseline
 MAX_SHED_RATE = 0.05       # the un-overloaded profile must not shed
 TRACING_OVERHEAD_CAP = 0.05   # tracing+profiling may cost ≤ 5% of QPS
+DURABILITY_OVERHEAD_CAP = 0.10  # WAL fsync="batch" may cost ≤ 10% ingest
 
 
 def _zipf_ranks(n: int, alpha: float, size: int,
@@ -206,6 +216,66 @@ def _tracing_overhead(sharded, queries, batch: int = 16,
             "overhead_frac": round(max(0.0, 1.0 - qps_on / qps_off), 4)}
 
 
+def _durability_tax(backend: str, groups: int = 2, group_size: int = 8,
+                    chunk: int = 8, repeats: int = 5) -> dict:
+    """Paired ingest throughput through the mutation lane with the WAL
+    on (``fsync="batch"``, i.e. the group-commit production default) vs
+    no data dir at all — the durability tax an operator pays for
+    crash-safe acks. Same deterministic step-driven schedule on two
+    fresh servers over identical indexes; interleaved best-of-N so
+    scheduler drift hits both arms equally."""
+    recs = generate_dataset(300, 5000, alpha_freq=0.8, alpha_size=1.0,
+                            size_min=10, size_max=100, seed=9)
+    total = sum(len(r) for r in recs)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    tmp = tempfile.mkdtemp(prefix="bench_serving_wal_")
+
+    def make_server(data_dir):
+        index = api.get_engine("gbkmv").build(recs, int(total * 0.1),
+                                              backend=backend)
+        sharded = ShardedIndex(index, mesh, backend=backend)
+        dur = (Durability(data_dir, fsync="batch")
+               if data_dir is not None else None)
+        return AsyncSketchServer(sharded, max_batch=group_size, max_wait=0.0,
+                                 profile=False, durability=dur)
+
+    try:
+        srv_off = make_server(None)
+        srv_on = make_server(os.path.join(tmp, "data"))
+        rng = np.random.default_rng(7)
+        batches = [[rng.integers(0, 10_000, 16) for _ in range(chunk)]
+                   for _ in range(groups * group_size)]
+
+        def one_pass(srv):
+            # group_size ingests per step → one group-commit fsync each.
+            for g in range(0, len(batches), group_size):
+                for b in batches[g:g + group_size]:
+                    srv.submit_ingest(b)
+                srv.step(force=True)
+
+        one_pass(srv_off), one_pass(srv_on)     # warm both arms
+        best_off = best_on = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            one_pass(srv_off)
+            best_off = min(best_off, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            one_pass(srv_on)
+            best_on = min(best_on, time.perf_counter() - t0)
+        n_records = len(batches) * chunk
+        rps_off = n_records / best_off
+        rps_on = n_records / best_on
+        wal = srv_on.durability.wal
+        return {"fsync": "batch",
+                "ingest_rps_off": round(rps_off, 2),
+                "ingest_rps_on": round(rps_on, 2),
+                "overhead_frac": round(max(0.0, 1.0 - rps_on / rps_off), 4),
+                "fsyncs_per_pass": groups,
+                "wal_nbytes": int(wal.nbytes())}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def _direct_qps(sharded, queries, batch: int = 16, repeats: int = 3) -> float:
     """Reference throughput of the same workload through serve_batch
     directly (no HTTP, no batcher) — the machine-speed normalizer."""
@@ -276,6 +346,7 @@ def run(quick: bool = True, json_out: str | None = None,
     rate = float(np.clip(0.7 * direct, 4.0, rate_cap))
 
     tracing = _tracing_overhead(sharded, parity_queries)
+    durability = _durability_tax(backend)
 
     server = AsyncSketchServer(sharded, max_batch=16, max_wait=0.003,
                                max_inflight=512, default_deadline=1.0,
@@ -339,6 +410,10 @@ def run(quick: bool = True, json_out: str | None = None,
     print(f"  tracing tax: {tracing['overhead_frac']:.1%} "
           f"({tracing['qps_off']:.0f} → {tracing['qps_on']:.0f} q/s with "
           f"trace+profile attached; cap {TRACING_OVERHEAD_CAP:.0%})")
+    print(f"  durability tax: {durability['overhead_frac']:.1%} "
+          f"({durability['ingest_rps_off']:.0f} → "
+          f"{durability['ingest_rps_on']:.0f} rec/s with the WAL at "
+          f"fsync=batch; cap {DURABILITY_OVERHEAD_CAP:.0%})")
 
     # Request traces from the load phase → Chrome trace-event artifact.
     chrome = server.tracer.chrome_trace()
@@ -354,6 +429,12 @@ def run(quick: bool = True, json_out: str | None = None,
             f"tracing overhead {tracing['overhead_frac']:.1%} > cap "
             f"{TRACING_OVERHEAD_CAP:.0%} ({tracing['qps_off']:.1f} q/s off "
             f"vs {tracing['qps_on']:.1f} q/s on)")
+    if durability["overhead_frac"] > DURABILITY_OVERHEAD_CAP:
+        failures.append(
+            f"durability tax {durability['overhead_frac']:.1%} > cap "
+            f"{DURABILITY_OVERHEAD_CAP:.0%} "
+            f"({durability['ingest_rps_off']:.1f} rec/s without the WAL "
+            f"vs {durability['ingest_rps_on']:.1f} rec/s at fsync=batch)")
     if baseline and os.path.exists(baseline):
         with open(baseline) as f:
             failures += check_baseline(row, json.load(f), direct)
@@ -374,6 +455,7 @@ def run(quick: bool = True, json_out: str | None = None,
             },
             "direct_qps": round(direct, 2),
             "tracing": tracing,
+            "durability": durability,
             "rows": [row],
             "by_kind": by_kind,
             "metrics_sample": [ln for ln in metrics_text.splitlines()

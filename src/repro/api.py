@@ -138,18 +138,49 @@ def _windowed_build(engine: str, records, budget, backend: str,
     return wm
 
 
+class CorruptIndexError(ValueError):
+    """A saved index file exists but cannot be decoded (truncated
+    download, torn write, wrong file). Subclasses ``ValueError`` so
+    pre-existing ``except ValueError`` call sites keep working; a
+    missing file still raises ``FileNotFoundError``."""
+
+    def __init__(self, path: str, reason: str):
+        super().__init__(f"corrupt or invalid index file {path!r}: {reason}")
+        self.path = path
+        self.reason = reason
+
+
 def load_index(path: str):
     """Load any index saved via ``Index.save`` (dispatches on the stored
-    engine name)."""
-    with np.load(path, allow_pickle=False) as data:
-        d = {k: data[k] for k in data.files}
+    engine name). A file that exists but cannot be decoded — truncated
+    npz, torn write, non-index zip — raises :class:`CorruptIndexError`
+    naming the file instead of leaking a raw ``zipfile``/``KeyError``."""
+    import zipfile
+
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            d = {k: data[k] for k in data.files}
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, ValueError, KeyError, OSError, EOFError) as e:
+        raise CorruptIndexError(
+            path, f"{type(e).__name__}: {e}") from e
     if "engine" not in d:
-        raise ValueError(f"{path} is not a repro.api index (no 'engine' key)")
+        raise CorruptIndexError(path, "not a repro.api index "
+                                      "(no 'engine' key)")
     engine = str(d.pop("engine"))
-    cls = get_engine(engine)
+    try:
+        cls = get_engine(engine)
+    except ValueError as e:
+        raise CorruptIndexError(path, str(e)) from e
     if not hasattr(cls, "_load"):
         raise ValueError(f"engine {engine!r} does not support load")
-    return cls._load(d)
+    try:
+        return cls._load(d)
+    except (KeyError, ValueError, IndexError) as e:
+        raise CorruptIndexError(
+            path, f"payload missing or malformed ({type(e).__name__}: "
+                  f"{e})") from e
 
 
 # ---------------------------------------------------------------------------

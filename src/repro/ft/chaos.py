@@ -1,0 +1,186 @@
+"""Fault-injection harness for the durability layer (stdlib only).
+
+The WAL and snapshot code thread every dangerous IO step through a
+**named fault point** (``chaos.FAULT_POINTS`` is the canonical list, and
+what the kill-and-recover test matrix iterates). With no monkey
+installed a fault point is one module-global ``is None`` check — the
+production cost of the harness is nothing.
+
+A test installs a :class:`ChaosMonkey` and arms points with actions:
+
+    crash      raise :class:`SimulatedCrash` *at* the point — the
+               in-process stand-in for ``kill -9`` between two
+               instructions. Durable state is exactly the bytes already
+               handed to the OS (the WAL writes unbuffered, so nothing
+               hides in user-space buffers).
+    torn       (write points only) write a prefix of the payload, then
+               crash — a torn record / torn file, the on-disk state a
+               real crash mid-``write(2)`` leaves behind.
+    error      raise ``OSError(errno, ...)`` — disk-full (ENOSPC),
+               read-only remounts (EROFS), pulled volumes (EIO). The
+               serving stack must degrade, not die.
+    delay      sleep at the point — slow IO (a saturating disk, NFS
+               hiccups); latency accounting must survive it.
+
+Actions arm once by default (``times=1``) so recovery code re-running
+the same path does not re-crash; ``times=-1`` keeps a point hot.
+
+    monkey = ChaosMonkey().arm("wal.append.pre_fsync", "crash")
+    with chaos.installed(monkey):
+        ...            # the armed append raises SimulatedCrash
+
+``SimulatedCrash`` subclasses ``BaseException`` deliberately: the
+serving stack's ``except Exception`` guards (which keep a request error
+from killing a connection) must not swallow a simulated kill — it has
+to unwind to the test harness like a real SIGKILL unwinds to init.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+#: Every fault point the durability layer declares, in WAL-lifecycle
+#: order. The kill-and-recover matrix in tests/test_durability.py
+#: iterates exactly this list — adding a point here without recovery
+#: coverage fails that test by construction.
+FAULT_POINTS = (
+    "wal.append.pre_write",      # before the record frame hits the file
+    "wal.append.write",          # the frame write itself (torn target)
+    "wal.append.pre_fsync",      # frame written, not yet durable
+    "wal.append.post_fsync",     # durable, not yet acked/applied
+    "wal.rotate.pre_open",       # segment sealed, next not yet open
+    "snapshot.pre_write",        # before any snapshot byte exists
+    "snapshot.pre_rename",       # tmp dir complete, not yet visible
+    "snapshot.post_rename",      # snapshot live, WAL not yet truncated
+    "wal.truncate.pre_unlink",   # covered segments about to drop
+)
+
+
+class SimulatedCrash(BaseException):
+    """The process 'dies' here — everything after never happened."""
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated crash at fault point {point!r}")
+        self.point = point
+
+
+class ChaosMonkey:
+    """Armed fault plan: ``{point: (action, kwargs, remaining_times)}``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._plan: dict[str, list] = {}
+        self.hits: list[str] = []       # every reached-and-fired point
+
+    def arm(self, point: str, action: str = "crash", *, times: int = 1,
+            keep_bytes: int | None = None, errno_: int | None = None,
+            delay_s: float = 0.0) -> "ChaosMonkey":
+        """Arm ``point``. ``times=-1`` keeps it armed forever;
+        ``keep_bytes`` (torn) caps how much of the payload survives;
+        ``errno_`` picks the OSError; ``delay_s`` the sleep."""
+        if point not in FAULT_POINTS:
+            raise ValueError(f"unknown fault point {point!r}; "
+                             f"known: {FAULT_POINTS}")
+        if action not in ("crash", "torn", "error", "delay"):
+            raise ValueError(f"unknown chaos action {action!r}")
+        self._plan[point] = [action, {"keep_bytes": keep_bytes,
+                                      "errno": errno_,
+                                      "delay_s": delay_s}, int(times)]
+        return self
+
+    def _take(self, point: str):
+        """Consume one firing of ``point`` (None when unarmed/spent)."""
+        with self._lock:
+            entry = self._plan.get(point)
+            if entry is None or entry[2] == 0:
+                return None
+            if entry[2] > 0:
+                entry[2] -= 1
+            self.hits.append(point)
+            return entry[0], entry[1]
+
+    # -- fault-point entry hooks (called by the durability layer) ------
+
+    def reach(self, point: str) -> None:
+        """A plain (non-write) fault point."""
+        fired = self._take(point)
+        if fired is None:
+            return
+        action, kw = fired
+        if action == "delay":
+            time.sleep(kw["delay_s"])
+        elif action == "error":
+            import errno as errno_mod
+            raise OSError(kw["errno"] or errno_mod.ENOSPC,
+                          f"injected IO error at {point}")
+        else:                           # crash / torn degrade to crash
+            raise SimulatedCrash(point)
+
+    def write(self, fileobj, data: bytes, point: str) -> None:
+        """A write-shaped fault point: 'torn' leaves a prefix of
+        ``data`` on disk and crashes; every other action behaves like
+        :meth:`reach` *before* the bytes land."""
+        fired = self._take(point)
+        if fired is not None:
+            action, kw = fired
+            if action == "torn":
+                keep = kw["keep_bytes"]
+                keep = len(data) // 2 if keep is None else int(keep)
+                fileobj.write(data[:max(0, min(keep, len(data) - 1))])
+                raise SimulatedCrash(point)
+            if action == "delay":
+                time.sleep(kw["delay_s"])
+            elif action == "error":
+                import errno as errno_mod
+                raise OSError(kw["errno"] or errno_mod.ENOSPC,
+                              f"injected IO error at {point}")
+            else:
+                raise SimulatedCrash(point)
+        fileobj.write(data)
+
+
+# -- module-global installation (one None-check on the fast path) -----------
+
+_MONKEY: ChaosMonkey | None = None
+
+
+def install(monkey: ChaosMonkey) -> ChaosMonkey:
+    global _MONKEY
+    _MONKEY = monkey
+    return monkey
+
+
+def uninstall() -> None:
+    global _MONKEY
+    _MONKEY = None
+
+
+class installed:
+    """``with chaos.installed(monkey): ...`` — scoped installation."""
+
+    def __init__(self, monkey: ChaosMonkey):
+        self.monkey = monkey
+
+    def __enter__(self) -> ChaosMonkey:
+        return install(self.monkey)
+
+    def __exit__(self, *exc):
+        uninstall()
+        return False
+
+
+def point(name: str) -> None:
+    """Reach fault point ``name`` (no-op unless a monkey armed it)."""
+    m = _MONKEY
+    if m is not None:
+        m.reach(name)
+
+
+def chaos_write(fileobj, data: bytes, name: str) -> None:
+    """Write ``data`` through fault point ``name`` (torn-write capable)."""
+    m = _MONKEY
+    if m is None:
+        fileobj.write(data)
+    else:
+        m.write(fileobj, data, name)

@@ -8,6 +8,10 @@ in front of the sharded GB-KMV index.
     with ServiceHandle(app, port=8080):
         ...                      # /ingest /query /topk /healthz /metrics
 
+Durable serving mounts a data dir (``--data-dir`` on the CLI): ingest
+then write-ahead-logs before applying, snapshots are atomic, and a
+restart recovers snapshot + WAL tail — see docs/SERVING.md §Durability.
+
 See docs/SERVING.md for the endpoint and metrics reference,
 docs/OBSERVABILITY.md for tracing/explain/profiling, and
 ``python -m repro.service.launch --help`` for the CLI entry point.
@@ -21,3 +25,5 @@ from repro.service.middleware import (  # noqa: F401
     AuthToken, TenantBuckets, TokenBucket, tenant_id)
 from repro.service.server import (  # noqa: F401
     AsyncSketchServer, Overloaded, Pending)
+from repro.service.wal import (  # noqa: F401
+    Durability, IdempotencyCache, ReadOnly, WalCorruption, WriteAheadLog)

@@ -11,15 +11,31 @@ Endpoints (JSON in/out unless noted):
                    {"records": [[...], ...]} → {"ingested", "chunks"}
                    Windowed indexes accept a target epoch via the
                    ``?epoch=N`` query param or an ``"epoch"`` JSON key.
+                   An ``Idempotency-Key`` header (or ``"idempotency_key"``
+                   JSON key) makes retries safe: chunks already applied
+                   inside the dedupe window are skipped and the response
+                   gains ``"deduped_chunks"``.
     POST /admin/retire  {"before": N} → {"retired", "epochs"} — drop
                    window epochs < N (windowed indexes only; auth-gated,
                    exempt from rate limits like /debug/*)
+    POST /admin/snapshot  → {"wal_seq", "path", ...} — atomic snapshot
+                   through the mutation lane, then WAL truncation
+                   (needs --data-dir; auth-gated, outside rate limits)
     POST /debug/explain  same body as /query with explain forced on
     GET  /debug/traces   → Chrome trace-event JSON of recent requests
                            (load in chrome://tracing or ui.perfetto.dev)
     GET  /debug/slow     → the slow-query log (threshold-configurable)
-    GET  /healthz  → {"status": "ok", "records", "inflight"}   (open)
-    GET  /metrics  → Prometheus text format                    (open)
+    GET  /healthz  → {"status": "ok", "records", "inflight",
+                      "writable"} — liveness, always 200         (open)
+    GET  /readyz   → readiness: 200 while writable, 503 once the
+                     server degrades to read-only serving        (open)
+    GET  /metrics  → Prometheus text format                      (open)
+
+Durability degradation: when the data dir fails a write (disk full,
+read-only remount) the flush worker flips the server into sticky
+read-only — mutations (`/ingest`, `/admin/retire`, `/admin/snapshot`)
+answer **503**, queries keep answering 200 from the in-memory index,
+and `/readyz` goes 503 so a load balancer drains writes.
 
 Middleware runs before admission: bearer-token auth (401), a global
 token-bucket rate limit, and a per-tenant (per-auth-token) bucket —
@@ -50,7 +66,7 @@ import numpy as np
 from repro.service.metrics import Metrics
 from repro.service.middleware import (AuthToken, TenantBuckets, TokenBucket,
                                       tenant_id)
-from repro.service.server import AsyncSketchServer, Overloaded
+from repro.service.server import AsyncSketchServer, Overloaded, ReadOnly
 
 
 class Response:
@@ -232,6 +248,67 @@ class ServiceApp:
                     lambda: srv.cost_drift.drift,
                     help="Predicted/measured seconds ratio for planned "
                          "flushes (1.0 = calibrated; 0 until measurable)")
+        m.set_gauge("service_read_only", lambda: int(srv.read_only),
+                    help="1 once the data dir failed a write and the "
+                         "server degraded to read-only serving")
+        m.set_counter_fn("service_ingest_deduped_total",
+                         lambda: srv.deduped_total,
+                         help="Ingest chunks skipped by the idempotency "
+                              "window (safe client retries)")
+        # Durability gauges — only when the server mounts a data dir.
+        d = srv.durability
+        if d is not None:
+            m.set_info("service_durability_info",
+                       {"fsync": d.wal.policy, "data_dir": d.data_dir},
+                       help="Durability configuration")
+            m.set_counter_fn("wal_appends_total",
+                             lambda: d.wal.appends_total,
+                             help="WAL entries appended")
+            m.set_counter_fn("wal_fsyncs_total", lambda: d.wal.fsyncs_total,
+                             help="WAL fsync(2) calls (group commit "
+                                  "amortizes these across batches)")
+            m.set_counter_fn("wal_rotations_total",
+                             lambda: d.wal.rotations_total,
+                             help="WAL segment rotations (epoch seals, "
+                                  "size bounds, snapshots)")
+            m.set_counter_fn("wal_truncated_segments_total",
+                             lambda: d.wal.truncated_segments_total,
+                             help="WAL segments dropped after snapshots")
+            m.set_gauge("wal_segments", lambda: d.wal.segment_count,
+                        help="Live WAL segment files")
+            m.set_gauge("wal_nbytes", lambda: d.wal.nbytes(),
+                        help="Bytes across live WAL segments")
+            m.set_gauge("wal_last_seq", lambda: d.wal.last_seq,
+                        help="Newest appended WAL sequence number")
+            m.set_counter_fn("snapshot_total", lambda: d.snapshots_total,
+                             help="Snapshots taken this process")
+            m.set_gauge("snapshot_wal_seq", lambda: d.snap_seq,
+                        help="WAL seq the newest snapshot covers through")
+            m.set_gauge("snapshot_last_seconds",
+                        lambda: d.snapshot_last_seconds,
+                        help="Duration of the most recent snapshot")
+            m.set_gauge("snapshot_last_nbytes",
+                        lambda: d.snapshot_last_nbytes,
+                        help="On-disk bytes of the most recent snapshot")
+            m.set_gauge("recovery_replayed_entries",
+                        lambda: d.replayed_entries,
+                        help="WAL entries replayed at the last boot")
+            m.set_gauge("recovery_replayed_records",
+                        lambda: d.replayed_records,
+                        help="Records re-ingested from the WAL at boot")
+            m.set_gauge("recovery_failed_entries",
+                        lambda: d.replay_failed_entries,
+                        help="WAL entries whose replay raised (skipped)")
+            m.set_gauge("recovery_torn_tail_bytes",
+                        lambda: d.wal.torn_tail_bytes,
+                        help="Torn-tail bytes truncated from the newest "
+                             "WAL segment at boot (0 = clean shutdown)")
+            m.set_gauge("recovery_seconds", lambda: d.recovery_seconds,
+                        help="Wall time of the last WAL replay")
+            m.set_gauge("recovery_invalid_snapshots_skipped",
+                        lambda: d.invalid_snapshots_skipped,
+                        help="Corrupt/torn snapshots skipped while "
+                             "picking the newest valid one")
         if srv.profiler is not None:
             m.register_histogram_provider(
                 "service_stage_latency_seconds", srv.profiler.histograms,
@@ -350,9 +427,18 @@ class ServiceApp:
     def _route(self, method: str, endpoint: str, headers,
                body: "_Body", query: str = "") -> Response:
         if endpoint == "/healthz":
+            # Liveness: always 200 while the process serves — read-only
+            # degradation is a readiness problem (/readyz), not death.
             return Response(200, {"status": "ok",
                                   "records": self.num_records,
-                                  "inflight": self.server.inflight})
+                                  "inflight": self.server.inflight,
+                                  "writable": not self.server.read_only})
+        if endpoint == "/readyz":
+            if self.server.read_only:
+                return Response(503, {
+                    "status": "read-only",
+                    "reason": self.server.read_only_reason})
+            return Response(200, {"status": "ok"})
         if endpoint == "/metrics":
             return Response(200, self.metrics.render(),
                             content_type="text/plain; version=0.0.4")
@@ -362,18 +448,24 @@ class ServiceApp:
             if method != "GET":
                 return _json_error(405, f"{endpoint} is GET-only")
             return self._debug(endpoint)
-        if endpoint == "/admin/retire":
-            # Admin path: behind auth, outside the rate limits — window
-            # retirement must work while the service sheds load.
+        if endpoint in ("/admin/retire", "/admin/snapshot"):
+            # Admin paths: behind auth, outside the rate limits — window
+            # retirement and snapshots must work while the service sheds.
             if not self.auth.allows(headers):
                 return _json_error(401, "missing or invalid auth token")
             if method != "POST":
-                return _json_error(405, "/admin/retire is POST-only")
+                return _json_error(405, f"{endpoint} is POST-only")
             try:
+                if endpoint == "/admin/snapshot":
+                    return self._snapshot()
                 return self._retire(json.loads(b"".join(body) or b"{}"))
             except Overloaded as e:
                 return _json_error(429, str(e),
                                    **{"Retry-After": f"{e.retry_after:.3f}"})
+            except ReadOnly as e:
+                return _json_error(503, f"read-only: {e}")
+            except RuntimeError as e:
+                return _json_error(400, f"bad request: {e}")
             except (ValueError, KeyError, TypeError,
                     json.JSONDecodeError) as e:
                 return _json_error(400, f"bad request: {e}")
@@ -409,6 +501,10 @@ class ServiceApp:
         except Overloaded as e:
             return _json_error(429, str(e),
                                **{"Retry-After": f"{e.retry_after:.3f}"})
+        except ReadOnly as e:
+            # Graceful degradation: mutations 503 once the data dir
+            # fails; queries never reach here (they don't mutate).
+            return _json_error(503, f"read-only: {e}")
         except (ValueError, KeyError, json.JSONDecodeError) as e:
             return _json_error(400, f"bad request: {e}")
 
@@ -456,11 +552,14 @@ class ServiceApp:
     def _ingest(self, headers, body: "_Body", query: str = "") -> Response:
         qs = parse_qs(query)
         epoch = int(qs["epoch"][0]) if qs.get("epoch") else None
+        idem_key = headers.get("Idempotency-Key") or None
         ctype = headers.get("Content-Type", "")
         if "json" in ctype and "ndjson" not in ctype:
             payload = json.loads(b"".join(body) or b"{}")
             if epoch is None and payload.get("epoch") is not None:
                 epoch = int(payload["epoch"])
+            if idem_key is None and payload.get("idempotency_key"):
+                idem_key = str(payload["idempotency_key"])
             lines = (json.dumps(r).encode()
                      for r in payload.get("records", []))
         else:
@@ -470,25 +569,39 @@ class ServiceApp:
             raise ValueError(
                 "epoch requires a windowed index "
                 "(build with api.build_index(..., windowed=True))")
+        # Chunk-granular dedupe: the request key derives one key per
+        # chunk (``key#i`` — chunking is deterministic for a given body
+        # and ingest_chunk), so a retried stream skips exactly the
+        # chunks the first attempt already committed, even when that
+        # attempt died mid-stream.
         chunk: list[np.ndarray] = []
         pending = []
         total = 0
+
+        def submit(c):
+            idem = f"{idem_key}#{len(pending)}" if idem_key else None
+            return self._submit_ingest_chunk(c, epoch, idem=idem)
+
         for line in lines:
             if not line.strip():
                 continue
             chunk.append(np.asarray(json.loads(line), np.int64))
             if len(chunk) >= self.ingest_chunk:
-                pending.append(self._submit_ingest_chunk(chunk, epoch))
+                pending.append(submit(chunk))
                 total += len(chunk)
                 chunk = []
         if chunk:
-            pending.append(self._submit_ingest_chunk(chunk, epoch))
+            pending.append(submit(chunk))
             total += len(chunk)
+        deduped = 0
         for p in pending:
-            self.server.result(p, timeout=self.result_timeout)
+            res = self.server.result(p, timeout=self.result_timeout)
+            deduped += bool(res.get("deduped"))
         out = {"ingested": total, "chunks": len(pending)}
         if epoch is not None:
             out["epoch"] = epoch
+        if idem_key is not None:
+            out["deduped_chunks"] = deduped
         return Response(200, out)
 
     def _retire(self, body) -> Response:
@@ -502,14 +615,21 @@ class ServiceApp:
         return Response(200, {"rid": p.rid, "retired": res["retired"],
                               "epochs": res["epochs"]})
 
-    def _submit_ingest_chunk(self, chunk, epoch: int | None = None):
+    def _snapshot(self) -> Response:
+        p = self.server.submit_snapshot()
+        res = self.server.result(p, timeout=self.result_timeout)
+        return Response(200, {"rid": p.rid, **res})
+
+    def _submit_ingest_chunk(self, chunk, epoch: int | None = None,
+                             idem: str | None = None):
         """Admit one chunk, waiting out transient overload: an ingest
         stream mid-flight can't be half-dropped, so backpressure here is
         wait-and-retry, bounded by ``result_timeout``."""
         give_up = time.monotonic() + self.result_timeout
         while True:
             try:
-                return self.server.submit_ingest(chunk, epoch=epoch)
+                return self.server.submit_ingest(chunk, epoch=epoch,
+                                                 idem=idem)
             except Overloaded as e:
                 if time.monotonic() >= give_up:
                     raise

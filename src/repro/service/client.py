@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import http.client
 import json
+import random
+import time
 
 import numpy as np
 
@@ -19,6 +21,16 @@ class ServiceError(RuntimeError):
         self.retry_after = retry_after
 
 
+# Methods safe to replay on a dropped connection: the request either
+# never mutates (GET/HEAD/OPTIONS) or mutates idempotently by contract
+# (PUT/DELETE). POST is NOT here — a stale keep-alive can drop the
+# connection *after* the server applied the request, and replaying a
+# POST would then apply it twice. POSTs only retry when the caller
+# marks them idempotent (e.g. /ingest with an Idempotency-Key, /query
+# and /topk which are POST-shaped reads).
+_IDEMPOTENT_METHODS = frozenset({"GET", "HEAD", "PUT", "DELETE", "OPTIONS"})
+
+
 class ServiceClient:
     """One persistent keep-alive connection to a running service.
 
@@ -29,9 +41,18 @@ class ServiceClient:
     thread-safe — open one client per worker thread."""
 
     def __init__(self, host: str, port: int, token: str | None = None,
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, retries: int = 0,
+                 backoff_s: float = 0.05, jitter=random.random):
+        """``retries`` > 0 turns on jittered exponential backoff for
+        429 responses (honoring the server's ``Retry-After``) and, for
+        requests that are safe to replay, reconnect-and-resend on a
+        dropped connection. The default 0 preserves fail-fast behavior
+        for callers doing their own load control (the bench harness)."""
         self.host, self.port, self.token = host, port, token
         self.timeout = timeout
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self._jitter = jitter
         self._conn: http.client.HTTPConnection | None = None
 
     def _connection(self) -> http.client.HTTPConnection:
@@ -53,9 +74,18 @@ class ServiceClient:
         return h
 
     def request(self, method: str, path: str, body: bytes | None = None,
-                headers: dict | None = None) -> tuple[int, bytes, dict]:
+                headers: dict | None = None,
+                idempotent: bool | None = None) -> tuple[int, bytes, dict]:
         """(status, raw body, response headers) — one retry on a stale
-        keep-alive connection."""
+        keep-alive connection, but ONLY for requests that are safe to
+        replay. A keep-alive drop is ambiguous (the server may have
+        applied the request before the socket died), so a
+        non-idempotent POST propagates the error instead of silently
+        applying twice. ``idempotent=None`` infers from the method;
+        callers mark POST-shaped reads (/query, /topk) and keyed
+        ingests idempotent explicitly."""
+        if idempotent is None:
+            idempotent = method in _IDEMPOTENT_METHODS
         for attempt in (0, 1):
             conn = self._connection()
             try:
@@ -65,23 +95,38 @@ class ServiceClient:
                 return r.status, r.read(), dict(r.getheaders())
             except (http.client.HTTPException, ConnectionError, OSError):
                 self.close()
-                if attempt:
+                if attempt or not idempotent:
                     raise
         raise AssertionError("unreachable")
 
+    def _sleep_backoff(self, attempt: int, retry_after: float = 0.0):
+        """Jittered exponential backoff, never shorter than the
+        server's Retry-After hint."""
+        delay = max(float(retry_after), self.backoff_s * (2 ** attempt))
+        time.sleep(delay * (1.0 + 0.25 * self._jitter()))
+
     def _call(self, method: str, path: str, payload: dict | None = None,
-              raw_body: bytes | None = None, headers: dict | None = None):
+              raw_body: bytes | None = None, headers: dict | None = None,
+              idempotent: bool | None = None):
         body = raw_body if raw_body is not None else (
             json.dumps(payload).encode() if payload is not None else None)
-        status, raw, rhead = self.request(method, path, body, headers)
-        try:
-            data = json.loads(raw) if raw else {}
-        except json.JSONDecodeError:
-            data = {"raw": raw.decode(errors="replace")}
-        if status != 200:
-            raise ServiceError(status, data,
-                               retry_after=float(rhead.get("Retry-After", 0)))
-        return data
+        for i in range(self.retries + 1):
+            status, raw, rhead = self.request(method, path, body, headers,
+                                              idempotent=idempotent)
+            try:
+                data = json.loads(raw) if raw else {}
+            except json.JSONDecodeError:
+                data = {"raw": raw.decode(errors="replace")}
+            if status == 200:
+                return data
+            ra = float(rhead.get("Retry-After", 0))
+            # 429 retry is safe regardless of idempotency: the server
+            # answered without applying anything.
+            if status == 429 and i < self.retries:
+                self._sleep_backoff(i, ra)
+                continue
+            raise ServiceError(status, data, retry_after=ra)
+        raise AssertionError("unreachable")
 
     # -- endpoints ---------------------------------------------------------
 
@@ -103,8 +148,10 @@ class ServiceClient:
         payload = {"q": np.asarray(q_ids).tolist(), "threshold": threshold}
         if deadline_ms is not None:
             payload["deadline_ms"] = deadline_ms
-        return np.asarray(self._call("POST", "/query", payload)["hits"],
-                          np.int64)
+        # POST-shaped read: replaying it cannot double-apply anything.
+        return np.asarray(
+            self._call("POST", "/query", payload, idempotent=True)["hits"],
+            np.int64)
 
     def query_explain(self, q_ids, threshold: float = 0.5
                       ) -> tuple[np.ndarray, dict]:
@@ -113,7 +160,8 @@ class ServiceClient:
         and candidate accounting — see docs/OBSERVABILITY.md)."""
         d = self._call("POST", "/query",
                        {"q": np.asarray(q_ids).tolist(),
-                        "threshold": threshold, "explain": True})
+                        "threshold": threshold, "explain": True},
+                       idempotent=True)
         return np.asarray(d["hits"], np.int64), d["explain"]
 
     def debug_traces(self) -> dict:
@@ -128,40 +176,84 @@ class ServiceClient:
         """Top-``k`` ``(ids, scores)`` under the deterministic
         (score desc, id asc) order shared by every execution route."""
         d = self._call("POST", "/topk",
-                       {"q": np.asarray(q_ids).tolist(), "k": k})
+                       {"q": np.asarray(q_ids).tolist(), "k": k},
+                       idempotent=True)
         return (np.asarray(d["ids"], np.int64),
                 np.asarray(d["scores"], np.float32))
 
     def ingest(self, records, stream: bool = True,
-               epoch: int | None = None) -> dict:
+               epoch: int | None = None,
+               idempotency_key: str | None = None) -> dict:
         """NDJSON ingest. ``stream=True`` (default) sends chunked
         transfer-encoding from a line generator — the full batch never
         exists as one buffer on either side; the server re-chunks it
         into flush-sized CSR ingests. ``epoch`` targets a window epoch
         on a windowed server (sent as the ``?epoch=N`` query param; the
-        server answers 400 if its index is not windowed)."""
+        server answers 400 if its index is not windowed).
+
+        ``idempotency_key`` makes the ingest retry-safe: the server
+        dedupes chunks already applied under the key, so this method
+        will reconnect-and-resend on a dropped connection and back off
+        on 429 (up to ``retries``). Without a key, any transport error
+        propagates — replaying an unkeyed POST could double-ingest.
+        Keyed retries buffer ``records`` (a one-shot iterator can't be
+        replayed)."""
         path = "/ingest" if epoch is None else f"/ingest?epoch={int(epoch)}"
-        lines = (json.dumps(np.asarray(r).tolist()).encode() + b"\n"
-                 for r in records)
-        headers = self._headers({"Content-Type": "application/x-ndjson"})
+        extra = {"Content-Type": "application/x-ndjson"}
+        retries = 0
+        if idempotency_key is not None:
+            extra["Idempotency-Key"] = str(idempotency_key)
+            records = [np.asarray(r) for r in records]
+            retries = self.retries
+
+        def make_lines():
+            return (json.dumps(np.asarray(r).tolist()).encode() + b"\n"
+                    for r in records)
+
         if not stream:
-            return self._call("POST", path, raw_body=b"".join(lines),
-                              headers={"Content-Type": "application/x-ndjson"})
-        conn = self._connection()
-        try:
-            conn.request("POST", path, body=lines, headers=headers,
-                         encode_chunked=True)
-            r = conn.getresponse()
-            status, raw = r.status, r.read()
-        except (http.client.HTTPException, ConnectionError, OSError):
-            self.close()
-            raise
-        data = json.loads(raw) if raw else {}
-        if status != 200:
-            raise ServiceError(status, data)
-        return data
+            return self._call("POST", path,
+                              raw_body=b"".join(make_lines()),
+                              headers=extra,
+                              idempotent=idempotency_key is not None)
+        headers = self._headers(extra)
+        for i in range(retries + 1):
+            conn = self._connection()
+            try:
+                # The generator is rebuilt per attempt: a retry must
+                # stream the records again from the start, not resume a
+                # half-consumed iterator from the failed attempt.
+                conn.request("POST", path, body=make_lines(),
+                             headers=headers, encode_chunked=True)
+                r = conn.getresponse()
+                status, raw = r.status, r.read()
+                rhead = dict(r.getheaders())
+            except (http.client.HTTPException, ConnectionError, OSError):
+                self.close()
+                if i >= retries:
+                    raise
+                self._sleep_backoff(i)
+                continue
+            data = json.loads(raw) if raw else {}
+            if status == 200:
+                return data
+            ra = float(rhead.get("Retry-After", 0))
+            if status == 429 and i < retries:
+                self._sleep_backoff(i, ra)
+                continue
+            raise ServiceError(status, data, retry_after=ra)
+        raise AssertionError("unreachable")
 
     def retire(self, before: int) -> dict:
         """Drop window epochs ``< before`` on a windowed server; returns
         ``{"retired": n, "epochs": [...]}`` (400 if not windowed)."""
         return self._call("POST", "/admin/retire", {"before": int(before)})
+
+    def snapshot(self) -> dict:
+        """Trigger an atomic snapshot + WAL truncation on a durable
+        server (400 without --data-dir, 503 once read-only)."""
+        return self._call("POST", "/admin/snapshot")
+
+    def readyz(self) -> dict:
+        """Readiness: raises ServiceError(503) once the server has
+        degraded to read-only serving."""
+        return self._call("GET", "/readyz")

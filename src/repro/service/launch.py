@@ -24,7 +24,7 @@ from repro.data.synth import make_query_workload
 from repro.obs import Tracer
 from repro.sketchindex import ShardedIndex
 from repro.service import (
-    AsyncSketchServer, ServiceApp, ServiceClient, ServiceHandle)
+    AsyncSketchServer, Durability, ServiceApp, ServiceClient, ServiceHandle)
 
 
 def add_service_args(ap: argparse.ArgumentParser):
@@ -66,9 +66,27 @@ def add_service_args(ap: argparse.ArgumentParser):
                     help="serve a time-windowed index (WindowManager): "
                          "/ingest accepts ?epoch=N and /admin/retire "
                          "drops expired epochs")
+    ap.add_argument("--data-dir", default=None,
+                    help="durable state directory: ingest goes through a "
+                         "WAL, snapshots land here, and on boot the newest "
+                         "valid snapshot + WAL tail is recovered instead "
+                         "of rebuilding from the dataset")
+    ap.add_argument("--fsync", default="batch",
+                    choices=("always", "batch", "off"),
+                    help="WAL fsync policy: 'always' = one fsync per "
+                         "append, 'batch' = one per mutation batch (group "
+                         "commit, the default), 'off' = OS page cache only")
+    ap.add_argument("--snapshot-interval-s", type=float, default=0.0,
+                    help="background snapshot period in seconds "
+                         "(0 = only on POST /admin/snapshot)")
+    ap.add_argument("--snapshot-keep", type=int, default=2,
+                    help="completed snapshots retained (older pruned)")
+    ap.add_argument("--idem-window", type=int, default=1024,
+                    help="idempotency-key dedupe window (entries)")
 
 
-def build_service(args) -> ServiceApp:
+def _build_index(args):
+    """Fresh build from the dataset (no durable state to recover)."""
     recs = datasets.load(args.dataset, scale=args.scale)
     total = sum(len(r) for r in recs)
     t0 = time.time()
@@ -91,6 +109,48 @@ def build_service(args) -> ServiceApp:
         desc = f"index={index.nbytes()/1e6:.1f}MB"
     print(f"[service] {args.dataset}: m={len(recs)} "
           f"{desc} built in {time.time()-t0:.2f}s")
+    return sharded
+
+
+def build_service(args) -> ServiceApp:
+    durability = None
+    sharded = None
+    if getattr(args, "data_dir", None):
+        durability = Durability(
+            args.data_dir, fsync=getattr(args, "fsync", "batch"),
+            snapshot_keep=getattr(args, "snapshot_keep", 2),
+            idem_window=getattr(args, "idem_window", 1024),
+            snapshot_interval=getattr(args, "snapshot_interval_s", 0.0))
+        t0 = time.time()
+        loaded, manifest = durability.load_latest_index()
+        if loaded is not None:
+            if manifest.get("windowed"):
+                sharded = loaded
+            else:
+                mesh = make_mesh(
+                    tuple(int(x) for x in args.mesh.split("x")),
+                    ("data", "model"))
+                sharded = ShardedIndex(loaded, mesh, backend=args.backend)
+            stats = durability.replay_into(sharded)
+            print(f"[service] recovered from {args.data_dir}: snapshot "
+                  f"wal_seq={durability.snap_seq}, replayed "
+                  f"{stats['replayed_entries']} WAL entries "
+                  f"({stats['replayed_records']} records, "
+                  f"{stats['torn_tail_bytes']}B torn tail) "
+                  f"in {time.time()-t0:.2f}s")
+    if sharded is None:
+        sharded = _build_index(args)
+        if durability is not None:
+            # A WAL without a snapshot (crash before the first one):
+            # the dataset build is deterministic, so re-applying the
+            # tail on top reproduces the pre-crash state.
+            stats = durability.replay_into(sharded)
+            if stats["replayed_entries"]:
+                print(f"[service] replayed {stats['replayed_entries']} "
+                      f"WAL entries onto the fresh build")
+            # Baseline snapshot: the next boot recovers from disk
+            # instead of rebuilding from the dataset.
+            durability.snapshot(sharded)
     tracer = (Tracer(capacity=args.trace_capacity)
               if args.trace_capacity > 0 else None)
     server = AsyncSketchServer(
@@ -100,7 +160,8 @@ def build_service(args) -> ServiceApp:
         default_deadline=args.deadline_ms / 1e3, plan=args.plan,
         tracer=tracer, profile=not args.no_profile,
         slow_threshold=(args.slow_query_ms / 1e3
-                        if args.slow_query_ms > 0 else None))
+                        if args.slow_query_ms > 0 else None),
+        durability=durability)
     return ServiceApp(server, auth_token=args.auth_token,
                       rate_limit=args.rate_limit, burst=args.burst,
                       tenant_rate_limit=args.tenant_rate_limit,

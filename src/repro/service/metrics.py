@@ -68,6 +68,12 @@ class Metrics:
         with self._lock:
             self._family(name, "counter", help)[_labels_str(labels)] = fn
 
+    def set_info(self, name: str, labels: dict, help: str = "") -> None:
+        """Prometheus info idiom: a gauge fixed at 1 whose labels carry
+        build/configuration strings (e.g. the WAL fsync policy)."""
+        with self._lock:
+            self._family(name, "gauge", help)[_labels_str(labels)] = 1
+
     def observe(self, name: str, value: float, labels: dict | None = None,
                 help: str = "", bounds=None) -> None:
         with self._lock:

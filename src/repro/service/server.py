@@ -34,6 +34,7 @@ from typing import Callable
 import numpy as np
 
 from repro.serving.batcher import BatchStats, execute_batch
+from repro.service.wal import IdempotencyCache, ReadOnly
 
 
 class Overloaded(RuntimeError):
@@ -51,7 +52,7 @@ class Pending:
     Field names mirror ``serving.Request`` so ``execute_batch`` consumes
     these directly."""
 
-    kind: str                      # "query" | "topk" | "ingest" | "retire"
+    kind: str          # "query" | "topk" | "ingest" | "retire" | "snapshot"
     q_ids: np.ndarray | None
     arrival: float
     rid: int = -1                  # assigned under the lock by _admit
@@ -60,6 +61,7 @@ class Pending:
     deadline: float | None = None  # absolute clock time, None = no SLO
     records: list | None = None    # ingest payload
     epoch: int | None = None       # windowed-index target epoch (ingest)
+    idem: str | None = None        # idempotency key (ingest dedupe)
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: dict | None = None
     error: Exception | None = None
@@ -88,7 +90,8 @@ class AsyncSketchServer:
                  clock: Callable[[], float] = time.monotonic,
                  tracer=None, profile: bool = True,
                  slow_threshold: float | None = 1.0,
-                 slow_log_size: int = 128):
+                 slow_log_size: int = 128,
+                 durability=None, idem_window: int = 1024):
         from repro.obs import CostDrift, StageProfiler
         from repro.planner import normalize_plan
 
@@ -114,6 +117,20 @@ class AsyncSketchServer:
         self.slow_threshold = slow_threshold
         self.slow_queries = 0
         self.slow_log: deque[dict] = deque(maxlen=int(slow_log_size))
+        # Durability (PR 10). ``durability=None`` keeps the pre-WAL
+        # behavior exactly: mutations apply in-memory only and the
+        # idempotency window is process-local. With a
+        # :class:`repro.service.wal.Durability` attached, the flush
+        # worker logs every mutation to the WAL *before* applying it
+        # (append batch → one fsync → apply → ack, i.e. group commit
+        # under fsync="batch"), and an unwritable data dir flips the
+        # server into sticky read-only instead of killing it.
+        self.durability = durability
+        self.idem = (durability.idem if durability is not None
+                     else IdempotencyCache(idem_window))
+        self.read_only = False
+        self.read_only_reason: str | None = None
+        self.deduped_total = 0
         self._queue: deque[Pending] = deque()
         self._cv = threading.Condition()
         self._next_rid = 0
@@ -174,20 +191,38 @@ class AsyncSketchServer:
             threshold=math.inf, k=int(k),
             deadline=self._deadline(now, deadline), explain=bool(explain)))
 
-    def submit_ingest(self, records, epoch: int | None = None) -> Pending:
+    def _check_writable(self) -> None:
+        if self.read_only:
+            raise ReadOnly(self.read_only_reason or "data dir unwritable")
+
+    def submit_ingest(self, records, epoch: int | None = None,
+                      idem: str | None = None) -> Pending:
+        self._check_writable()
         now = self.clock()
         return self._admit(Pending(
             kind="ingest", q_ids=None, arrival=now,
             records=[np.asarray(r) for r in records],
-            epoch=None if epoch is None else int(epoch)))
+            epoch=None if epoch is None else int(epoch), idem=idem))
 
     def submit_retire(self, before: int) -> Pending:
         """Windowed-index admin: drop every epoch ``< before``. Routed
         through the mutation lane so the flush worker stays the only
         thread touching the index."""
+        self._check_writable()
         now = self.clock()
         return self._admit(Pending(
             kind="retire", q_ids=None, arrival=now, epoch=int(before)))
+
+    def submit_snapshot(self) -> Pending:
+        """Admin: atomic snapshot + WAL truncation, routed through the
+        mutation lane — the flush worker runs it, so the index is
+        quiescent and FIFO order puts every prior ack inside it."""
+        if self.durability is None:
+            raise RuntimeError("snapshots need a data dir "
+                               "(server started without durability)")
+        self._check_writable()
+        now = self.clock()
+        return self._admit(Pending(kind="snapshot", q_ids=None, arrival=now))
 
     # -- flush loop --------------------------------------------------------
 
@@ -197,16 +232,17 @@ class AsyncSketchServer:
         FIFO order is the consistency model."""
         if not self._queue:
             return None, None
-        if self._queue[0].kind in ("ingest", "retire"):
+        mutation = ("ingest", "retire", "snapshot")
+        if self._queue[0].kind in mutation:
             batch = []
-            while self._queue and self._queue[0].kind in ("ingest", "retire") \
+            while self._queue and self._queue[0].kind in mutation \
                     and len(batch) < self.max_batch:
                 batch.append(self._queue.popleft())
             return batch, "ingest"
         run = 0
         expired = False
         for p in self._queue:
-            if p.kind in ("ingest", "retire") or run >= self.max_batch:
+            if p.kind in mutation or run >= self.max_batch:
                 break
             expired |= p.past_deadline(now)
             run += 1
@@ -358,10 +394,80 @@ class AsyncSketchServer:
             if ftrace is not None:
                 ftrace.end()
 
+    def _enter_read_only(self, err: OSError) -> None:
+        """Sticky degrade: the data dir failed a write (ENOSPC, EROFS,
+        pulled volume). Mutations 503 from here on; queries keep
+        serving from the in-memory index. Recovery is an operator
+        restart against a healthy volume."""
+        self.read_only = True
+        self.read_only_reason = f"{type(err).__name__}: {err}"
+
     def _execute_ingest(self, batch: list[Pending]):
+        """Drain one mutation batch in FIFO order. Contiguous
+        ingest/retire runs group-commit through the WAL (append every
+        entry → one fsync → apply → ack), so fsync="batch" amortizes
+        the disk flush across the batch; a "snapshot" breaks the run
+        and executes alone at its FIFO position."""
         now = self.clock()
         self.stats.record_batch([now - p.arrival for p in batch], "ingest")
+        run: list[Pending] = []
         for p in batch:
+            if p.kind == "snapshot":
+                self._commit_run(run, now)
+                run = []
+                self._execute_snapshot(p)
+            else:
+                run.append(p)
+        self._commit_run(run, now)
+
+    def _commit_run(self, run: list[Pending], now: float):
+        if not run:
+            return
+        # Phase 1 — dedupe + WAL append (ack nothing yet). The flush
+        # worker is the only thread here, so the idempotency check and
+        # the apply are atomic with respect to each other: two racing
+        # retries can both pass admission, but only the first to reach
+        # this loop applies.
+        to_apply: list[Pending] = []
+        for p in run:
+            if self.read_only:
+                p.error = ReadOnly(self.read_only_reason or "read-only")
+                p.done.set()
+                continue
+            if p.idem is not None:
+                prior = self.idem.get(p.idem)
+                if prior is not None:
+                    p.result = {**prior, "deduped": True}
+                    self.deduped_total += 1
+                    p.done.set()
+                    continue
+            if self.durability is not None:
+                try:
+                    if p.kind == "retire":
+                        self.durability.log_retire(p.epoch)
+                    else:
+                        self.durability.log_ingest(p.records, p.epoch,
+                                                   p.idem)
+                except OSError as e:
+                    self._enter_read_only(e)
+                    p.error = ReadOnly(self.read_only_reason)
+                    p.done.set()
+                    continue
+            to_apply.append(p)
+        # Phase 2 — one group-commit fsync covering the whole run.
+        if self.durability is not None and to_apply:
+            try:
+                self.durability.sync()
+            except OSError as e:
+                self._enter_read_only(e)
+                for p in to_apply:
+                    # Not durable → not acknowledged; the client's
+                    # idempotency key makes its retry safe.
+                    p.error = ReadOnly(self.read_only_reason)
+                    p.done.set()
+                return
+        # Phase 3 — apply to the index and acknowledge.
+        for p in to_apply:
             try:
                 if p.kind == "retire":
                     retired = self.index.retire(p.epoch)
@@ -383,6 +489,8 @@ class AsyncSketchServer:
                 self.stats.ingest_latency_hist.observe(t1 - t0)
                 self.records_ingested += len(p.records)
                 p.result = {"ingested": len(p.records)}
+                if p.idem is not None:
+                    self.idem.put(p.idem, {"ingested": len(p.records)})
                 if self.profiler is not None:
                     self.profiler.observe("request.ingest",
                                           max(t1 - p.arrival, 0.0))
@@ -395,6 +503,24 @@ class AsyncSketchServer:
                 p.error = e
             p.done.set()
 
+    def _execute_snapshot(self, p: Pending):
+        t0 = self.clock()
+        try:
+            if self.durability is None:
+                raise RuntimeError("snapshots need a data dir")
+            if self.read_only:
+                raise ReadOnly(self.read_only_reason or "read-only")
+            p.result = self.durability.snapshot(self.index)
+        except OSError as e:
+            self._enter_read_only(e)
+            p.error = ReadOnly(self.read_only_reason)
+        except Exception as e:
+            p.error = e
+        if self.profiler is not None:
+            self.profiler.observe("request.snapshot",
+                                  max(self.clock() - t0, 0.0))
+        p.done.set()
+
     # -- lifecycle ---------------------------------------------------------
 
     def start(self) -> "AsyncSketchServer":
@@ -402,9 +528,25 @@ class AsyncSketchServer:
             return self
         self._stop = False
 
+        # Background snapshots ride the flush loop itself: the worker
+        # enqueues a "snapshot" pending at the interval and pops it on a
+        # later step, so snapshots hold the same single-mutator
+        # invariant as every other mutation.
+        interval = (self.durability.snapshot_interval
+                    if self.durability is not None else 0.0)
+        next_snap = time.monotonic() + interval if interval > 0 else None
+
         def loop():
+            nonlocal next_snap
             while not self._stop:
                 self.step(block=True, timeout=0.1)
+                if next_snap is not None and time.monotonic() >= next_snap:
+                    next_snap = time.monotonic() + interval
+                    try:
+                        if not self.read_only:
+                            self.submit_snapshot()
+                    except (Overloaded, ReadOnly):
+                        pass
             self.drain()
 
         self._thread = threading.Thread(target=loop, name="flush-loop",

@@ -1,0 +1,599 @@
+"""Durable ingest: write-ahead log, atomic snapshots, crash recovery.
+
+The serving stack discards raw records after sketching, so every
+acknowledged ``/ingest`` since the last save used to live only in
+process memory — a crash silently lost state that is *not re-derivable*
+(the sketch is lossy by design; that is the paper's whole point). This
+module makes the mutation lane durable:
+
+    WriteAheadLog    length-prefixed, per-record CRC32-checksummed
+                     segment files. Appends are unbuffered (every byte
+                     reaches the OS before the call returns) with a
+                     configurable fsync policy; segments rotate at
+                     window-epoch seals and size bounds, and are
+                     truncated once a snapshot covers them.
+    Durability       the lifecycle manager a server mounts on a
+                     ``--data-dir``: log mutations before they apply,
+                     write atomic snapshots (tmp dir → fsync → rename,
+                     the ``ft/checkpoint.py`` pattern), and on boot load
+                     the newest *valid* snapshot then replay the WAL
+                     tail through the normal ingest path — tolerating a
+                     torn final record.
+    IdempotencyCache bounded dedupe window keyed by client-supplied
+                     idempotency keys, persisted through the WAL and
+                     snapshot manifests so retries stay safe across a
+                     crash.
+
+Write protocol (the invariant recovery relies on): WAL append → fsync
+(per the policy) → apply to the index → acknowledge. An acknowledged
+mutation is therefore always re-derivable from snapshot + WAL; an
+unacknowledged one may or may not survive, and the idempotency window
+makes the client's retry exact-once either way.
+
+Frame format (little-endian)::
+
+    +----+----+------------+------------+---------------+
+    | 'W'| 'A'| len u32    | crc32 u32  | payload bytes |
+    +----+----+------------+------------+---------------+
+
+``payload`` is compact JSON carrying ``seq`` (contiguous, ascending
+across segments), ``kind`` (``ingest`` / ``retire``), the records, the
+target epoch, and the idempotency key. A decode stops at the first
+frame that is short, mis-magicked, or CRC-mismatched: in the *newest*
+segment that is the torn tail a crash mid-write leaves behind
+(tolerated, truncated on reopen); anywhere else it is corruption and
+recovery refuses rather than silently dropping acknowledged data.
+
+Every dangerous IO step threads through a named fault point
+(:mod:`repro.ft.chaos`), so the kill-and-recover matrix can crash this
+code between any two instructions and assert recovery is bit-exact.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import re
+import shutil
+import threading
+import time
+import zlib
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.ft import chaos
+
+_MAGIC = b"WA"
+_HEADER = 10                    # magic(2) + len(4) + crc(4)
+_MAX_FRAME = 64 << 20           # sanity cap: garbage lengths never allocate
+_SEG_RE = re.compile(r"seg_(\d{16})\.wal$")
+_SNAP_RE = re.compile(r"snap_(\d{16})$")
+_SNAP_MANIFEST = "snap_manifest.json"
+
+FSYNC_POLICIES = ("always", "batch", "off")
+
+
+class WalCorruption(RuntimeError):
+    """Mid-stream WAL damage (acknowledged data would be lost)."""
+
+
+class ReadOnly(RuntimeError):
+    """The data dir is unwritable — mutations refused, queries served."""
+
+
+def encode_entry(entry: dict) -> bytes:
+    """One framed WAL record (numpy ints/arrays JSON-normalized)."""
+    payload = json.dumps(entry, separators=(",", ":"),
+                         default=_json_default).encode()
+    return (_MAGIC + len(payload).to_bytes(4, "little")
+            + zlib.crc32(payload).to_bytes(4, "little") + payload)
+
+
+def _json_default(o):
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"WAL entry field not serializable: {type(o)}")
+
+
+def decode_segment(buf: bytes) -> tuple[list[dict], int]:
+    """Decode every complete frame; returns ``(entries, dropped)`` where
+    ``dropped`` is the byte count of the unparseable tail (0 = clean).
+    A short header, short payload, bad magic, bad CRC, or undecodable
+    JSON all stop the scan — the remainder is the torn tail."""
+    entries: list[dict] = []
+    off = 0
+    n = len(buf)
+    while off < n:
+        if n - off < _HEADER or buf[off:off + 2] != _MAGIC:
+            break
+        length = int.from_bytes(buf[off + 2:off + 6], "little")
+        if length > _MAX_FRAME or off + _HEADER + length > n:
+            break
+        crc = int.from_bytes(buf[off + 6:off + 10], "little")
+        payload = buf[off + _HEADER:off + _HEADER + length]
+        if zlib.crc32(payload) != crc:
+            break
+        try:
+            entries.append(json.loads(payload))
+        except json.JSONDecodeError:    # CRC passed but content garbage
+            break
+        off += _HEADER + length
+    return entries, n - off
+
+
+class WriteAheadLog:
+    """Segmented, checksummed, crash-tolerant append log.
+
+    ``fsync`` policy: ``"always"`` fsyncs inside every :meth:`append`
+    (each ack costs a disk flush), ``"batch"`` fsyncs once per
+    :meth:`sync` call — the flush worker calls it once per mutation
+    batch, i.e. group commit — and ``"off"`` never fsyncs (the OS page
+    cache is the only durability; survives a process kill, not a power
+    cut). Appends are unbuffered regardless, so simulated-kill tests see
+    exactly the bytes a real ``SIGKILL`` would leave.
+
+    Not thread-safe by itself; the flush worker is the only writer
+    (:class:`Durability` adds a lock for the read-side gauges).
+    """
+
+    def __init__(self, dirpath: str, fsync: str = "batch",
+                 segment_bytes: int = 4 << 20):
+        if fsync not in FSYNC_POLICIES:
+            raise ValueError(f"fsync policy must be one of {FSYNC_POLICIES},"
+                             f" got {fsync!r}")
+        self.dir = dirpath
+        self.policy = fsync
+        self.segment_bytes = int(segment_bytes)
+        self.appends_total = 0
+        self.fsyncs_total = 0
+        self.rotations_total = 0
+        self.truncated_segments_total = 0
+        self.torn_tail_bytes = 0        # garbage dropped at last reopen
+        self.last_seq = 0               # 0 = empty log; first entry is 1
+        self._f: io.RawIOBase | None = None
+        self._path: str | None = None   # current segment path
+        self._dirty = False             # bytes written since last fsync
+        # Sealed + current segments: [path, first_seq, last_seq, nbytes].
+        # first_seq is the seq the segment *starts at* (its filename);
+        # last_seq == first_seq - 1 means it holds no complete entry.
+        self._segments: list[list] = []
+        os.makedirs(dirpath, exist_ok=True)
+        self._scan()
+
+    # -- startup scan ------------------------------------------------------
+
+    def _scan(self) -> None:
+        """Index existing segments, verify seq continuity, truncate the
+        newest segment's torn tail so appends never follow garbage."""
+        names = sorted(n for n in os.listdir(self.dir) if _SEG_RE.search(n))
+        for i, name in enumerate(names):
+            path = os.path.join(self.dir, name)
+            first = int(_SEG_RE.search(name).group(1))
+            with open(path, "rb") as f:
+                buf = f.read()
+            entries, dropped = decode_segment(buf)
+            newest = i == len(names) - 1
+            if dropped and not newest:
+                raise WalCorruption(
+                    f"{path}: {dropped} undecodable bytes mid-log (only "
+                    "the newest segment may carry a torn tail)")
+            seqs = [int(e["seq"]) for e in entries]
+            want = list(range(first, first + len(seqs)))
+            if seqs != want or (self._segments
+                                and first != self._segments[-1][2] + 1):
+                raise WalCorruption(
+                    f"{path}: sequence discontinuity (have {seqs[:3]}..., "
+                    f"want start {first})")
+            if dropped:                 # torn tail on the newest segment
+                self.torn_tail_bytes = dropped
+                with open(path, "r+b") as f:
+                    f.truncate(len(buf) - dropped)
+                    f.flush()
+                    os.fsync(f.fileno())
+            self._segments.append(
+                [path, first, first + len(seqs) - 1, len(buf) - dropped])
+            self.last_seq = first + len(seqs) - 1 if seqs else self.last_seq
+        if self._segments:
+            self.last_seq = self._segments[-1][2]
+
+    # -- write side --------------------------------------------------------
+
+    def _open_segment(self) -> None:
+        first = self.last_seq + 1
+        self._path = os.path.join(self.dir, f"seg_{first:016d}.wal")
+        # buffering=0: every write(2) reaches the OS before returning,
+        # so a simulated kill loses nothing a real SIGKILL would keep.
+        self._f = open(self._path, "ab", buffering=0)
+        self._segments.append([self._path, first, first - 1, 0])
+        _fsync_dir(self.dir)
+
+    def _ensure_open(self, frame_len: int) -> io.RawIOBase:
+        if self._f is None:
+            # Reopen the newest scanned segment when it has room —
+            # restarts must not leak one segment each.
+            if self._segments and self._segments[-1][3] < self.segment_bytes:
+                seg = self._segments[-1]
+                self._path = seg[0]
+                self._f = open(self._path, "ab", buffering=0)
+            else:
+                self._open_segment()
+        elif (self._segments[-1][3] + frame_len > self.segment_bytes
+              and self._segments[-1][3] > 0):
+            self.rotate()
+        return self._f
+
+    def append(self, entry: dict) -> int:
+        """Frame + write one entry; returns its seq. Fsyncs only under
+        the ``always`` policy — callers batch :meth:`sync` otherwise."""
+        chaos.point("wal.append.pre_write")
+        seq = self.last_seq + 1
+        frame = encode_entry({**entry, "seq": seq})
+        f = self._ensure_open(len(frame))
+        chaos.chaos_write(f, frame, "wal.append.write")
+        self._dirty = True
+        self.appends_total += 1
+        self.last_seq = seq
+        self._segments[-1][2] = seq
+        self._segments[-1][3] += len(frame)
+        if self.policy == "always":
+            self.sync()
+        return seq
+
+    def sync(self) -> None:
+        """Make appended entries durable (no-op under ``off`` / clean)."""
+        if not self._dirty or self._f is None or self.policy == "off":
+            return
+        chaos.point("wal.append.pre_fsync")
+        os.fsync(self._f.fileno())
+        chaos.point("wal.append.post_fsync")
+        self.fsyncs_total += 1
+        self._dirty = False
+
+    def rotate(self) -> None:
+        """Seal the current segment and open the next — called at
+        window-epoch seals, segment-size bounds, and snapshots."""
+        if self._f is not None:
+            self.sync()
+            self._f.close()
+            self._f = None
+        chaos.point("wal.rotate.pre_open")
+        if not self._segments or self._segments[-1][3] > 0:
+            self._open_segment()
+        self.rotations_total += 1
+
+    def truncate_through(self, seq: int) -> int:
+        """Drop sealed segments whose every entry is ≤ ``seq`` (i.e. is
+        covered by a snapshot); returns how many files were deleted."""
+        chaos.point("wal.truncate.pre_unlink")
+        keep, dropped = [], 0
+        for seg in self._segments:
+            sealed = seg[0] != self._path
+            covered = seg[2] <= seq and seg[2] >= seg[1]
+            empty = seg[2] < seg[1] and sealed
+            if sealed and (covered or empty):
+                os.unlink(seg[0])
+                dropped += 1
+            else:
+                keep.append(seg)
+        self._segments = keep
+        self.truncated_segments_total += dropped
+        if dropped:
+            _fsync_dir(self.dir)
+        return dropped
+
+    def close(self) -> None:
+        if self._f is not None:
+            self.sync()
+            self._f.close()
+            self._f = None
+
+    # -- read side ---------------------------------------------------------
+
+    def entries(self, after_seq: int = 0):
+        """Yield decoded entries with ``seq > after_seq`` across every
+        live segment, oldest first (re-reads the files: replay runs
+        once, at boot)."""
+        for path, first, last, _ in self._segments:
+            if last < first or last <= after_seq:
+                continue
+            with open(path, "rb") as f:
+                seg_entries, _ = decode_segment(f.read())
+            for e in seg_entries:
+                if int(e["seq"]) > after_seq:
+                    yield e
+
+    @property
+    def segment_count(self) -> int:
+        return len(self._segments)
+
+    def nbytes(self) -> int:
+        return sum(seg[3] for seg in self._segments)
+
+
+def _fsync_dir(dirpath: str) -> None:
+    """Best-effort directory fsync (rename/create durability)."""
+    try:
+        fd = os.open(dirpath, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+class IdempotencyCache:
+    """Bounded LRU of ``idempotency key → prior result`` (thread-safe).
+
+    The window makes client retries safe: a retried ``/ingest`` whose
+    key (or per-chunk derived key) is still inside the window applies
+    nothing and answers from the cached result. Keys ride inside WAL
+    entries and snapshot manifests, so the window survives a crash.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = int(capacity)
+        self._lock = threading.Lock()
+        self._d: OrderedDict[str, dict] = OrderedDict()
+
+    def get(self, key: str) -> dict | None:
+        with self._lock:
+            hit = self._d.get(key)
+            if hit is not None:
+                self._d.move_to_end(key)
+            return hit
+
+    def put(self, key: str, result: dict) -> None:
+        with self._lock:
+            self._d[key] = result
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def export(self) -> list:
+        with self._lock:
+            return [[k, v] for k, v in self._d.items()]
+
+    def load(self, items) -> None:
+        for k, v in items:
+            self.put(str(k), dict(v))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+
+class Durability:
+    """WAL + snapshot lifecycle over one ``--data-dir``.
+
+    Layout::
+
+        data_dir/
+            wal/seg_<firstseq>.wal        append log segments
+            snapshots/snap_<walseq>/      atomic index snapshots
+                index.npz | window/       (plain vs windowed index)
+                snap_manifest.json        wal_seq, engine info, idem window
+
+    Boot: :meth:`load_latest_index` walks snapshots newest-first and
+    skips invalid ones (a crash mid-snapshot leaves only a ``.tmp`` dir
+    or nothing; a torn snapshot write raises
+    :class:`repro.api.CorruptIndexError` and the scan falls back to the
+    previous snapshot). :meth:`replay_into` then re-applies every WAL
+    entry with ``seq > snapshot.wal_seq`` through the index's normal
+    ``insert``/``retire`` path — entries at or below the snapshot seq
+    are already inside it (the post-rename/pre-truncate crash window
+    would otherwise double-apply them).
+    """
+
+    def __init__(self, data_dir: str, *, fsync: str = "batch",
+                 segment_bytes: int = 4 << 20, snapshot_keep: int = 2,
+                 idem_window: int = 1024, snapshot_interval: float = 0.0):
+        self.data_dir = data_dir
+        self.snap_dir = os.path.join(data_dir, "snapshots")
+        os.makedirs(self.snap_dir, exist_ok=True)
+        # A crashed snapshot's .tmp is garbage by definition (never
+        # renamed => never valid); clear it before scanning.
+        for name in os.listdir(self.snap_dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.snap_dir, name),
+                              ignore_errors=True)
+        self.wal = WriteAheadLog(os.path.join(data_dir, "wal"),
+                                 fsync=fsync, segment_bytes=segment_bytes)
+        self.idem = IdempotencyCache(idem_window)
+        self.snapshot_keep = int(snapshot_keep)
+        self.snapshot_interval = float(snapshot_interval)
+        self.snap_seq = 0               # newest valid snapshot's wal_seq
+        self.snapshots_total = 0
+        self.snapshot_last_seconds = 0.0
+        self.snapshot_last_nbytes = 0
+        self.invalid_snapshots_skipped = 0
+        self.replayed_entries = 0
+        self.replayed_records = 0
+        self.replay_failed_entries = 0
+        self.recovery_seconds = 0.0
+        self._max_epoch: int | None = None
+        self._lock = threading.Lock()   # snapshot vs /metrics gauges
+
+    # -- mutation lane (called by the flush worker only) -------------------
+
+    def observe_epoch(self, epoch: int | None) -> None:
+        """Rotate the WAL at a window-epoch seal: the first entry of a
+        *new* (larger) epoch starts a fresh segment, so a whole epoch's
+        tail can later be truncated as one unit."""
+        if epoch is None:
+            return
+        epoch = int(epoch)
+        if self._max_epoch is not None and epoch > self._max_epoch:
+            self.wal.rotate()
+        if self._max_epoch is None or epoch > self._max_epoch:
+            self._max_epoch = epoch
+
+    def log_ingest(self, records, epoch: int | None,
+                   idem: str | None) -> int:
+        self.observe_epoch(epoch)
+        return self.wal.append({
+            "kind": "ingest",
+            "records": [np.asarray(r).tolist() for r in records],
+            "epoch": epoch, "idem": idem})
+
+    def log_retire(self, before: int) -> int:
+        return self.wal.append({"kind": "retire", "before": int(before)})
+
+    def sync(self) -> None:
+        self.wal.sync()
+
+    # -- snapshots ---------------------------------------------------------
+
+    def _snapshots(self) -> list[tuple[int, str]]:
+        """(wal_seq, path) of completed snapshot dirs, newest first."""
+        out = []
+        for name in os.listdir(self.snap_dir):
+            m = _SNAP_RE.fullmatch(name)
+            if m:
+                out.append((int(m.group(1)),
+                            os.path.join(self.snap_dir, name)))
+        return sorted(out, reverse=True)
+
+    def snapshot(self, index) -> dict:
+        """Atomic snapshot of ``index`` at the current WAL position,
+        then truncate covered WAL segments. Runs on the flush worker
+        (the only mutator), so the index is quiescent throughout."""
+        t0 = time.perf_counter()
+        chaos.point("snapshot.pre_write")
+        seq = self.wal.last_seq
+        final = os.path.join(self.snap_dir, f"snap_{seq:016d}")
+        if os.path.isdir(final) and seq == self.snap_seq:
+            return {"path": final, "wal_seq": seq, "fresh": False,
+                    "truncated_segments": 0}
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        windowed = bool(getattr(index, "windowed", False))
+        if windowed:
+            index.save(os.path.join(tmp, "window"))
+        else:
+            index.save(os.path.join(tmp, "index.npz"))
+        manifest = {
+            "version": 1, "wal_seq": seq, "windowed": windowed,
+            "records": int(index.num_records),
+            "idem": self.idem.export(),
+        }
+        mpath = os.path.join(tmp, _SNAP_MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        chaos.point("snapshot.pre_rename")
+        if os.path.exists(final):       # re-snapshot at an old seq
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _fsync_dir(self.snap_dir)
+        chaos.point("snapshot.post_rename")
+        # WAL entries ≤ seq are now redundant; seal the open segment so
+        # it is truncatable too, then drop everything covered.
+        self.wal.rotate()
+        truncated = self.wal.truncate_through(seq)
+        with self._lock:
+            self.snap_seq = seq
+            self.snapshots_total += 1
+            self.snapshot_last_seconds = time.perf_counter() - t0
+            self.snapshot_last_nbytes = _dir_nbytes(final)
+        self._prune_snapshots()
+        return {"path": final, "wal_seq": seq, "fresh": True,
+                "truncated_segments": truncated,
+                "nbytes": self.snapshot_last_nbytes}
+
+    def _prune_snapshots(self) -> None:
+        for _, path in self._snapshots()[self.snapshot_keep:]:
+            shutil.rmtree(path, ignore_errors=True)
+
+    # -- recovery ----------------------------------------------------------
+
+    def load_latest_index(self):
+        """(index, manifest) from the newest *valid* snapshot, or
+        (None, None) when no snapshot loads. Invalid snapshots (torn
+        manifest, corrupt npz — see :class:`repro.api.CorruptIndexError`)
+        are skipped, falling back to the next-older one."""
+        for seq, path in self._snapshots():
+            try:
+                with open(os.path.join(path, _SNAP_MANIFEST)) as f:
+                    manifest = json.load(f)
+                index = self._load_snapshot_index(path, manifest)
+            except Exception:
+                self.invalid_snapshots_skipped += 1
+                continue
+            self.snap_seq = int(manifest["wal_seq"])
+            self.idem.load(manifest.get("idem", []))
+            return index, manifest
+        return None, None
+
+    @staticmethod
+    def _load_snapshot_index(path: str, manifest: dict):
+        if manifest.get("windowed"):
+            from repro.sketchindex.windows import WindowManager
+
+            return WindowManager.load(os.path.join(path, "window"))
+        from repro import api
+
+        return api.load_index(os.path.join(path, "index.npz"))
+
+    def replay_into(self, index) -> dict:
+        """Re-apply the WAL tail (``seq > snap_seq``) through the
+        index's normal mutation path; rebuilds the idempotency window
+        from the entries' keys. An entry whose apply raises is counted
+        and skipped (it failed identically before the crash)."""
+        t0 = time.perf_counter()
+        replayed = records = failed = 0
+        windowed = bool(getattr(index, "windowed", False))
+        for e in self.wal.entries(after_seq=self.snap_seq):
+            try:
+                if e["kind"] == "ingest":
+                    recs = [np.asarray(r, np.int64) for r in e["records"]]
+                    if windowed and e.get("epoch") is not None:
+                        index.insert(recs, epoch=int(e["epoch"]))
+                    else:
+                        index.insert(recs)
+                    records += len(recs)
+                    if e.get("idem"):
+                        self.idem.put(str(e["idem"]),
+                                      {"ingested": len(recs)})
+                elif e["kind"] == "retire":
+                    index.retire(int(e["before"]))
+                else:
+                    failed += 1
+                    continue
+                replayed += 1
+                if e.get("epoch") is not None:
+                    self.observe_epoch(int(e["epoch"]))
+            except Exception:
+                failed += 1
+        self.replayed_entries = replayed
+        self.replayed_records = records
+        self.replay_failed_entries = failed
+        self.recovery_seconds = time.perf_counter() - t0
+        return {"replayed_entries": replayed, "replayed_records": records,
+                "failed_entries": failed,
+                "torn_tail_bytes": self.wal.torn_tail_bytes,
+                "snapshot_wal_seq": self.snap_seq,
+                "seconds": self.recovery_seconds}
+
+    def close(self) -> None:
+        self.wal.close()
+
+
+def _dir_nbytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        for name in files:
+            try:
+                total += os.path.getsize(os.path.join(root, name))
+            except OSError:
+                pass
+    return total

@@ -37,8 +37,24 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import shutil
 
 import numpy as np
+
+
+def _fsync_dir(dirpath: str) -> None:
+    """Best-effort directory fsync so the save's rename is durable."""
+    try:
+        fd = os.open(dirpath, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
 
 _MANIFEST = "window_manifest.json"
 _SKETCH_ENGINES = ("gbkmv", "gkmv", "kmv")
@@ -358,11 +374,18 @@ class WindowManager:
     # -- persistence -------------------------------------------------------
 
     def save(self, dirpath: str) -> None:
-        """Write the snapshot directory: one ``epoch_*.npz`` per live
-        epoch (the standard api index format) plus a JSON manifest."""
-        os.makedirs(dirpath, exist_ok=True)
+        """Write the snapshot directory **atomically**: build the full
+        tree in ``<dir>.tmp``, fsync the manifest, then swap it in with
+        ``os.rename`` (the ``ft/checkpoint.py`` pattern). A reader — or
+        a crash — never observes a half-written directory, and because
+        the tree is rebuilt from scratch, ``epoch_*.npz`` files left
+        behind by since-retired epochs cannot survive the swap."""
+        tmp = dirpath.rstrip("/\\") + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         for e, snap in self._snaps.items():
-            snap.index.save(os.path.join(dirpath, f"epoch_{e:08d}.npz"))
+            snap.index.save(os.path.join(tmp, f"epoch_{e:08d}.npz"))
         cfg = {k: v for k, v in self.build_cfg.items()
                if isinstance(v, (int, float, str, bool, type(None)))}
         manifest = {
@@ -372,8 +395,22 @@ class WindowManager:
             "retired_epochs_total": self.retired_epochs_total,
             "retired_records_total": self.retired_records_total,
         }
-        with open(os.path.join(dirpath, _MANIFEST), "w") as f:
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f, indent=2, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        # Swap: rename can't clobber a non-empty dir, so an existing
+        # target steps aside first; its removal only happens after the
+        # fresh tree is fully in place.
+        old = dirpath.rstrip("/\\") + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        if os.path.exists(dirpath):
+            os.rename(dirpath, old)
+        os.rename(tmp, dirpath)
+        _fsync_dir(os.path.dirname(os.path.abspath(dirpath)))
+        if os.path.exists(old):
+            shutil.rmtree(old)
 
     @classmethod
     def load(cls, dirpath: str) -> "WindowManager":

@@ -1,0 +1,690 @@
+"""Durability-layer tests: WAL unit behavior, atomic snapshots, the
+chaos kill-at-every-fault-point matrix (recovered index must answer
+bit-identical to a never-crashed reference with zero acknowledged
+ingests lost), read-only degradation over live HTTP, idempotency-key
+dedupe, atomic ``WindowManager.save``, ``CorruptIndexError``, and the
+client's idempotent-retry/backoff contract."""
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.ft import chaos
+from repro.service import (
+    AsyncSketchServer, Durability, ReadOnly, ServiceApp, ServiceClient,
+    ServiceError, ServiceHandle, WriteAheadLog, parse_prometheus)
+from repro.service.wal import (
+    IdempotencyCache, WalCorruption, decode_segment, encode_entry)
+
+BUDGET = 1500
+
+
+def make_records(seed, n, universe=500, lo=5, hi=30):
+    rng = np.random.default_rng(seed)
+    return [rng.choice(universe, size=int(rng.integers(lo, hi)),
+                       replace=False) for _ in range(n)]
+
+
+def build_wm(base):
+    """The deterministic 'dataset build' both the crashed and the
+    reference timelines start from."""
+    return api.build("gbkmv", base, BUDGET, backend="numpy",
+                     windowed=True, epoch=0)
+
+
+class StubIndex:
+    """Minimal serve_batch/insert protocol (mirrors test_service.py's
+    stub) so HTTP-layer durability behavior is testable without jax."""
+
+    def __init__(self):
+        self.records = [np.arange(5)]
+
+    @property
+    def num_records(self):
+        return len(self.records)
+
+    def serve_batch(self, queries, thresholds, k, plan="auto"):
+        thresholds = np.broadcast_to(np.asarray(thresholds), (len(queries),))
+        out = []
+        for q, t in zip(queries, thresholds):
+            hits = (np.asarray([], np.int64) if math.isinf(t)
+                    else np.asarray(sorted(np.asarray(q).tolist())[:2]))
+            out.append({"hits": hits,
+                        "topk_ids": np.arange(k, dtype=np.int64),
+                        "topk_scores": np.linspace(1.0, 0.5, max(k, 1),
+                                                   dtype=np.float32)})
+        return out
+
+    def insert(self, records):
+        self.records.extend(records)
+
+    def save(self, path):
+        np.savez(path, n=self.num_records)
+
+
+# -- WAL unit behavior -------------------------------------------------------
+
+
+def test_wal_append_reopen_and_replay(tmp_path):
+    w = WriteAheadLog(str(tmp_path), fsync="batch")
+    assert w.last_seq == 0
+    w.append({"kind": "ingest", "records": [[1, 2]], "epoch": 0,
+              "idem": None})
+    w.append({"kind": "retire", "before": 3})
+    w.sync()
+    assert w.fsyncs_total == 1          # group commit: one fsync, two appends
+    w.close()
+    # Reopen continues the sequence in the same segment.
+    w2 = WriteAheadLog(str(tmp_path))
+    assert w2.last_seq == 2
+    w2.append({"kind": "ingest", "records": [[7]], "epoch": 1, "idem": "k"})
+    w2.sync()
+    entries = list(w2.entries())
+    assert [e["seq"] for e in entries] == [1, 2, 3]
+    assert [e["kind"] for e in entries] == ["ingest", "retire", "ingest"]
+    assert list(w2.entries(after_seq=2))[0]["idem"] == "k"
+    w2.close()
+
+
+def test_wal_fsync_policies(tmp_path):
+    w = WriteAheadLog(str(tmp_path / "always"), fsync="always")
+    w.append({"kind": "retire", "before": 1})
+    w.append({"kind": "retire", "before": 2})
+    assert w.fsyncs_total == 2          # one per append
+    w.close()
+    w = WriteAheadLog(str(tmp_path / "off"), fsync="off")
+    w.append({"kind": "retire", "before": 1})
+    w.sync()
+    assert w.fsyncs_total == 0          # page cache only
+    w.close()
+    with pytest.raises(ValueError, match="fsync policy"):
+        WriteAheadLog(str(tmp_path / "bad"), fsync="sometimes")
+
+
+def test_wal_torn_tail_tolerated_only_on_newest_segment(tmp_path):
+    w = WriteAheadLog(str(tmp_path), fsync="batch")
+    for i in range(3):
+        w.append({"kind": "retire", "before": i})
+    w.sync()
+    seg = w._segments[-1][0]
+    w.close()
+    # A torn final frame (half a record) is truncated on reopen.
+    with open(seg, "ab", buffering=0) as f:
+        f.write(encode_entry({"kind": "retire", "before": 9, "seq": 4})[:11])
+    w2 = WriteAheadLog(str(tmp_path))
+    assert w2.torn_tail_bytes > 0
+    assert [e["seq"] for e in w2.entries()] == [1, 2, 3]
+    # ...and appending after the truncate yields a clean decodable log.
+    w2.append({"kind": "retire", "before": 9})
+    w2.sync()
+    w2.close()
+    w3 = WriteAheadLog(str(tmp_path))
+    assert [e["seq"] for e in w3.entries()] == [1, 2, 3, 4]
+    assert w3.torn_tail_bytes == 0
+    w3.close()
+
+
+def test_wal_mid_log_corruption_refuses(tmp_path):
+    w = WriteAheadLog(str(tmp_path), fsync="batch")
+    w.append({"kind": "retire", "before": 1})
+    w.sync()
+    w.rotate()                          # seals segment 1, opens segment 2
+    w.append({"kind": "retire", "before": 2})
+    w.sync()
+    first_seg = w._segments[0][0]
+    w.close()
+    with open(first_seg, "r+b") as f:   # flip a payload byte: CRC breaks
+        f.seek(12)
+        b = f.read(1)
+        f.seek(12)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(WalCorruption, match="newest segment"):
+        WriteAheadLog(str(tmp_path))
+
+
+def test_wal_rotate_and_truncate_through(tmp_path):
+    w = WriteAheadLog(str(tmp_path), fsync="batch")
+    w.append({"kind": "retire", "before": 1})
+    w.rotate()
+    w.append({"kind": "retire", "before": 2})
+    w.rotate()
+    w.append({"kind": "retire", "before": 3})
+    w.sync()
+    assert w.segment_count == 3
+    dropped = w.truncate_through(2)     # first two segments fully covered
+    assert dropped == 2 and w.segment_count == 1
+    assert [e["seq"] for e in w.entries()] == [3]
+    w.close()
+
+
+def test_wal_segment_size_rotation(tmp_path):
+    w = WriteAheadLog(str(tmp_path), fsync="off", segment_bytes=64)
+    for i in range(6):
+        w.append({"kind": "retire", "before": i})
+    assert w.segment_count > 1          # size bound forced rotations
+    assert [e["seq"] for e in w.entries()] == list(range(1, 7))
+    w.close()
+
+
+def test_idempotency_cache_bounded_lru():
+    c = IdempotencyCache(capacity=2)
+    c.put("a", {"ingested": 1})
+    c.put("b", {"ingested": 2})
+    assert c.get("a") == {"ingested": 1}    # touch: 'a' becomes MRU
+    c.put("c", {"ingested": 3})             # evicts 'b'
+    assert c.get("b") is None and c.get("c") == {"ingested": 3}
+    c2 = IdempotencyCache(capacity=4)
+    c2.load(c.export())
+    assert c2.get("a") == {"ingested": 1} and len(c2) == 2
+
+
+# -- chaos kill-and-recover matrix -------------------------------------------
+
+# Every fault point from the harness, each as an in-process kill, plus a
+# torn-write variant at the write-shaped point. The acceptance bar: the
+# recovered index serves query/topk bit-identical to a never-crashed
+# reference, and no acknowledged ingest is lost.
+MATRIX = [(p, "crash") for p in chaos.FAULT_POINTS]
+MATRIX.append(("wal.append.write", "torn"))
+
+
+def _probe_parity(recovered, reference, queries):
+    got = recovered.serve_batch(queries, 0.3, 5)
+    want = reference.serve_batch(queries, 0.3, 5)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.sort(np.asarray(g["hits"])),
+                                      np.sort(np.asarray(w["hits"])))
+        np.testing.assert_array_equal(g["topk_ids"], w["topk_ids"])
+        np.testing.assert_array_equal(np.asarray(g["topk_scores"]),
+                                      np.asarray(w["topk_scores"]))
+
+
+@pytest.mark.parametrize("point,action", MATRIX,
+                         ids=[f"{p}-{a}" for p, a in MATRIX])
+def test_kill_and_recover_bit_identical(point, action, tmp_path):
+    base = make_records(0, 20)
+    batch_a = make_records(1, 4)        # committed before the fault arms
+    batch_b = make_records(2, 5)        # raced against the injected kill
+    data_dir = str(tmp_path / "data")
+
+    wm = build_wm(base)
+    dur = Durability(data_dir, fsync="batch")
+    srv = AsyncSketchServer(wm, durability=dur, max_batch=4, max_wait=0.001)
+    acked = 0
+    for r in batch_a:
+        p = srv.submit_ingest([r], epoch=0)
+        srv.step(force=True)
+        assert p.done.is_set() and p.error is None
+        acked += 1
+    ps = srv.submit_snapshot()
+    srv.step(force=True)
+    assert ps.error is None and ps.result["wal_seq"] == len(batch_a)
+
+    # Arm and run until the simulated kill unwinds out of the flush
+    # loop. wal.append.* points fire on the first batch_b ingest; the
+    # rotate/snapshot/truncate points fire during the closing snapshot.
+    monkey = chaos.ChaosMonkey().arm(point, action)
+    with chaos.installed(monkey):
+        try:
+            for r in batch_b:
+                p = srv.submit_ingest([r], epoch=0)
+                srv.step(force=True)
+                if p.done.is_set() and p.error is None:
+                    acked += 1
+            p2 = srv.submit_snapshot()
+            srv.step(force=True)
+            if p2.error is None:
+                pytest.fail(f"fault point {point} never fired")
+        except chaos.SimulatedCrash as e:
+            assert e.point == point
+    assert monkey.hits == [point]
+
+    # "Restart": fresh Durability over the same dir, exactly the launch
+    # recovery flow — newest valid snapshot, else the deterministic
+    # dataset build, then WAL-tail replay through normal ingest.
+    dur2 = Durability(data_dir, fsync="batch")
+    recovered, manifest = dur2.load_latest_index()
+    if recovered is None:
+        recovered = build_wm(base)
+    stats = dur2.replay_into(recovered)
+    assert stats["failed_entries"] == 0
+
+    applied = recovered.num_records - len(base)
+    assert applied >= acked, (
+        f"{point}: {acked} ingests acknowledged but only {applied} "
+        f"records survived recovery")
+
+    # Never-crashed reference: same deterministic build, the same
+    # surviving prefix applied through the same ingest path. (Durable
+    # entries beyond the last ack may legitimately survive — the write
+    # protocol promises acked ⊆ recovered ⊆ attempted, in order.)
+    attempted = batch_a + batch_b
+    assert applied <= len(attempted)
+    reference = build_wm(base)
+    for r in attempted[:applied]:
+        reference.insert([r], epoch=0)
+    queries = [base[0], base[7], batch_a[0], batch_b[0],
+               make_records(9, 1)[0]]
+    _probe_parity(recovered, reference, queries)
+
+
+def test_second_recovery_is_idempotent(tmp_path):
+    """Crashing after the snapshot rename but before WAL truncation must
+    not double-apply the covered entries on the *next* boot either."""
+    base = make_records(0, 10)
+    data_dir = str(tmp_path / "data")
+    wm = build_wm(base)
+    dur = Durability(data_dir, fsync="batch")
+    srv = AsyncSketchServer(wm, durability=dur, max_batch=4)
+    extra = make_records(3, 3)
+    for r in extra:
+        srv.submit_ingest([r], epoch=0)
+        srv.step(force=True)
+    with chaos.installed(chaos.ChaosMonkey().arm("snapshot.post_rename")):
+        srv.submit_snapshot()
+        with pytest.raises(chaos.SimulatedCrash):
+            srv.step(force=True)
+    for boot in range(2):               # recover twice; both must agree
+        d = Durability(data_dir)
+        idx, _ = d.load_latest_index()
+        assert idx is not None
+        d.replay_into(idx)
+        assert idx.num_records == len(base) + len(extra), f"boot {boot}"
+
+
+def test_invalid_snapshot_skipped_for_older_valid_one(tmp_path):
+    base = make_records(0, 10)
+    data_dir = str(tmp_path / "data")
+    wm = build_wm(base)
+    dur = Durability(data_dir, fsync="batch")
+    srv = AsyncSketchServer(wm, durability=dur, max_batch=4)
+    srv.submit_snapshot()
+    srv.step(force=True)
+    srv.submit_ingest([make_records(5, 1)[0]], epoch=0)
+    srv.step(force=True)
+    srv.submit_snapshot()
+    srv.step(force=True)
+    snaps = sorted(os.listdir(dur.snap_dir))
+    assert len(snaps) == 2
+    # Bit-rot the newest snapshot's manifest: boot must fall back to the
+    # older snapshot instead of refusing to serve at all.
+    newest = os.path.join(dur.snap_dir, snaps[-1], "snap_manifest.json")
+    with open(newest, "w") as f:
+        f.write('{"version": 1, "wal_seq"')    # torn mid-write
+    d2 = Durability(data_dir)
+    idx, manifest = d2.load_latest_index()
+    assert idx is not None and d2.invalid_snapshots_skipped == 1
+    assert d2.snap_seq == 0 and manifest["wal_seq"] == 0
+    assert idx.num_records == len(base)        # the older snapshot's state
+
+
+# -- read-only degradation over live HTTP ------------------------------------
+
+
+def test_disk_full_degrades_to_read_only(tmp_path):
+    dur = Durability(str(tmp_path / "d"), fsync="batch")
+    srv = AsyncSketchServer(StubIndex(), max_batch=4, max_wait=0.002,
+                            durability=dur)
+    monkey = chaos.ChaosMonkey().arm("wal.append.pre_write", "error",
+                                     times=-1)
+    with chaos.installed(monkey), ServiceHandle(ServiceApp(srv)) as h:
+        cli = ServiceClient(*h.address)
+        assert cli.readyz()["status"] == "ok"
+        with pytest.raises(ServiceError) as ei:
+            cli.ingest([[1, 2, 3]], stream=False)
+        assert ei.value.status == 503          # mutation refused
+        assert "read-only" in str(ei.value.body)
+        # Queries keep answering from the in-memory index.
+        np.testing.assert_array_equal(cli.query(np.arange(3), 0.5), [0, 1])
+        # Liveness stays up; readiness flips; metrics reflect the state.
+        hz = cli.healthz()
+        assert hz["status"] == "ok" and hz["writable"] is False
+        with pytest.raises(ServiceError) as ei:
+            cli.readyz()
+        assert ei.value.status == 503
+        metrics = parse_prometheus(cli.metrics_text())
+        assert metrics["service_read_only"] == 1
+        # Sticky: later mutations fail fast at admission, even with the
+        # fault no longer firing between calls.
+        with pytest.raises(ServiceError) as ei:
+            cli.ingest([[4, 5]], stream=False)
+        assert ei.value.status == 503
+        with pytest.raises(ServiceError) as ei:
+            cli.snapshot()
+        assert ei.value.status == 503
+        cli.close()
+    assert srv.read_only
+    assert "injected IO error" in srv.read_only_reason
+
+
+def test_fsync_failure_refuses_ack(tmp_path):
+    """A group-commit fsync failure must NOT acknowledge the batch: not
+    durable means not acked, and the server degrades to read-only."""
+    dur = Durability(str(tmp_path / "d"), fsync="batch")
+    srv = AsyncSketchServer(StubIndex(), durability=dur, max_batch=4)
+    before = srv.index.num_records
+    with chaos.installed(
+            chaos.ChaosMonkey().arm("wal.append.pre_fsync", "error")):
+        p = srv.submit_ingest([np.arange(4)])
+        srv.step(force=True)
+    assert isinstance(p.error, ReadOnly)
+    assert srv.read_only
+    assert srv.index.num_records == before     # never applied
+
+
+def test_slow_io_delay_injection(tmp_path):
+    dur = Durability(str(tmp_path / "d"), fsync="batch")
+    srv = AsyncSketchServer(StubIndex(), durability=dur, max_batch=4)
+    with chaos.installed(chaos.ChaosMonkey().arm(
+            "wal.append.pre_fsync", "delay", delay_s=0.08)):
+        t0 = time.monotonic()
+        p = srv.submit_ingest([np.arange(3)])
+        srv.step(force=True)
+        elapsed = time.monotonic() - t0
+    assert p.error is None and p.result == {"ingested": 1}
+    assert elapsed >= 0.08                     # latency visible, not fatal
+
+
+# -- idempotency keys --------------------------------------------------------
+
+
+def test_server_level_idempotent_dedupe():
+    srv = AsyncSketchServer(StubIndex(), max_batch=4)   # no data dir needed
+    p1 = srv.submit_ingest([np.arange(3), np.arange(4)], idem="job-1")
+    srv.step(force=True)
+    assert p1.result == {"ingested": 2}
+    n = srv.index.num_records
+    p2 = srv.submit_ingest([np.arange(3), np.arange(4)], idem="job-1")
+    srv.step(force=True)
+    assert p2.result == {"ingested": 2, "deduped": True}
+    assert srv.index.num_records == n          # nothing re-applied
+    assert srv.deduped_total == 1
+    # A different key applies normally.
+    p3 = srv.submit_ingest([np.arange(5)], idem="job-2")
+    srv.step(force=True)
+    assert p3.result == {"ingested": 1} and srv.index.num_records == n + 1
+
+
+def test_http_ingest_idempotency_key_roundtrip():
+    srv = AsyncSketchServer(StubIndex(), max_batch=4, max_wait=0.002)
+    with ServiceHandle(ServiceApp(srv, ingest_chunk=2)) as h:
+        cli = ServiceClient(*h.address)
+        recs = [np.arange(3), np.arange(4), np.arange(5)]
+        out1 = cli.ingest(recs, idempotency_key="batch-7")
+        assert out1 == {"ingested": 3, "chunks": 2, "deduped_chunks": 0}
+        n = srv.index.num_records
+        out2 = cli.ingest(recs, idempotency_key="batch-7")
+        assert out2 == {"ingested": 3, "chunks": 2, "deduped_chunks": 2}
+        assert srv.index.num_records == n      # full replay deduped
+        # Unkeyed requests keep the exact legacy response shape.
+        out3 = cli.ingest(recs)
+        assert out3 == {"ingested": 3, "chunks": 2}
+        assert srv.index.num_records == n + 3
+        metrics = parse_prometheus(cli.metrics_text())
+        assert metrics["service_ingest_deduped_total"] == 2
+        cli.close()
+
+
+def test_idempotency_window_survives_recovery(tmp_path):
+    """Keys committed through the WAL dedupe again after a crash —
+    the exactly-once contract a client retry relies on."""
+    base = make_records(0, 8)
+    data_dir = str(tmp_path / "data")
+    wm = build_wm(base)
+    dur = Durability(data_dir, fsync="batch")
+    srv = AsyncSketchServer(wm, durability=dur, max_batch=4)
+    rec = make_records(4, 1)[0]
+    p = srv.submit_ingest([rec], epoch=0, idem="once")
+    srv.step(force=True)
+    assert p.result == {"ingested": 1}
+    # Crash (no snapshot): recovery replays the WAL and rebuilds the
+    # idempotency window from the entries' keys.
+    dur2 = Durability(data_dir)
+    recovered = build_wm(base)
+    dur2.replay_into(recovered)
+    srv2 = AsyncSketchServer(recovered, durability=dur2, max_batch=4)
+    n = recovered.num_records
+    p2 = srv2.submit_ingest([rec], epoch=0, idem="once")
+    srv2.step(force=True)
+    assert p2.result.get("deduped") is True
+    assert recovered.num_records == n
+
+
+# -- admin snapshot over HTTP ------------------------------------------------
+
+
+def test_http_admin_snapshot_roundtrip(tmp_path):
+    base = make_records(0, 12)
+    wm = build_wm(base)
+    dur = Durability(str(tmp_path / "d"), fsync="batch")
+    srv = AsyncSketchServer(wm, durability=dur, max_batch=4, max_wait=0.002)
+    with ServiceHandle(ServiceApp(srv, auth_token="s3cret")) as h:
+        with pytest.raises(ServiceError) as ei:       # auth required
+            ServiceClient(*h.address).snapshot()
+        assert ei.value.status == 401
+        cli = ServiceClient(*h.address, token="s3cret")
+        cli.ingest([make_records(6, 1)[0]], epoch=0)
+        out = cli.snapshot()
+        assert out["fresh"] is True and out["wal_seq"] >= 1
+        metrics = parse_prometheus(cli.metrics_text())
+        assert metrics["snapshot_total"] == 1
+        assert metrics["wal_appends_total"] >= 1
+        assert metrics["snapshot_wal_seq"] == out["wal_seq"]
+        cli.close()
+    # The snapshot alone fully restores the served state.
+    d2 = Durability(str(tmp_path / "d"))
+    idx, manifest = d2.load_latest_index()
+    stats = d2.replay_into(idx)
+    assert stats["replayed_entries"] == 0      # WAL truncated by snapshot
+    assert idx.num_records == wm.num_records
+
+
+def test_http_admin_snapshot_without_data_dir_is_400():
+    srv = AsyncSketchServer(StubIndex(), max_batch=4, max_wait=0.002)
+    with ServiceHandle(ServiceApp(srv)) as h:
+        cli = ServiceClient(*h.address)
+        with pytest.raises(ServiceError) as ei:
+            cli.snapshot()
+        assert ei.value.status == 400
+        assert "data dir" in str(ei.value.body)
+        cli.close()
+
+
+# -- atomic WindowManager.save -----------------------------------------------
+
+
+def test_window_save_atomic_and_drops_stale_epochs(tmp_path):
+    from repro.sketchindex.windows import WindowManager
+
+    base = make_records(0, 10)
+    wm = build_wm(base)
+    wm.insert(make_records(1, 3), epoch=1)
+    target = str(tmp_path / "win")
+    wm.save(target)
+    names = sorted(os.listdir(target))
+    assert "epoch_00000000.npz" in names and "epoch_00000001.npz" in names
+    assert not os.path.exists(target + ".tmp")
+    assert not os.path.exists(target + ".old")
+    # Retire epoch 0, save over the same dir: the stale epoch file from
+    # the first save must not survive the swap.
+    wm.retire(before=1)
+    wm.save(target)
+    names = sorted(os.listdir(target))
+    assert "epoch_00000000.npz" not in names
+    assert "epoch_00000001.npz" in names
+    loaded = WindowManager.load(target)
+    assert loaded.num_records == wm.num_records
+    _probe_parity(loaded, wm, [base[0], make_records(8, 1)[0]])
+
+
+def test_window_save_survives_stale_tmp_and_keeps_old_on_crash(tmp_path):
+    base = make_records(0, 8)
+    wm = build_wm(base)
+    target = str(tmp_path / "win")
+    # Garbage from a previously crashed save must not break the next one.
+    os.makedirs(target + ".tmp")
+    with open(os.path.join(target + ".tmp", "junk"), "w") as f:
+        f.write("leftover")
+    wm.save(target)
+    assert not os.path.exists(target + ".tmp")
+    with open(os.path.join(target, "window_manifest.json")) as f:
+        assert json.load(f)["engine"] == "gbkmv"
+
+
+# -- CorruptIndexError -------------------------------------------------------
+
+
+def test_load_index_truncated_npz_raises_corrupt(tmp_path):
+    base = make_records(0, 8)
+    idx = api.build("gbkmv", base, BUDGET, backend="numpy")
+    path = str(tmp_path / "idx.npz")
+    idx.save(path)
+    assert api.load_index(path).num_records == len(base)   # sanity
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)                              # torn download
+    with pytest.raises(api.CorruptIndexError) as ei:
+        api.load_index(path)
+    assert path in str(ei.value)
+    assert isinstance(ei.value, ValueError)    # old except-clauses still work
+
+
+def test_load_index_wrong_file_and_missing_key(tmp_path):
+    garbage = str(tmp_path / "not_an_index.npz")
+    with open(garbage, "wb") as f:
+        f.write(b"this is not a zip file at all")
+    with pytest.raises(api.CorruptIndexError, match="not_an_index"):
+        api.load_index(garbage)
+    no_engine = str(tmp_path / "no_engine.npz")
+    np.savez(no_engine, data=np.arange(3))
+    with pytest.raises(api.CorruptIndexError, match="engine"):
+        api.load_index(no_engine)
+    with pytest.raises(FileNotFoundError):     # absence is NOT corruption
+        api.load_index(str(tmp_path / "nope.npz"))
+
+
+def test_load_index_payload_missing_arrays(tmp_path):
+    path = str(tmp_path / "partial.npz")
+    np.savez(path, engine="gbkmv")             # right header, no payload
+    with pytest.raises(api.CorruptIndexError, match="partial"):
+        api.load_index(path)
+
+
+# -- client retry contract ---------------------------------------------------
+
+
+class _FakeResp:
+    def __init__(self, status, body=b"{}", headers=()):
+        self.status, self._body, self._headers = status, body, headers
+
+    def read(self):
+        return self._body
+
+    def getheaders(self):
+        return list(self._headers)
+
+
+class _ScriptedConn:
+    """One scripted keep-alive connection: each element of ``script`` is
+    an Exception to raise at request() or a _FakeResp to return."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.requests = []
+
+    def request(self, method, path, body=None, headers=None,
+                encode_chunked=False):
+        if body is not None and not isinstance(body, (bytes, bytearray)):
+            body = b"".join(body)      # force generator consumption
+        self.requests.append((method, path, body))
+        step = self.script[0]
+        if isinstance(step, Exception):
+            self.script.pop(0)
+            raise step
+
+    def getresponse(self):
+        return self.script.pop(0)
+
+    def close(self):
+        pass
+
+
+def _scripted_client(script, **kw):
+    cli = ServiceClient("127.0.0.1", 1, **kw)
+    conn = _ScriptedConn(script)
+    cli._connection = lambda: conn
+    return cli, conn
+
+
+def test_client_does_not_replay_plain_post_on_stale_connection():
+    # The server may have applied the POST before the socket died —
+    # replaying it would double-ingest. The old client retried here.
+    cli, conn = _scripted_client(
+        [ConnectionResetError("stale"), _FakeResp(200)])
+    with pytest.raises(ConnectionResetError):
+        cli.request("POST", "/ingest", b"{}")
+    assert len(conn.requests) == 1             # exactly one attempt
+
+
+def test_client_replays_idempotent_requests_on_stale_connection():
+    cli, conn = _scripted_client(
+        [ConnectionResetError("stale"), _FakeResp(200, b'{"ok": 1}')])
+    status, raw, _ = cli.request("GET", "/healthz")
+    assert status == 200 and len(conn.requests) == 2
+    # POST-shaped reads opt in explicitly (the /query path).
+    cli2, conn2 = _scripted_client(
+        [ConnectionResetError("stale"), _FakeResp(200, b'{"hits": [1]}')])
+    np.testing.assert_array_equal(cli2.query(np.arange(2), 0.5), [1])
+    assert len(conn2.requests) == 2
+
+
+def test_client_backoff_honors_retry_after(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr("repro.service.client.time.sleep", sleeps.append)
+    cli, conn = _scripted_client(
+        [_FakeResp(429, b'{"error": "busy"}', [("Retry-After", "0.2")]),
+         _FakeResp(200, b'{"hits": []}')],
+        retries=2, backoff_s=0.01, jitter=lambda: 0.0)
+    cli.query(np.arange(2), 0.5)
+    assert len(sleeps) == 1
+    assert sleeps[0] >= 0.2                    # never shorter than the hint
+    # Exhausted retries surface the 429 with its hint intact.
+    cli2, _ = _scripted_client(
+        [_FakeResp(429, b'{}', [("Retry-After", "0.5")])] * 3,
+        retries=2, backoff_s=0.01, jitter=lambda: 0.0)
+    with pytest.raises(ServiceError) as ei:
+        cli2.query(np.arange(2), 0.5)
+    assert ei.value.status == 429 and ei.value.retry_after == 0.5
+    assert len(sleeps) == 3
+
+
+def test_client_default_is_fail_fast():
+    cli, _ = _scripted_client([_FakeResp(429, b'{}', [("Retry-After", "9")])])
+    with pytest.raises(ServiceError) as ei:    # retries=0: no sleep, no loop
+        cli.query(np.arange(2), 0.5)
+    assert ei.value.status == 429
+
+
+def test_client_keyed_ingest_retries_with_rebuilt_stream():
+    # A keyed streamed ingest reconnects and REBUILDS the generator, so
+    # the retry sends the full NDJSON body again from the start.
+    cli, conn = _scripted_client(
+        [ConnectionResetError("stale"),
+         _FakeResp(200, b'{"ingested": 2, "chunks": 1, '
+                        b'"deduped_chunks": 0}')],
+        retries=1, backoff_s=0.0, jitter=lambda: 0.0)
+    out = cli.ingest([np.arange(2), np.arange(3)], idempotency_key="k1")
+    assert out["ingested"] == 2
+    assert len(conn.requests) == 2
+    assert conn.requests[0][2] == conn.requests[1][2] != b""
+    # Without a key, the same drop propagates (no silent double-apply).
+    cli2, conn2 = _scripted_client(
+        [ConnectionResetError("stale"), _FakeResp(200)], retries=1)
+    with pytest.raises(ConnectionResetError):
+        cli2.ingest([np.arange(2)])
+    assert len(conn2.requests) == 1
